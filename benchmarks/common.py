@@ -1,0 +1,72 @@
+"""Shared benchmark infrastructure: trained-field cache + timers.
+
+CPU wall-clock here is a *relative* signal (TPU is the compile target);
+paper-claim benchmarks therefore report algorithmic counters (occupancy
+accesses, processed points, bytes) alongside time.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import train as nerf_train
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "cache")
+
+BENCH_CFG = NeRFConfig(grid_res=48, occ_res=48, cube_size=4, max_cubes=1024,
+                       r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                       max_samples_per_ray=128, train_rays=1024)
+
+QUICK_SCENES = ("lego", "mic", "chair", "materials")
+ALL_SCENES = ("chair", "drums", "ficus", "hotdog", "lego", "materials",
+              "mic", "ship")
+
+
+def get_trained(scene: str, steps: int = 250, image_hw: int = 56):
+    """Train (or load cached) small field for `scene`."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"{scene}_{steps}_{image_hw}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            params, cubes_data = pickle.load(f)
+        params = jax.tree.map(jax.numpy.asarray, params)
+        from repro.core.occupancy import CubeSet
+        cubes = CubeSet(jax.numpy.asarray(cubes_data[0]),
+                        jax.numpy.asarray(cubes_data[1]), cubes_data[2],
+                        cubes_data[3], jax.numpy.asarray(cubes_data[4]))
+        return BENCH_CFG, params, cubes
+    res = nerf_train.train_nerf(BENCH_CFG, scene, steps=steps, n_views=8,
+                                image_hw=image_hw, log_every=10_000,
+                                sigma_thresh=0.5,   # thin scenes (mic) need
+                                verbose=False)      # a low cube threshold
+    with open(path, "wb") as f:
+        pickle.dump((jax.tree.map(np.asarray, res.params),
+                     (np.asarray(res.cubes.centers),
+                      np.asarray(res.cubes.valid), res.cubes.count,
+                      res.cubes.radius, np.asarray(res.cubes.occ))), f)
+    return BENCH_CFG, res.params, res.cubes
+
+
+def timeit(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall time in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)

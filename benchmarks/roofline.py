@@ -1,0 +1,60 @@
+"""Roofline reporter: reads experiments/dryrun/*.json (written by
+launch/dryrun.py) and prints the per-(arch x shape x mesh) three-term table,
+dominant bottleneck, MODEL_FLOPS ratio, and the hillclimb-cell selection."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh="pod"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def main():
+    cells = load_cells("pod")
+    if not cells:
+        row("roofline_missing", 0.0,
+            "run: python -m repro.launch.dryrun --all")
+        return
+    worst = None
+    most_coll = None
+    for d in cells:
+        key = f"roofline_{d['arch']}_{d['shape']}"
+        if d["status"] == "skip":
+            row(key, 0.0, f"SKIP:{d['skip_reason'][:40]}")
+            continue
+        if d["status"] != "ok":
+            row(key, 0.0, f"STATUS={d['status']}")
+            continue
+        r = d["roofline"]
+        peak = d.get("memory_analysis", {}).get("peak_bytes", 0) / 1e9
+        useful = r["useful_flops_ratio"]
+        row(key, r["bound_s"] * 1e6,
+            f"dom={r['dominant']};compute_s={r['compute_s']:.3g};"
+            f"memory_s={r['memory_s']:.3g};collective_s={r['collective_s']:.3g};"
+            f"useful_ratio={useful:.2f};peak_gb={peak:.1f}")
+        frac = r["compute_s"] / max(r["bound_s"], 1e-12)
+        if worst is None or frac < worst[1]:
+            worst = (key, frac)
+        cf = r["collective_s"] / max(r["bound_s"], 1e-12)
+        if most_coll is None or cf > most_coll[1]:
+            most_coll = (key, cf)
+    row("roofline_worst_fraction_cell", 0.0, f"{worst[0]};frac={worst[1]:.4f}")
+    row("roofline_most_collective_cell", 0.0,
+        f"{most_coll[0]};coll_share={most_coll[1]:.3f}")
+    n_multi = len([d for d in load_cells("multipod") if d["status"] == "ok"])
+    row("roofline_multipod_cells_ok", 0.0, f"n={n_multi}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. CPU wall-clock is a relative
+signal; paper-mechanism counters and dry-run roofline terms carry the
+absolute claims (see EXPERIMENTS.md).
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all 8 scenes (slow); default: 4-scene quick mode")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (breakdown, encoding_table, psnr_table2, roofline,
+                            sparsity_fig5, speedup_fig14)
+    from benchmarks.common import ALL_SCENES, QUICK_SCENES
+
+    scenes = ALL_SCENES if args.full else QUICK_SCENES
+    suites = [
+        ("fig4_fig8_breakdown", lambda: breakdown.main(scenes[:2])),
+        ("fig5_sparsity", lambda: sparsity_fig5.main(scenes)),
+        ("tab2_psnr", lambda: psnr_table2.main(scenes)),
+        ("fig14_speedup", lambda: speedup_fig14.main(scenes[:2])),
+        ("enc_storage", lambda: encoding_table.main(scenes)),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"suite_{name},{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"suite_{name},0,FAILED", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

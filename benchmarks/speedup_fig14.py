@@ -1,0 +1,72 @@
+"""Paper Fig. 14: relative speedup of the RT-NeRF pipeline.
+
+We cannot reproduce ASIC-vs-GPU wall clocks; we reproduce the MECHANISM
+ratios the speedups are built from, on identical hardware:
+  * occupancy-structure accesses (paper: ~100x fewer)       [algorithmic]
+  * points processed in Step 2-2 (sparsity + early-term)    [algorithmic]
+  * CPU wall time per frame for both pipelines              [relative]
+plus the sparse-kernel decode throughput vs dense matmul on the factor
+matrices (the accelerator's Step 2-2 advantage, interpret-mode Pallas).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import get_trained, row, timeit
+from repro.core import rendering, sparse
+from repro.core import train as nerf_train
+from repro.data import rays as rays_lib
+
+RES = 48
+
+
+def main(scenes=("lego", "mic")):
+    for scene in scenes:
+        cfg, params, cubes = get_trained(scene)
+        sc = rays_lib.make_scene(scene)
+        cam = rays_lib.make_cameras(9, RES, RES)[4]
+        gt = rays_lib.render_gt(sc, cam)
+
+        t_u = timeit(lambda: nerf_train.eval_view(
+            params, cfg, cubes, cam, gt, pipeline="uniform")[2], reps=2)
+        t_r = timeit(lambda: nerf_train.eval_view(
+            params, cfg, cubes, cam, gt, pipeline="rtnerf", chunk=8)[2],
+            reps=2)
+        _, s_u, _ = nerf_train.eval_view(params, cfg, cubes, cam, gt,
+                                         pipeline="uniform")
+        _, s_r, _ = nerf_train.eval_view(params, cfg, cubes, cam, gt,
+                                         pipeline="rtnerf", chunk=8)
+        ratio = s_u["occ_accesses"] / max(s_r["occ_accesses"], 1.0)
+        row(f"fig14_{scene}_occ_access_ratio", 0.0,
+            f"uniform={s_u['occ_accesses']:.0f};rtnerf={s_r['occ_accesses']:.0f};"
+            f"ratio={ratio:.0f}x")
+        row(f"fig14_{scene}_processed_points", 0.0,
+            f"uniform={s_u['processed_samples']:.0f};"
+            f"rtnerf={s_r['processed_samples']:.0f}")
+        row(f"fig14_{scene}_frame_walltime", t_r,
+            f"uniform_us={t_u:.0f};cpu_ratio={t_u / t_r:.2f}x")
+
+    # sparse decode vs dense matmul on a pruned factor (Step 2-2 engine)
+    cfg, params, cubes = get_trained(scenes[0])
+    w = np.asarray(params["app_planes"])[0].reshape(
+        params["app_planes"].shape[1], -1)
+    s = sparse.sparsity(w)
+    enc = sparse.encode_bitmap(w)
+    x = jnp.asarray(np.random.RandomState(0).randn(w.shape[1], 8),
+                    jnp.float32)
+    from repro.kernels import ops
+    t_dense = timeit(jax.jit(lambda a, b: a @ b), jnp.asarray(w), x)
+    t_ref = timeit(lambda: ops.bitmap_matmul(enc.words, enc.rowptr,
+                                             enc.values, x,
+                                             cols=w.shape[1], force="ref"))
+    dense_b = sparse.storage_bytes(w.shape, enc.nnz, "dense")
+    bm_b = sparse.storage_bytes(w.shape, enc.nnz, "bitmap")
+    row("fig14_bitmap_decode_matmul", t_ref,
+        f"dense_us={t_dense:.0f};sparsity={s:.2f};"
+        f"hbm_bytes_ratio={dense_b / bm_b:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

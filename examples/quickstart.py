@@ -1,0 +1,40 @@
+"""Quickstart: the RT-NeRF pipeline end to end in ~2 minutes on CPU.
+
+Trains a tiny TensoRF field on a procedural scene, builds the occupancy
+cube set, renders a novel view through BOTH pipelines (uniform baseline vs
+the paper's efficient pipeline), and prints the paper's headline mechanism
+numbers (occupancy-access reduction, processed points, PSNR parity).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import train as nerf_train
+from repro.data import rays as rays_lib
+
+cfg = NeRFConfig(grid_res=40, occ_res=40, cube_size=4, max_cubes=768,
+                 r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                 max_samples_per_ray=112, train_rays=1024)
+
+print("== training TensoRF field on procedural 'lego' ==")
+t0 = time.time()
+res = nerf_train.train_nerf(cfg, "lego", steps=250, n_views=8, image_hw=56,
+                            log_every=125)
+print(f"   {time.time() - t0:.0f}s; non-zero cubes: {res.cubes.count}")
+
+scene = rays_lib.make_scene("lego")
+cam = rays_lib.make_cameras(7, 56, 56)[2]
+gt = rays_lib.render_gt(scene, cam)
+
+print("== rendering a novel view ==")
+for pipeline, kw in (("uniform", {}), ("rtnerf", {"chunk": 8})):
+    t0 = time.time()
+    psnr, stats, img = nerf_train.eval_view(res.params, cfg, res.cubes, cam,
+                                            gt, pipeline=pipeline, **kw)
+    print(f"  {pipeline:8s} psnr={psnr:5.2f}  "
+          f"occ_accesses={stats['occ_accesses']:9.0f}  "
+          f"processed={stats['processed_samples']:9.0f}  "
+          f"({time.time() - t0:.1f}s)")
+print("RT-NeRF pipeline: same quality, orders-of-magnitude fewer "
+      "occupancy-structure accesses (paper Sec. 3.1/3.2).")

@@ -1,0 +1,25 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Diagnostic: top trip-weighted collectives in the deepseek train cell."""
+import sys
+
+from repro.configs.base import LM_SHAPES
+from repro.configs.registry import get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+from repro.launch import hlo_parse
+import dataclasses
+
+overrides = {}
+for kv in sys.argv[1:]:
+    k, v = kv.split("=", 1)
+    overrides[k] = (v == "True") if v in ("True", "False") else (
+        int(v) if v.isdigit() else v)
+
+cfg = dataclasses.replace(get_arch("deepseek-v3-671b"), **overrides)
+mesh = make_production_mesh(multi_pod=False)
+lowered, info = lower_cell(cfg, LM_SHAPES["train_4k"], mesh)
+compiled = lowered.compile()
+txt = compiled.as_text()
+for wire, mult, kind, shape, name in hlo_parse.top_collectives(txt, 25):
+    print(f"{wire:12.3e}  x{mult:5.0f}  {kind:18s} {shape:45s} {name}")

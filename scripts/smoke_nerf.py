@@ -1,0 +1,33 @@
+"""Dev driver: train a tiny NeRF on one scene, compare pipelines."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import train as nerf_train
+from repro.core import rendering
+from repro.data import rays as rays_lib
+
+cfg = NeRFConfig(grid_res=48, occ_res=48, cube_size=4, max_cubes=1024,
+                 r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                 max_samples_per_ray=128, train_rays=1024)
+
+t0 = time.time()
+res = nerf_train.train_nerf(cfg, "lego", steps=300, n_views=10, image_hw=64,
+                            log_every=100)
+print(f"train time {time.time()-t0:.1f}s  cubes={res.cubes.count}")
+
+scene = rays_lib.make_scene("lego")
+cam = rays_lib.make_cameras(7, 64, 64)[3]
+gt = rays_lib.render_gt(scene, cam)
+
+for pl, kw in [("uniform", {}), ("rtnerf", {"order_mode": "octant"}),
+               ("rtnerf", {"order_mode": "distance"})]:
+    t0 = time.time()
+    p, stats, img = nerf_train.eval_view(res.params, cfg, res.cubes, cam, gt,
+                                         pipeline=pl, **kw)
+    print(f"{pl:8s} {kw}: psnr={p:.2f} dt={time.time()-t0:.1f}s "
+          f"occ_accesses={stats['occ_accesses']:.0f} "
+          f"processed={stats['processed_samples']:.0f}")

@@ -1,0 +1,29 @@
+"""Dev driver: box vs ball intersection PSNR comparison (uses cached train)."""
+import time
+
+import jax.numpy as jnp
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import train as nerf_train
+from repro.data import rays as rays_lib
+
+cfg = NeRFConfig(grid_res=48, occ_res=48, cube_size=4, max_cubes=1024,
+                 r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                 max_samples_per_ray=128, train_rays=1024)
+
+res = nerf_train.train_nerf(cfg, "lego", steps=300, n_views=10, image_hw=64,
+                            log_every=150)
+print(f"cubes={res.cubes.count}")
+scene = rays_lib.make_scene("lego")
+cam = rays_lib.make_cameras(7, 64, 64)[3]
+gt = rays_lib.render_gt(scene, cam)
+
+for pl, kw in [("uniform", {}),
+               ("rtnerf", {"intersect": "box"}),
+               ("rtnerf", {"intersect": "ball"}),
+               ("rtnerf", {"intersect": "box", "chunk": 8})]:
+    t0 = time.time()
+    p, stats, img = nerf_train.eval_view(res.params, cfg, res.cubes, cam, gt,
+                                         pipeline=pl, **kw)
+    print(f"{pl:8s} {kw}: psnr={p:.2f} dt={time.time()-t0:.1f}s "
+          f"processed={stats['processed_samples']:.0f}")

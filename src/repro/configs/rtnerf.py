@@ -1,0 +1,79 @@
+"""RT-NeRF's own workload config (the paper's contribution).
+
+A TensoRF VM-decomposed radiance field + the RT-NeRF efficient rendering
+pipeline. Shapes mirror the paper's evaluation: 800x800 novel-view rendering
+on Synthetic-NeRF-like scenes, plus the ray-batch training shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class NeRFConfig:
+    name: str = "rtnerf"
+    family: str = "nerf"
+    # --- TensoRF VM decomposition ---
+    grid_res: int = 160              # embedding-grid resolution per axis
+    r_sigma: int = 16                # density components R (Eq. 2)
+    r_color: int = 48                # appearance components
+    app_dim: int = 27                # appearance feature dim fed to the MLP
+    mlp_hidden: int = 128            # view-dependent color MLP
+    pe_view: int = 2                 # positional-encoding bands for direction
+    pe_feat: int = 2                 # positional-encoding bands for features
+    # --- occupancy / RT-NeRF pipeline ---
+    occ_res: int = 160               # binary occupancy grid resolution
+    cube_size: int = 4               # voxels per occupancy cube (A1 unit)
+    max_cubes: int = 8192            # static bound on non-zero cubes
+    step_size: float = 0.5           # march step in voxel units
+    max_samples_per_ray: int = 512   # static bound (uniform baseline N)
+    term_eps: float = 1e-4           # early-ray-termination threshold on T
+    near: float = 2.0
+    far: float = 6.0
+    scene_bound: float = 1.5         # AABB half-extent
+    # --- rendering / training ---
+    image_hw: int = 800
+    train_rays: int = 4096           # rays per training batch
+    sigma_sparsity_l1: float = 5e-5  # L1 that induces the factor sparsity H1 exploits
+    tv_weight: float = 1e-3
+    lr_grid: float = 2e-2
+    lr_mlp: float = 1e-3
+    # --- sparse encoding (H1) ---
+    sparse_threshold: float = 0.80   # bitmap (<) vs COO (>=) switch
+    dtype: str = "float32"
+
+    @property
+    def cube_grid_res(self) -> int:
+        return self.occ_res // self.cube_size
+
+    def cube_world(self) -> float:
+        return 2.0 * self.scene_bound * self.cube_size / self.occ_res
+
+    def cube_ball_radius(self) -> float:
+        """Step 2-1-a: bounding-ball radius of one occupancy cube."""
+        return self.cube_world() * (3.0 ** 0.5) / 2.0
+
+    def param_count(self) -> int:
+        g, rs, rc = self.grid_res, self.r_sigma, self.r_color
+        planes = 3 * (rs + rc) * g * g
+        lines = 3 * (rs + rc) * g
+        basis = 3 * rc * self.app_dim
+        in_mlp = self.app_dim + 3 + 2 * 3 * self.pe_view + 2 * self.app_dim * self.pe_feat
+        mlp = in_mlp * self.mlp_hidden + self.mlp_hidden * self.mlp_hidden + self.mlp_hidden * 3
+        return planes + lines + basis + mlp
+
+
+CONFIG = NeRFConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class NeRFShape:
+    name: str
+    n_rays: int                      # rays per step (render: H*W, train: batch)
+    kind: str                        # train | render
+
+
+NERF_SHAPES = {
+    "train_rays":  NeRFShape("train_rays", 4096, "train"),
+    "render_800":  NeRFShape("render_800", 800 * 800, "render"),
+}

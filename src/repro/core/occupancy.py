@@ -1,0 +1,80 @@
+"""Binary occupancy grid + non-zero cube extraction (paper Step 2-1 inputs).
+
+The cube list is computed host-side at occupancy-update time (a rare event,
+analogous to the paper's offline encoding step) and padded to a static
+`max_cubes` so the rendering pipeline stays jit-compatible.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import tensorf
+
+
+class CubeSet(NamedTuple):
+    """Static-shape set of non-zero occupancy cubes."""
+    centers: jax.Array      # (max_cubes, 3) world-space centers
+    valid: jax.Array        # (max_cubes,) bool
+    count: int              # python int — true number of cubes
+    radius: float           # bounding-ball radius (Step 2-1-a)
+    occ: jax.Array          # (G,G,G) bool — for baseline queries
+
+
+def grid_coords(cfg: NeRFConfig) -> jax.Array:
+    g = cfg.occ_res
+    xs = (jnp.arange(g) + 0.5) / g * 2.0 - 1.0      # (-1,1) cell centers
+    return xs * cfg.scene_bound
+
+
+def build_occupancy(params, cfg: NeRFConfig, sigma_thresh: float = 5.0,
+                    chunk: int = 65536) -> jax.Array:
+    """Evaluate sigma on the occupancy grid -> (G,G,G) bool."""
+    g = cfg.occ_res
+    xs = grid_coords(cfg)
+    pts = jnp.stack(jnp.meshgrid(xs, xs, xs, indexing="ij"), axis=-1
+                    ).reshape(-1, 3)
+    outs = []
+    eval_j = jax.jit(lambda p, q: tensorf.eval_sigma(p, cfg, q))
+    for i in range(0, pts.shape[0], chunk):
+        outs.append(eval_j(params, pts[i:i + chunk]))
+    sig = jnp.concatenate(outs).reshape(g, g, g)
+    return sig > sigma_thresh
+
+
+def extract_cubes(occ: jax.Array, cfg: NeRFConfig) -> CubeSet:
+    """Max-pool occupancy into cubes; list non-zero cube centers (host-side)."""
+    g, cs = cfg.occ_res, cfg.cube_size
+    gc = g // cs
+    occ_np = np.asarray(occ).reshape(gc, cs, gc, cs, gc, cs)
+    cube_occ = occ_np.any(axis=(1, 3, 5))           # (gc,gc,gc)
+    idx = np.argwhere(cube_occ)                     # (n, 3)
+    n = idx.shape[0]
+    if n > cfg.max_cubes:
+        # keep densest cubes (by voxel count) under the static bound
+        counts = occ_np.sum(axis=(1, 3, 5))[tuple(idx.T)]
+        keep = np.argsort(-counts)[: cfg.max_cubes]
+        idx = idx[keep]
+        n = cfg.max_cubes
+    pad = np.zeros((cfg.max_cubes, 3), np.int32)
+    pad[:n] = idx
+    cube_world = 2.0 * cfg.scene_bound * cs / g     # cube edge length
+    centers = (pad + 0.5) * cube_world - cfg.scene_bound
+    valid = np.zeros(cfg.max_cubes, bool)
+    valid[:n] = True
+    radius = cube_world * np.sqrt(3.0) / 2.0        # Step 2-1-a: ball
+    return CubeSet(jnp.asarray(centers, jnp.float32), jnp.asarray(valid),
+                   int(n), float(radius), occ)
+
+
+def occupancy_query(occ: jax.Array, cfg: NeRFConfig, pts: jax.Array):
+    """Baseline Step 2-1: quantize points, look up the binary grid."""
+    g = cfg.occ_res
+    ijk = jnp.clip(((pts / cfg.scene_bound * 0.5 + 0.5) * g).astype(jnp.int32),
+                   0, g - 1)
+    inside = jnp.all(jnp.abs(pts) <= cfg.scene_bound, axis=-1)
+    return occ[ijk[..., 0], ijk[..., 1], ijk[..., 2]] & inside

@@ -1,0 +1,122 @@
+"""Volume rendering (paper Eq. 1) + the uniform-sampling baseline pipeline.
+
+The baseline is TensoRF's rendering path (paper Fig. 3): uniform samples
+along every ray, occupancy-grid query per sample, feature computation for
+surviving samples, early-ray-termination on accumulated transmittance.
+RT-NeRF's pipeline (core/pipeline.py) replaces Steps 2-1/2-2; Eq. 1
+integration is shared.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import occupancy as occ_lib
+from repro.core import tensorf
+
+
+class Camera(NamedTuple):
+    c2w: jax.Array        # (3,3) rotation, columns = camera axes in world
+    origin: jax.Array     # (3,)
+    focal: float
+    h: int
+    w: int
+
+
+def look_at_camera(origin, target, focal, h, w) -> Camera:
+    origin = jnp.asarray(origin, jnp.float32)
+    target = jnp.asarray(target, jnp.float32)
+    fwd = target - origin
+    fwd = fwd / jnp.linalg.norm(fwd)
+    up0 = jnp.array([0.0, 0.0, 1.0])
+    right = jnp.cross(fwd, up0)
+    right = right / jnp.maximum(jnp.linalg.norm(right), 1e-8)
+    up = jnp.cross(right, fwd)
+    # camera axes: x=right, y=up, z=-fwd (OpenGL-style)
+    c2w = jnp.stack([right, up, -fwd], axis=1)
+    return Camera(c2w, origin, float(focal), int(h), int(w))
+
+
+def pixel_rays(cam: Camera, px: jax.Array, py: jax.Array):
+    """px,py (N,) pixel coords -> unit ray dirs (N,3) in world."""
+    x = (px + 0.5 - cam.w / 2.0) / cam.focal
+    y = -(py + 0.5 - cam.h / 2.0) / cam.focal
+    d_cam = jnp.stack([x, y, -jnp.ones_like(x)], axis=-1)
+    d = d_cam @ cam.c2w.T
+    return d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+
+
+def camera_rays(cam: Camera):
+    """All H*W rays, row-major."""
+    py, px = jnp.meshgrid(jnp.arange(cam.h, dtype=jnp.float32),
+                          jnp.arange(cam.w, dtype=jnp.float32), indexing="ij")
+    d = pixel_rays(cam, px.reshape(-1), py.reshape(-1))
+    o = jnp.broadcast_to(cam.origin, d.shape)
+    return o, d
+
+
+def step_world(cfg: NeRFConfig) -> float:
+    return cfg.step_size * (2.0 * cfg.scene_bound / cfg.occ_res)
+
+
+def composite(sigma, rgb, mask, delta, white_bg=True):
+    """Eq. 1 along axis=-1 of samples. sigma (R,N), rgb (R,N,3), mask (R,N)."""
+    tau = jnp.where(mask, sigma * delta, 0.0)
+    cum = jnp.cumsum(tau, axis=-1)
+    t_k = jnp.exp(-(cum - tau))                  # transmittance before k
+    alpha = 1.0 - jnp.exp(-tau)
+    w = t_k * alpha
+    color = jnp.sum(w[..., None] * rgb, axis=-2)
+    t_final = jnp.exp(-cum[..., -1])
+    if white_bg:
+        color = color + t_final[..., None]
+    return color, t_final, w
+
+
+def render_uniform(params, cfg: NeRFConfig, cubes: occ_lib.CubeSet,
+                   rays_o, rays_d, *, use_occupancy=True,
+                   white_bg=True) -> Tuple[jax.Array, Dict]:
+    """Baseline pipeline: uniform samples + occupancy queries + early term.
+
+    rays_o/rays_d (R,3). Returns (rgb (R,3), stats).
+    """
+    n = cfg.max_samples_per_ray
+    delta = step_world(cfg)
+    t = cfg.near + (jnp.arange(n) + 0.5) * delta           # (N,)
+    t = jnp.broadcast_to(t, (rays_o.shape[0], n))
+    pts = rays_o[:, None] + rays_d[:, None] * t[..., None]  # (R,N,3)
+
+    if use_occupancy:
+        occ_hit = occ_lib.occupancy_query(cubes.occ, cfg, pts)
+    else:
+        occ_hit = jnp.all(jnp.abs(pts) <= cfg.scene_bound, axis=-1)
+    flat = pts.reshape(-1, 3)
+    sigma = tensorf.eval_sigma(params, cfg, flat).reshape(t.shape)
+    sigma = jnp.where(occ_hit, sigma, 0.0)
+
+    # early termination mask (T computed from sigma so far)
+    tau = sigma * delta
+    cum = jnp.cumsum(tau, axis=-1)
+    t_before = jnp.exp(-(cum - tau))
+    visible = occ_hit & (t_before > cfg.term_eps)
+
+    feats = tensorf.eval_app_features(params, cfg, flat)
+    dirs = jnp.broadcast_to(rays_d[:, None], pts.shape).reshape(-1, 3)
+    rgb = tensorf.eval_color(params, cfg, feats, dirs).reshape(*t.shape, 3)
+
+    color, t_final, _ = composite(sigma, rgb, visible, delta, white_bg)
+    stats = {
+        "occ_accesses": jnp.asarray(occ_hit.size, jnp.float32),
+        "candidate_samples": jnp.asarray(occ_hit.size, jnp.float32),
+        "preexisting_samples": jnp.sum(occ_hit.astype(jnp.float32)),
+        "processed_samples": jnp.sum(visible.astype(jnp.float32)),
+    }
+    return color, stats
+
+
+def psnr(img, ref) -> jax.Array:
+    mse = jnp.mean(jnp.square(img - ref))
+    return -10.0 * jnp.log10(jnp.maximum(mse, 1e-10))

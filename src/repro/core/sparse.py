@@ -1,0 +1,168 @@
+"""Hybrid sparse encoding (paper H1, Sec. 4.2.2) as a generic codec.
+
+Formats:
+  dense   — raw array.
+  bitmap  — 1 bit/element metadata + packed non-zero values + row pointers
+            (the paper's fixed-latency variant: rowptr[i] = index of row i's
+            first non-zero in the packed array, so any (x, y) lookup costs a
+            bounded prefix-popcount — 3 cycles in the ASIC, one vectorised
+            VMEM pass in the Pallas kernel).
+  coo     — sorted linearised coordinates (int32) + values, decoded by
+            branchless binary search (the ASIC's search tree, data-parallel).
+
+`choose_format` applies the paper's 80% sparsity switch; `storage_bytes`
+exposes the size model that justifies it. Consumers: TensoRF VM factors and
+(beyond paper) MoE dispatch mode selection in models/moe.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class BitmapEncoded:
+    shape: tuple
+    words: jax.Array      # (rows, ceil(cols/32)) uint32 bitmap
+    rowptr: jax.Array     # (rows,) int32 — start of each row in `values`
+    values: jax.Array     # (nnz_pad,) packed non-zeros (padded)
+    nnz: int
+
+
+@dataclasses.dataclass
+class CooEncoded:
+    shape: tuple
+    coords: jax.Array     # (nnz_pad,) int32 sorted linear indices (pad = INT32_MAX)
+    values: jax.Array     # (nnz_pad,)
+    nnz: int
+
+
+PAD_COORD = np.iinfo(np.int32).max
+
+
+def sparsity(w) -> float:
+    w = np.asarray(w)
+    return float((w == 0).mean())
+
+
+def choose_format(s: float, threshold: float = 0.80) -> str:
+    """The paper's rule: bitmap below the threshold, COO at/above it."""
+    return "coo" if s >= threshold else "bitmap"
+
+
+def encode_bitmap(w, pad_to: Optional[int] = None) -> BitmapEncoded:
+    w = np.asarray(w)
+    assert w.ndim == 2, "bitmap codec operates on matrices (vectors: (1, n))"
+    rows, cols = w.shape
+    nz = w != 0
+    wc = ((cols + 31) // 32) * 32
+    bits = np.zeros((rows, wc), np.uint32)
+    bits[:, :cols] = nz
+    words = np.zeros((rows, wc // 32), np.uint32)
+    for b in range(32):
+        words |= bits[:, b::32] << np.uint32(b)
+    counts = nz.sum(axis=1)
+    rowptr = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
+    vals = w[nz].astype(w.dtype)
+    nnz = int(vals.size)
+    pad = pad_to if pad_to is not None else ((nnz + 127) // 128) * 128 or 128
+    values = np.zeros((pad,), w.dtype)
+    values[:nnz] = vals
+    return BitmapEncoded((rows, cols), jnp.asarray(words),
+                         jnp.asarray(rowptr), jnp.asarray(values), nnz)
+
+
+def encode_coo(w, pad_to: Optional[int] = None) -> CooEncoded:
+    w = np.asarray(w)
+    flat = w.reshape(-1)
+    idx = np.nonzero(flat)[0].astype(np.int32)
+    vals = flat[idx]
+    nnz = int(idx.size)
+    pad = pad_to if pad_to is not None else ((nnz + 127) // 128) * 128 or 128
+    coords = np.full((pad,), PAD_COORD, np.int32)
+    coords[:nnz] = idx
+    values = np.zeros((pad,), w.dtype)
+    values[:nnz] = vals
+    return CooEncoded(w.shape, jnp.asarray(coords), jnp.asarray(values), nnz)
+
+
+def decode_bitmap(enc: BitmapEncoded) -> jax.Array:
+    """jnp oracle: reconstruct the dense matrix."""
+    rows, cols = enc.shape
+    wc = enc.words.shape[1] * 32
+    bpos = jnp.arange(wc, dtype=jnp.uint32)
+    bits = (enc.words[:, bpos // 32] >> (bpos % 32)) & 1       # (rows, wc)
+    bits = bits[:, :cols].astype(jnp.int32)
+    pos = jnp.cumsum(bits, axis=1) - bits                       # prefix count
+    addr = enc.rowptr[:, None] + pos
+    vals = enc.values[jnp.clip(addr, 0, enc.values.shape[0] - 1)]
+    return jnp.where(bits > 0, vals, 0).astype(enc.values.dtype)
+
+
+def decode_coo(enc: CooEncoded) -> jax.Array:
+    flat = jnp.zeros((int(np.prod(enc.shape)),), enc.values.dtype)
+    ok = enc.coords != PAD_COORD
+    safe = jnp.where(ok, enc.coords, 0)
+    flat = flat.at[safe].add(jnp.where(ok, enc.values, 0))
+    return flat.reshape(enc.shape)
+
+
+def coo_lookup(enc: CooEncoded, queries: jax.Array) -> jax.Array:
+    """Branchless binary search over sorted coords. queries (Q,) linear idx."""
+    n = enc.coords.shape[0]
+    steps = max(int(np.ceil(np.log2(n))), 1) + 1   # +1: converge to lo == hi
+    lo = jnp.zeros_like(queries)
+    hi = jnp.full_like(queries, n)
+    for _ in range(steps):
+        mid = (lo + hi) // 2
+        go_right = enc.coords[mid] < queries
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    found = (lo < n) & (enc.coords[jnp.clip(lo, 0, n - 1)] == queries)
+    return jnp.where(found, enc.values[jnp.clip(lo, 0, n - 1)], 0)
+
+
+def storage_bytes(shape, nnz: int, fmt: str, elem_bytes: int = 4) -> int:
+    """Size model behind the 80% threshold (paper Sec. 4.2.2 / DESIGN §3)."""
+    total = int(np.prod(shape))
+    rows = shape[0] if len(shape) == 2 else 1
+    if fmt == "dense":
+        return total * elem_bytes
+    if fmt == "bitmap":
+        return total // 8 + rows * 4 + nnz * elem_bytes
+    if fmt == "coo":
+        return nnz * (4 + elem_bytes)
+    raise ValueError(fmt)
+
+
+def encode_hybrid(w, threshold: float = 0.80):
+    """The full H1 codec: measure sparsity, pick format, encode."""
+    s = sparsity(w)
+    fmt = choose_format(s, threshold)
+    enc = encode_coo(w) if fmt == "coo" else encode_bitmap(np.atleast_2d(np.asarray(w)))
+    return fmt, s, enc
+
+
+def factor_report(params) -> Dict[str, Dict]:
+    """Per-factor encoding decision + storage for the TensoRF field params."""
+    out = {}
+    for k in ("sigma_planes", "sigma_lines", "app_planes", "app_lines"):
+        w = np.asarray(params[k])
+        for m in range(3):
+            wm = w[m].reshape(w.shape[1], -1)
+            s = sparsity(wm)
+            fmt = choose_format(s)
+            nnz = int((wm != 0).sum())
+            out[f"{k}[{m}]"] = {
+                "sparsity": s,
+                "format": fmt,
+                "dense_bytes": storage_bytes(wm.shape, nnz, "dense"),
+                "bitmap_bytes": storage_bytes(wm.shape, nnz, "bitmap"),
+                "coo_bytes": storage_bytes(wm.shape, nnz, "coo"),
+                "chosen_bytes": storage_bytes(wm.shape, nnz, fmt),
+            }
+    return out

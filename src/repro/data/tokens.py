@@ -1,0 +1,101 @@
+"""Deterministic synthetic token pipeline for LM training.
+
+Offline container -> tokens come from a splittable counter-based generator
+(threefry via jax.random, keyed by (shard, step)), so every data-parallel
+host produces a disjoint, reproducible stream without coordination — the
+same property a production sharded-file loader gives you. Restart-safety:
+the stream is a pure function of step, so checkpoint restore resumes the
+exact batch sequence (exactly-once semantics without a data journal).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    n_shards: int = 1
+    shard: int = 0
+    seed: int = 0
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        """The global batch for `step` (host slice when n_shards > 1)."""
+        b = self.shape.global_batch // self.n_shards
+        s = self.shape.seq_len
+        cfg = self.cfg
+        key = jax.random.PRNGKey(self.seed)
+        key = jax.random.fold_in(key, step)
+        key = jax.random.fold_in(key, self.shard)
+        n_front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+        n_text = s - n_front
+        toks = jax.random.randint(key, (b, n_text + 1), 0, cfg.vocab,
+                                  dtype=jnp.int32)
+        out: Dict[str, jax.Array] = {
+            "tokens": toks[:, :-1],
+        }
+        labels = toks[:, 1:]
+        mask = jnp.ones((b, n_text), jnp.float32)
+        if n_front:
+            out["frontend"] = jax.random.normal(
+                jax.random.fold_in(key, 1), (b, n_front, cfg.d_model),
+                jnp.bfloat16)
+            labels = jnp.concatenate(
+                [jnp.zeros((b, n_front), jnp.int32), labels], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros((b, n_front), jnp.float32), mask], axis=1)
+        if cfg.enc_dec:
+            out["enc_frames"] = jax.random.normal(
+                jax.random.fold_in(key, 2), (b, s, cfg.d_model), jnp.bfloat16)
+        out["labels"] = labels
+        out["loss_mask"] = mask
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one global batch (dry-run inputs)."""
+    b, s = shape.global_batch, shape.seq_len
+    n_front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((b, s - n_front), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if n_front:
+        specs["frontend"] = jax.ShapeDtypeStruct((b, n_front, cfg.d_model),
+                                                 jnp.bfloat16)
+    if cfg.enc_dec:
+        specs["enc_frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16)
+    if shape.kind != "train":
+        specs.pop("labels")
+        specs.pop("loss_mask")
+    return specs
+
+
+def input_logical(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, str]:
+    """Logical axes for the batch inputs (resolved to in_shardings)."""
+    log = {"tokens": "batch|seq", "labels": "batch|seq",
+           "loss_mask": "batch|seq"}
+    if cfg.frontend == "vision":
+        log["frontend"] = "batch|seq|"
+    if cfg.enc_dec:
+        log["enc_frames"] = "batch|seq|"
+    if shape.kind != "train":
+        log.pop("labels")
+        log.pop("loss_mask")
+    return log

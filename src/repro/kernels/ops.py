@@ -1,0 +1,64 @@
+"""jit'd public wrappers for the Pallas kernels with platform dispatch.
+
+On TPU the compiled kernels run natively; on CPU we validate in interpret
+mode (`force="pallas"`) or fall back to the jnp oracle (`force="ref"`,
+default on CPU — interpret mode is for correctness, not speed).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitmap_decode import bitmap_matmul as _bitmap_pallas
+from repro.kernels.coo_gather import coo_gather as _coo_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.volume_render import volume_render as _vr_pallas
+
+
+def _mode(force: Optional[str]) -> str:
+    if force:
+        return force
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "force"))
+def bitmap_matmul(words, rowptr, values, x, *, cols: int,
+                  force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return ref.bitmap_decode_matmul_ref(words, rowptr, values, x, cols)
+    return _bitmap_pallas(words, rowptr, values, x, cols=cols,
+                          interpret=(jax.default_backend() != "tpu"))
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def coo_gather(coords, values, queries, *, force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return ref.coo_gather_ref(coords, values, queries)
+    return _coo_pallas(coords, values, queries,
+                       interpret=(jax.default_backend() != "tpu"))
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "term_eps", "force"))
+def volume_render(sigma, rgb, *, delta: float, term_eps: float = 1e-4,
+                  force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return ref.volume_render_ref(sigma, rgb, delta, term_eps)
+    return _vr_pallas(sigma, rgb, delta=delta, term_eps=term_eps,
+                      interpret=(jax.default_backend() != "tpu"))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "force"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash_pallas(q, k, v, causal=causal,
+                         interpret=(jax.default_backend() != "tpu"))

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (shape/dtype-swept in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitmap_decode_matmul_ref(words: jax.Array, rowptr: jax.Array,
+                             values: jax.Array, x: jax.Array,
+                             cols: int) -> jax.Array:
+    """Decode a bitmap-encoded sparse matrix W (rows x cols) and compute W @ x.
+
+    words  (rows, cols//32) uint32; rowptr (rows,) int32;
+    values (nnz_pad,)       packed row-major non-zeros;
+    x      (cols, n)        dense right-hand side.
+    """
+    rows = words.shape[0]
+    bpos = jnp.arange(cols, dtype=jnp.uint32)
+    bits = (words[:, bpos // 32] >> (bpos % 32)) & 1          # (rows, cols)
+    bits = bits.astype(jnp.int32)
+    prefix = jnp.cumsum(bits, axis=1) - bits
+    addr = rowptr[:, None] + prefix
+    vals = values[jnp.clip(addr, 0, values.shape[0] - 1)]
+    w = jnp.where(bits > 0, vals, 0).astype(x.dtype)          # dense (rows, cols)
+    return w @ x
+
+
+def coo_gather_ref(coords: jax.Array, values: jax.Array,
+                   queries: jax.Array) -> jax.Array:
+    """Look up linear indices `queries` in a sorted COO stream (0 if absent)."""
+    n = coords.shape[0]
+    lo = jnp.searchsorted(coords, queries)
+    safe = jnp.clip(lo, 0, n - 1)
+    found = (lo < n) & (coords[safe] == queries)
+    return jnp.where(found, values[safe], 0)
+
+
+def volume_render_ref(sigma: jax.Array, rgb: jax.Array, delta: float,
+                      term_eps: float):
+    """Eq. 1 front-to-back with early termination. sigma (R,N); rgb (R,N,3).
+
+    Returns (color (R,3), t_final (R,), processed (scalar)) where `processed`
+    counts samples with transmittance-before > term_eps (the points the ASIC
+    actually processes).
+    """
+    tau = sigma.astype(jnp.float32) * delta
+    cum = jnp.cumsum(tau, axis=-1)
+    t_before = jnp.exp(-(cum - tau))
+    alive = t_before > term_eps
+    tau = jnp.where(alive, tau, 0.0)
+    cum = jnp.cumsum(tau, axis=-1)
+    t_before = jnp.exp(-(cum - tau))
+    alpha = 1.0 - jnp.exp(-tau)
+    w = t_before * alpha
+    color = jnp.einsum("rn,rnc->rc", w, rgb.astype(jnp.float32))
+    t_final = jnp.exp(-cum[:, -1])
+    return color, t_final, jnp.sum(alive.astype(jnp.float32))
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Plain softmax attention. q,k,v (B,H,S,hd) -> (B,H,S,hd)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    s = s / (q.shape[-1] ** 0.5)
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

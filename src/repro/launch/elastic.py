@@ -1,0 +1,136 @@
+"""Fault tolerance + elastic scaling runtime.
+
+Large-scale posture (DESIGN.md §7): at 1000+ nodes, node loss is routine.
+The framework's contract:
+
+  1. every state mutation flows through `TrainState` and is checkpointed
+     (atomic + async, ckpt/checkpoint.py) every `ckpt_every` steps;
+  2. `HealthMonitor` wraps each step: a step that raises (device loss) or
+     exceeds `timeout_factor` x EWMA step time (straggler) triggers recovery;
+  3. recovery = rebuild the mesh from surviving hosts (the device set is a
+     constructor argument, so tests inject failures), re-resolve shardings
+     on the SMALLER mesh, restore the latest checkpoint re-sharded onto it —
+     possible because checkpoints store global arrays (ckpt docstring);
+  4. the data stream is a pure function of (step, shard) (data/tokens.py),
+     so resumed training replays no batch and skips none.
+
+This container has one process, so multi-host failure is *simulated* by
+shrinking the virtual device list — the same code path a real deployment
+takes through jax.distributed, minus the TCP barrier. Straggler mitigation
+follows the checkpoint-elastic-resume pattern rather than backup-task
+re-execution (TPU pods fail as slices; MapReduce-style speculative
+execution does not apply).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+
+
+class NodeFailure(RuntimeError):
+    """Raised by the step wrapper when a device/host is lost."""
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    """EWMA step timer with straggler detection."""
+    alpha: float = 0.1
+    timeout_factor: float = 5.0
+    warmup_steps: int = 3
+    _ewma: Optional[float] = None
+    _steps: int = 0
+
+    def observe(self, dt: float) -> bool:
+        """Record a step time; True if this step counts as a straggler."""
+        self._steps += 1
+        if self._ewma is None:
+            self._ewma = dt
+            return False
+        straggler = (self._steps > self.warmup_steps
+                     and dt > self.timeout_factor * self._ewma)
+        self._ewma = (1 - self.alpha) * self._ewma + self.alpha * dt
+        return straggler
+
+    @property
+    def ewma(self) -> Optional[float]:
+        return self._ewma
+
+
+def make_mesh_from(devices: Sequence, model_axis: int):
+    """Largest (data, model) mesh on the surviving device list."""
+    n = len(devices)
+    model = min(model_axis, n)
+    while n % model:
+        model -= 1
+    data = n // model
+    arr = np.asarray(devices[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+@dataclasses.dataclass
+class ElasticRunner:
+    """Drives train steps with checkpoint/restart + elastic re-meshing."""
+    build: Callable  # (mesh) -> (step_fn, state, shardings) — rebuildable
+    ckpt_dir: str
+    model_axis: int = 1
+    ckpt_every: int = 50
+    max_recoveries: int = 8
+
+    def run(self, n_steps: int, batches: Callable[[int], dict],
+            devices: Optional[List] = None, inject_failure_at: int = -1):
+        """Run n_steps; `inject_failure_at` kills half the devices once (test
+        hook). Returns (state, log)."""
+        devices = list(devices if devices is not None else jax.devices())
+        mgr = CheckpointManager(self.ckpt_dir)
+        monitor = HealthMonitor()
+        log = []
+        recoveries = 0
+        mesh = make_mesh_from(devices, self.model_axis)
+        step_fn, state, shardings = self.build(mesh)
+        start, restored = mgr.restore_latest(state, shardings)
+        step0 = 0
+        if restored is not None:
+            state = restored
+            step0 = start + 1
+            log.append(("restore", start, len(devices)))
+
+        step = step0
+        while step < n_steps:
+            try:
+                if step == inject_failure_at and recoveries == 0:
+                    devices = devices[: max(len(devices) // 2, 1)]
+                    raise NodeFailure(f"injected loss at step {step}")
+                t0 = time.time()
+                state, metrics = step_fn(state, batches(step))
+                dt = time.time() - t0
+                if monitor.observe(dt):
+                    log.append(("straggler", step, dt))
+                if step % self.ckpt_every == 0:
+                    mgr.save_async(step, state)
+                log.append(("step", step, float(metrics.get("loss", 0.0))))
+                step += 1
+            except (NodeFailure, jax.errors.JaxRuntimeError) as e:
+                recoveries += 1
+                if recoveries > self.max_recoveries:
+                    raise
+                log.append(("failure", step, str(e)[:80]))
+                mgr.wait()
+                mesh = make_mesh_from(devices, self.model_axis)
+                step_fn, state, shardings = self.build(mesh)
+                start, restored = mgr.restore_latest(state, shardings)
+                if restored is not None:
+                    state = restored
+                    step = start + 1
+                else:
+                    step = 0
+                log.append(("remesh", step, len(devices)))
+        mgr.wait()
+        mgr.save_async(n_steps - 1, state)
+        mgr.wait()
+        return state, log

@@ -1,0 +1,123 @@
+"""Extract roofline terms from a compiled (AOT) step.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. cost_analysis() numbers from a partitioned executable are
+PER-DEVICE; collective bytes are summed over the per-device HLO's collective
+ops' operand shapes (as specified in the task brief).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce = f32[16,32]{1,0} all-reduce(%dot), channel_id=1,
+#         replica_groups=[4,4]<=[16], use_global_device_ids=true, ...
+# The modern printer omits operand shapes, so we read the RESULT shape and
+# the replica-group size and derive operand/wire bytes per op semantics.
+_OP_RE = re.compile(
+    r"=\s+(?P<lhs>\(?[^=]*?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _BRACE_GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2  # collective-permute etc.
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic from partitioned HLO text.
+
+    For each op: `operand` bytes follow the brief (sum of operand sizes);
+    `wire` bytes use a ring model (what actually crosses ICI links per
+    device): AG (g-1)/g*R, AR 2(g-1)/g*R, RS (g-1)*R, A2A (g-1)/g*R, CP R,
+    where R = result bytes, g = replica-group size.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    wire = {k: 0.0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue                         # counted at -start
+        kind = m.group("kind")
+        shapes = [_shape_bytes(d, s) for d, s in
+                  _SHAPE_RE.findall(m.group("lhs"))]
+        if not shapes:
+            continue
+        res = float(max(shapes))             # tuple results: take payload
+        g = _group_size(line)
+        if kind == "all-gather":
+            op_b, wire_b = res / g, res * (g - 1) / g
+        elif kind == "all-reduce":
+            op_b, wire_b = res, 2.0 * res * (g - 1) / g
+        elif kind == "reduce-scatter":
+            op_b, wire_b = res * g, res * (g - 1)
+        elif kind == "all-to-all":
+            op_b, wire_b = res, res * (g - 1) / g
+        else:                                # collective-permute
+            op_b, wire_b = res, res
+        out[kind] += op_b
+        wire[kind] += wire_b
+        count[kind] += 1
+    rec = dict(out)
+    rec.update({f"wire_{k}": wire[k] for k in _COLLECTIVES})
+    rec.update({f"n_{k}": count[k] for k in _COLLECTIVES})
+    rec["total"] = sum(out[k] for k in _COLLECTIVES)
+    rec["wire_total"] = sum(wire[k] for k in _COLLECTIVES)
+    return rec
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = coll_bytes_per_dev / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": max(compute_s, memory_s, collective_s),
+    }
+
+
+def model_flops(n_params: int, n_active: int, n_tokens: int,
+                kind: str) -> float:
+    """6*N*D for training, 2*N*D for single forward (prefill/decode)."""
+    n = n_active or n_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * n_tokens

@@ -1,0 +1,303 @@
+"""Trip-count-aware HLO text analysis.
+
+XLA's `compiled.cost_analysis()` counts a `while` (lax.scan) body ONCE,
+regardless of trip count — useless for scanned-layer transformers. This
+module parses the partitioned HLO text into computations, extracts each
+while loop's trip count from its condition computation, and walks the call
+graph with multipliers to produce trip-weighted:
+
+  * flops            (dot: 2 * |result| * |contraction|; conv approximated)
+  * bytes accessed   (per op: operand + result bytes, fusion interiors free —
+                      XLA's own fusion accounting convention)
+  * collective bytes (operand + ring-model wire bytes per collective kind)
+
+This is the "profile" of the dry-run perf loop (no real TPU available).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_CALLED_RE = re.compile(r"(?:body|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "reshape", "opt-barrier", "domain", "token",
+}
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str           # result type string
+    opcode: str
+    line: str            # metadata-stripped
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    defs: Dict[str, str]         # value name -> result type string
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.split(" metadata={")[0].split(", metadata={")[0]
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(m.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            continue
+        d = _DEF_RE.match(line)
+        if d:
+            name, shape, opcode = d.group(1), d.group(2), d.group(3)
+            cur.defs[name] = shape
+            cur.ops.append(Op(name, shape, opcode, line.strip()))
+    return comps
+
+
+def while_trip_counts(comps: Dict[str, Computation]) -> Dict[str, int]:
+    """Map while BODY computation name -> trip count (from its condition)."""
+    trips: Dict[str, int] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode != "while":
+                continue
+            mb = _CALLED_RE.search(op.line)
+            mc = _COND_RE.search(op.line)
+            if not (mb and mc):
+                continue
+            cond = comps.get(mc.group(1))
+            trip = 1
+            if cond is not None:
+                consts = [int(x) for o in cond.ops
+                          for x in _CONST_RE.findall(o.line)]
+                if consts:
+                    trip = max(consts)
+            trips[mb.group(1)] = max(trip, 1)
+    return trips
+
+
+def _operand_names(op: Op) -> List[str]:
+    inner = op.line.split("(", 1)[1]
+    depth = 1
+    args = ""
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        args += ch
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _BRACE_GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res = _shape_dims(op.shape)
+    n_res = 1
+    for _, dims in res:
+        for d in dims:
+            n_res *= d
+    operands = _operand_names(op)
+    contract = 1
+    m = _CONTRACT_RE.search(op.line)
+    if m and operands:
+        lhs_shape = comp.defs.get(operands[0])
+        if lhs_shape:
+            dims = _shape_dims(lhs_shape)[0][1]
+            for idx in (m.group(1).split(",") if m.group(1) else []):
+                i = int(idx)
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * n_res * contract
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    # approximate: 2 * |result| * prod(kernel spatial dims) (depthwise-ish)
+    res = _shape_bytes(op.shape) / 4.0
+    m = re.search(r"window=\{size=([0-9x]+)", op.line)
+    k = 1
+    if m:
+        for d in m.group(1).split("x"):
+            k *= int(d)
+    return 2.0 * res * k
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_operand: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_wire: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVES})
+
+
+def _walk(comp: Computation, comps: Dict[str, Computation],
+          trips: Dict[str, int], mult: float, costs: Costs,
+          in_fusion: bool = False):
+    for op in comp.ops:
+        oc = op.opcode
+        if oc == "while":
+            mb = _CALLED_RE.search(op.line)
+            if mb and mb.group(1) in comps:
+                body = mb.group(1)
+                _walk(comps[body], comps, trips,
+                      mult * trips.get(body, 1), costs)
+            continue
+        if oc == "fusion":
+            # fusion-call-level bytes; recurse for dots (flops only)
+            if not in_fusion:
+                b = _shape_bytes(op.shape)
+                for nm in _operand_names(op):
+                    if nm in comp.defs:
+                        b += _shape_bytes(comp.defs[nm])
+                costs.bytes += mult * b
+            mc = _CALLED_RE.search(op.line)
+            if mc and mc.group(1) in comps:
+                _walk(comps[mc.group(1)], comps, trips, mult, costs,
+                      in_fusion=True)
+            continue
+        base = oc.replace("-start", "")
+        if base in COLLECTIVES:
+            res = float(_shape_bytes(op.shape))
+            g = _group_size(op.line)
+            if base == "all-gather":
+                ob, wb = res / g, res * (g - 1) / g
+            elif base == "all-reduce":
+                ob, wb = res, 2.0 * res * (g - 1) / g
+            elif base == "reduce-scatter":
+                ob, wb = res * g, res * (g - 1)
+            elif base == "all-to-all":
+                ob, wb = res, res * (g - 1) / g
+            else:
+                ob, wb = res, res
+            costs.coll_operand[base] += mult * ob
+            costs.coll_wire[base] += mult * wb
+            costs.coll_count[base] += 1
+            costs.bytes += mult * res
+            continue
+        if oc.endswith("-done") or oc in _FREE_OPS:
+            continue
+        if oc == "dot":
+            costs.flops += mult * _dot_flops(op, comp)
+        elif oc == "convolution":
+            costs.flops += mult * _conv_flops(op, comp)
+        if not in_fusion:
+            b = _shape_bytes(op.shape)
+            for nm in _operand_names(op):
+                if nm in comp.defs:
+                    b += _shape_bytes(comp.defs[nm])
+            costs.bytes += mult * b
+
+
+def top_collectives(text: str, k: int = 20):
+    """Top-k collective ops by trip-weighted wire bytes (perf-loop probe)."""
+    comps = parse_computations(text)
+    trips = while_trip_counts(comps)
+    entries = []
+
+    def walk(comp, mult):
+        for op in comp.ops:
+            if op.opcode == "while":
+                mb = _CALLED_RE.search(op.line)
+                if mb and mb.group(1) in comps:
+                    walk(comps[mb.group(1)], mult * trips.get(mb.group(1), 1))
+                continue
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                res = float(_shape_bytes(op.shape))
+                g = _group_size(op.line)
+                wire = {"all-gather": res * (g - 1) / g,
+                        "all-reduce": 2.0 * res * (g - 1) / g,
+                        "reduce-scatter": res * (g - 1),
+                        "all-to-all": res * (g - 1) / g,
+                        "collective-permute": res}[base]
+                entries.append((mult * wire, mult, base, op.shape[:60],
+                                op.name))
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    walk(comps[m.group(1) if m else next(iter(comps))], 1.0)
+    return sorted(entries, reverse=True)[:k]
+
+
+def analyze(text: str, entry: Optional[str] = None) -> Dict[str, float]:
+    comps = parse_computations(text)
+    trips = while_trip_counts(comps)
+    # entry: the computation marked ENTRY — detect from text
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        entry_name = m.group(1) if m else next(iter(comps))
+    costs = Costs()
+    _walk(comps[entry_name], comps, trips, 1.0, costs)
+    rec = {
+        "flops": costs.flops,
+        "bytes": costs.bytes,
+        "coll_operand_total": sum(costs.coll_operand.values()),
+        "coll_wire_total": sum(costs.coll_wire.values()),
+    }
+    for k in COLLECTIVES:
+        rec[f"op_{k}"] = costs.coll_operand[k]
+        rec[f"wire_{k}"] = costs.coll_wire[k]
+        rec[f"n_{k}"] = costs.coll_count[k]
+    rec["n_while_bodies"] = len(trips)
+    rec["trip_counts"] = sorted(trips.values(), reverse=True)[:12]
+    return rec

@@ -1,0 +1,24 @@
+"""Production meshes. A FUNCTION, not a module-level constant — importing
+this module never touches jax device state (dryrun.py must set XLA_FLAGS
+before any jax initialisation)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod, 256 chips) or 2x16x16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pipeline_mesh(*, stages: int = 4, data: int = 8, model: int = 8):
+    """Optional PP mesh variant (launch/pipeline.py)."""
+    return jax.make_mesh((stages, data, model), ("stage", "data", "model"))
+
+
+def make_host_mesh():
+    """Whatever this host has — used by tests and the CPU examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,85 @@
+"""Pipeline parallelism (GPipe schedule) over a "stage" mesh axis.
+
+`shard_map` + `ppermute` realisation: layer-stack params are sharded over
+stages; micro-batch activations flow stage->stage through collective
+permutes; the bubble is the usual (S-1)/(M+S-1). Autodiff through ppermute
+gives the reverse schedule for backward. This is the scale-out option for
+deep archs (granite-34b's 88 layers) when a pure TP/FSDP mesh runs out of
+parallel axes; covered by an 8-virtual-device subprocess test.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def gpipe(apply_stage: Callable, mesh: Mesh, *, axis: str = "stage"):
+    """Build a pipelined apply: (params_stacked, x_micro) -> y_micro.
+
+    apply_stage(params_local, x) applies ONE stage's layer block.
+    params_stacked leaves: (n_stages * per_stage, ...) — sharded on dim 0.
+    x_micro: (n_micro, micro_batch, ...) — replicated; stage 0 ingests.
+    """
+    n_stage = mesh.shape[axis]
+
+    def pipelined(params, x_micro):
+        s = jax.lax.axis_index(axis)
+        n_micro = x_micro.shape[0]
+        ticks = n_micro + n_stage - 1
+        perm = [(i, i + 1) for i in range(n_stage - 1)]
+
+        def tick(carry, t):
+            buf, outs = carry
+            inp = jnp.where(s == 0,
+                            x_micro[jnp.minimum(t, n_micro - 1)], buf)
+            h = apply_stage(params, inp)
+            # emit on the last stage once the pipe is full
+            out_idx = t - (n_stage - 1)
+            emit = (s == n_stage - 1) & (out_idx >= 0)
+            outs = jax.lax.cond(
+                emit,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, h, jnp.maximum(out_idx, 0), 0),
+                lambda o: o, outs)
+            buf = jax.lax.ppermute(h, axis, perm)
+            return (buf, outs), None
+
+        buf0 = jnp.zeros_like(x_micro[0])
+        outs0 = jnp.zeros_like(x_micro)
+        (buf, outs), _ = jax.lax.scan(tick, (buf0, outs0),
+                                      jnp.arange(ticks))
+        # replicate final outputs from the last stage
+        mask = (s == n_stage - 1).astype(outs.dtype)
+        outs = jax.lax.psum(outs * mask, axis)
+        return outs
+
+    in_specs = (P(axis), P())          # params sharded on stage; x replicated
+    out_specs = P()
+    return shard_map(pipelined, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def mlp_stage(params_local, x):
+    """Demonstrator stage: a block of gelu-MLP layers (scan over local dim)."""
+    def body(h, lp):
+        h = h + jax.nn.gelu((h @ lp["w1"])) @ lp["w2"]
+        return h, None
+    y, _ = jax.lax.scan(body, x, params_local)
+    return y
+
+
+def reference_apply(params_stacked, x_micro):
+    """Sequential oracle for tests: same math, no pipeline."""
+    def body(h, lp):
+        h = h + jax.nn.gelu((h @ lp["w1"])) @ lp["w2"]
+        return h, None
+
+    def one(x):
+        y, _ = jax.lax.scan(body, x, params_stacked)
+        return y
+    return jax.vmap(one)(x_micro)

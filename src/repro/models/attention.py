@@ -1,0 +1,375 @@
+"""Attention: GQA/MHA/MQA (+ optional QKV bias), MLA (DeepSeek-V3), caches.
+
+Layouts
+  q:  (B, S, Hkv, G, hd)   grouped — G = Hq // Hkv; logical axes let the
+                           resolver shard whichever of Hkv / G divides the
+                           model axis (DeepSeek: Hkv=128; granite-34b MQA:
+                           G=48; grok: neither -> GSPMD propagates).
+  kv: (B, S, Hkv, hd)
+Caches
+  gqa: {"k","v"}: (B, C, Hkv, hd); C = window if windowed else max seq.
+  mla: {"c": (B, C, kv_lora), "kr": (B, C, rope_dim)} — the latent cache;
+       decode uses the weight-absorbed formulation (DeepSeek's own trick).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Maker, apply_rope, rms_norm
+from repro.models.sharding import current_rules, shard_act
+
+QK_CHUNK = 512          # kv-chunk for the online-softmax (flash-style) path
+NEG_INF = -1e30
+PROD_MODEL_AXIS = 16    # production model-axis width (cache-spec decisions)
+
+
+def heads_shardable(cfg: ModelConfig, m: int = PROD_MODEL_AXIS) -> bool:
+    """Can (kv_heads | q-head-groups) shard over an m-way model axis?"""
+    if cfg.attention == "mla":
+        return cfg.n_heads % m == 0
+    g = cfg.n_heads // max(cfg.n_kv_heads, 1)
+    return (cfg.n_kv_heads % m == 0) or (g % m == 0)
+
+
+def _attn_seq_axis(cfg: ModelConfig) -> str:
+    """Sequence-parallel attention when heads cannot shard (qwen1.5's 40
+    heads, llama/grok/internvl's 8 kv-heads on a 16-way model axis)."""
+    if cfg.seq_shard_attn:
+        return "seq_model"
+    rules = current_rules()
+    if rules is None:
+        return "seq_model" if not heads_shardable(cfg) else "seq"
+    m = rules.axis_size(rules.act_rules.get("kv_heads"))
+    return "seq_model" if (m > 1 and not heads_shardable(cfg, m)) else "seq"
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def init_gqa(mk: Maker, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": mk.w((d, hkv, hq // hkv, hd), ("embed", "kv_heads", "heads", "head_dim"), fan_in=d),
+        "wk": mk.w((d, hkv, hd), ("embed", "kv_heads", "head_dim"), fan_in=d),
+        "wv": mk.w((d, hkv, hd), ("embed", "kv_heads", "head_dim"), fan_in=d),
+        "wo": mk.w((hkv, hq // hkv, hd, d), ("kv_heads", "heads", "head_dim", "embed"),
+                   fan_in=hq * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk.z((hkv, hq // hkv, hd), ("kv_heads", "heads", "head_dim"))
+        p["bk"] = mk.z((hkv, hd), ("kv_heads", "head_dim"))
+        p["bv"] = mk.z((hkv, hd), ("kv_heads", "head_dim"))
+    return p
+
+
+def init_mla(mk: Maker, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wdq": mk.w((d, qr), ("embed", "q_lora"), fan_in=d),
+        "q_norm": mk.ones((qr,), ("q_lora",)),
+        "wuq": mk.w((qr, h, nope + rope), ("q_lora", "heads", "head_dim"), fan_in=qr),
+        "wdkv": mk.w((d, kr + rope), ("embed", "kv_lora"), fan_in=d),
+        "kv_norm": mk.ones((kr,), ("kv_lora",)),
+        "wuk": mk.w((kr, h, nope), ("kv_lora", "heads", "head_dim"), fan_in=kr),
+        "wuv": mk.w((kr, h, vh), ("kv_lora", "heads", "head_dim"), fan_in=kr),
+        "wo": mk.w((h, vh, d), ("heads", "head_dim", "embed"), fan_in=h * vh),
+    }
+
+
+def init_attention(mk: Maker, cfg: ModelConfig):
+    return init_mla(mk, cfg) if cfg.attention == "mla" else init_gqa(mk, cfg)
+
+
+# --------------------------------------------------------------------------
+# core softmax-attention on grouped layouts
+# --------------------------------------------------------------------------
+
+
+def _masked_attn_naive(q, k, v, mask, scale):
+    """q (B,S,K,G,h); k,v (B,T,K,h); mask (B,S,T) or (S,T) bool keep."""
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        s = jnp.where(m[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return o
+
+
+def _masked_attn_chunked(q, k, v, q_pos, kv_pos, scale, causal, window):
+    """Online-softmax over KV chunks (flash-style, pure XLA).
+
+    q (B,S,K,G,h); k,v (B,T,K,h); q_pos (S,), kv_pos (T,). Memory per step is
+    O(S * chunk) instead of O(S * T).
+    """
+    B, S, K, G, h = q.shape
+    T = k.shape[1]
+    C = min(QK_CHUNK, T)
+    n_chunks = (T + C - 1) // C
+    Tp = n_chunks * C
+    if Tp != T:
+        pad = [(0, 0), (0, Tp - T)] + [(0, 0)] * (k.ndim - 2)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        kv_pos = jnp.pad(kv_pos, (0, Tp - T), constant_values=-1)
+    kc = k.reshape(B, n_chunks, C, K, k.shape[-1]).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, C, K, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(n_chunks, C)
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, pj = xs
+        s = jnp.einsum("bskgh,bckh->bkgsc", qf, kj.astype(jnp.float32)) * scale
+        keep = pj[None, :] >= 0                                   # (1, C) pad
+        if causal:
+            keep = keep & (q_pos[:, None] >= pj[None, :])         # (S, C)
+        if window:
+            keep = keep & (q_pos[:, None] - pj[None, :] < window)
+        s = jnp.where(keep[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgsc,bckh->bkgsh", p, vj.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, v.shape[-1]), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).astype(q.dtype)             # (B,S,K,G,h)
+
+
+def _attn_dispatch(q, k, v, q_pos, kv_pos, scale, causal, window, impl):
+    T = k.shape[1]
+    if impl == "auto":
+        impl = "naive" if T <= 4096 else "chunked"
+    if impl == "chunked":
+        return _masked_attn_chunked(q, k, v, q_pos, kv_pos, scale, causal, window)
+    keep = jnp.ones((q.shape[1], T), bool)
+    if causal:
+        keep = keep & (q_pos[:, None] >= kv_pos[None, :])
+    if window:
+        keep = keep & (q_pos[:, None] - kv_pos[None, :] < window)
+    keep = keep & (kv_pos >= 0)[None, :]
+    return _masked_attn_naive(q, k, v, keep, scale)
+
+
+# --------------------------------------------------------------------------
+# GQA forward
+# --------------------------------------------------------------------------
+
+
+def _gqa_qkv(p, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = shard_act(q, "batch", _attn_seq_axis(cfg), "kv_heads", "heads",
+                  "head_dim")
+    if positions is not None:          # rope (not for enc-dec abs-pos stubs)
+        B, S, K, G, h = q.shape
+        q = apply_rope(q.reshape(B, S, K * G, h), positions, cfg.rope_theta
+                       ).reshape(B, S, K, G, h)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, cfg: ModelConfig, x, positions, *, causal=True, window=0,
+                impl=None, return_cache=False):
+    """Train/prefill path. x (B,S,D); positions (S,). Returns (out, cache|None)."""
+    impl = impl or cfg.attention_impl
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
+    kv_pos = positions if positions is not None else jnp.arange(k.shape[1])
+    q_pos = kv_pos
+    o = _attn_dispatch(q, k, v, q_pos, kv_pos, scale, causal, window, impl)
+    out = jnp.einsum("bskgh,kghd->bsd", o, p["wo"])
+    out = shard_act(out, "batch", "seq", None)
+    cache = {"k": k, "v": v} if return_cache else None
+    return out, cache
+
+
+def gqa_decode(p, cfg: ModelConfig, x1, pos, cache, *, window=0):
+    """One-token decode. x1 (B,1,D); pos scalar int32; cache k/v (B,C,K,h)."""
+    B = x1.shape[0]
+    q = jnp.einsum("bsd,dkgh->bskgh", x1, p["wq"])
+    k1 = jnp.einsum("bsd,dkh->bskh", x1, p["wk"])
+    v1 = jnp.einsum("bsd,dkh->bskh", x1, p["wv"])
+    if cfg.qkv_bias:
+        q, k1, v1 = q + p["bq"], k1 + p["bk"], v1 + p["bv"]
+    posv = jnp.full((1,), pos, jnp.int32)
+    K, G, h = q.shape[2], q.shape[3], q.shape[4]
+    q = apply_rope(q.reshape(B, 1, K * G, h), posv, cfg.rope_theta).reshape(B, 1, K, G, h)
+    k1 = apply_rope(k1, posv, cfg.rope_theta)
+
+    C = cache["k"].shape[1]
+    slot = pos % C if window else jnp.minimum(pos, C - 1)
+    k = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
+    cache_ax = _attn_seq_axis(cfg)       # flash-decode: shard cache seq when
+    k = shard_act(k, "batch", cache_ax, "kv_heads", "head_dim")  # heads can't
+    v = shard_act(v, "batch", cache_ax, "kv_heads", "head_dim")
+
+    idx = jnp.arange(C)
+    if window:
+        kv_pos = pos - ((pos - idx) % C)          # ring-buffer true positions
+        kv_pos = jnp.where(kv_pos >= 0, kv_pos, -1)
+    else:
+        kv_pos = jnp.where(idx <= pos, idx, -1)
+
+    scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    s = jnp.where((kv_pos >= 0)[None, None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", pattn.astype(v.dtype), v)
+    out = jnp.einsum("bskgh,kghd->bsd", o, p["wo"])
+    return out, {"k": k, "v": v}
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, seq: int, window=0):
+    C = min(seq, window) if window else seq
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, C, cfg.n_kv_heads, hd), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((batch, C, cfg.n_kv_heads, hd), jnp.bfloat16),
+    }
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (enc-dec): kv from encoder memory, no rope, no mask
+# --------------------------------------------------------------------------
+
+
+def cross_kv(p, memory):
+    """Precompute cross-attention K/V once per request (cached for decode)."""
+    k = jnp.einsum("bmd,dkh->bmkh", memory, p["wk"])
+    v = jnp.einsum("bmd,dkh->bmkh", memory, p["wv"])
+    return k, v
+
+
+def cross_forward(p, cfg: ModelConfig, x, memory=None, kv=None):
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"])
+    if kv is None:
+        kv = cross_kv(p, memory)
+    k, v = kv
+    scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
+    o = _masked_attn_naive(q, k, v, None, scale)
+    return jnp.einsum("bskgh,kghd->bsd", o, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# --------------------------------------------------------------------------
+
+
+def _mla_q(p, cfg, x, positions):
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["wuq"])        # e = nope + rope
+    qn = q[..., : cfg.qk_nope_head_dim]
+    qr = apply_rope(q[..., cfg.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_latent(p, cfg, x, positions):
+    ckr = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    c = rms_norm(ckr[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    kr = ckr[..., cfg.kv_lora_rank:]                     # (B,S,rope) shared
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c, kr
+
+
+def mla_forward(p, cfg: ModelConfig, x, positions, *, impl=None,
+                return_cache=False):
+    """Train/prefill: expand k,v from the latent; grouped layout K=H, G=1."""
+    impl = impl or cfg.attention_impl
+    qn, qr = _mla_q(p, cfg, x, positions)
+    c, kr = _mla_latent(p, cfg, x, positions)
+    kn = jnp.einsum("bsr,rhe->bshe", c, p["wuk"])
+    v = jnp.einsum("bsr,rhe->bshe", c, p["wuv"])
+    q = jnp.concatenate([qn, qr], axis=-1)[:, :, :, None, :]      # (B,S,H,1,e)
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :],
+                                              kn.shape[:3] + (cfg.qk_rope_head_dim,))],
+                        axis=-1)
+    q = shard_act(q, "batch", "seq", "kv_heads", None, None)
+    k = shard_act(k, "batch", "seq", "kv_heads", None)
+    scale = 1.0 / ((cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** 0.5)
+    pos = positions
+    o = _attn_dispatch(q, k, v, pos, pos, scale, True, 0, impl)   # (B,S,H,1,vh)
+    out = jnp.einsum("bshv,hvd->bsd", o[:, :, :, 0, :], p["wo"])
+    out = shard_act(out, "batch", "seq", None)
+    cache = {"c": c, "kr": kr} if return_cache else None
+    return out, cache
+
+
+def mla_decode(p, cfg: ModelConfig, x1, pos, cache):
+    """Weight-absorbed decode: score against the latent cache directly."""
+    B = x1.shape[0]
+    posv = jnp.full((1,), pos, jnp.int32)
+    qn, qr = _mla_q(p, cfg, x1, posv)                    # (B,1,H,·)
+    c1, kr1 = _mla_latent(p, cfg, x1, posv)
+    C = cache["c"].shape[1]
+    c = jax.lax.dynamic_update_slice(cache["c"], c1, (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr1, (0, pos, 0))
+
+    # absorb W_uk into q: q_eff (B,1,H,r) = qn @ W_uk^T
+    q_eff = jnp.einsum("bshe,rhe->bshr", qn, p["wuk"])
+    s = jnp.einsum("bshr,btr->bhst", q_eff, c) + \
+        jnp.einsum("bshe,bte->bhst", qr, kr)
+    scale = 1.0 / ((cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** 0.5)
+    s = s.astype(jnp.float32) * scale
+    idx = jnp.arange(C)
+    s = jnp.where((idx <= pos)[None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", pattn.astype(c.dtype), c)   # (B,1,H,r)
+    o = jnp.einsum("bshr,rhv->bshv", o_lat, p["wuv"])
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return out, {"c": c, "kr": kr}
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    return {
+        "c": jax.ShapeDtypeStruct((batch, seq, cfg.kv_lora_rank), jnp.bfloat16),
+        "kr": jax.ShapeDtypeStruct((batch, seq, cfg.qk_rope_head_dim), jnp.bfloat16),
+    }
+
+
+# --------------------------------------------------------------------------
+# unified entry points
+# --------------------------------------------------------------------------
+
+
+def attention_forward(p, cfg: ModelConfig, x, positions, *, causal=True,
+                      window=0, return_cache=False):
+    if cfg.attention == "mla":
+        return mla_forward(p, cfg, x, positions, return_cache=return_cache)
+    return gqa_forward(p, cfg, x, positions, causal=causal, window=window,
+                       return_cache=return_cache)
+
+
+def attention_decode(p, cfg: ModelConfig, x1, pos, cache, *, window=0):
+    if cfg.attention == "mla":
+        return mla_decode(p, cfg, x1, pos, cache)
+    return gqa_decode(p, cfg, x1, pos, cache, window=window)
+
+
+def attention_cache_shape(cfg: ModelConfig, batch: int, seq: int, window=0):
+    if cfg.attention == "mla":
+        return mla_cache_shape(cfg, batch, seq)
+    return gqa_cache_shape(cfg, batch, seq, window=window)

@@ -1,0 +1,156 @@
+"""Shared building blocks for the LM substrate.
+
+Parameters are built as `PL(arr, logical)` pairs — a single source of truth
+for both the value tree and the logical-axis tree (used by
+`repro.models.sharding` to derive PartitionSpecs). `split_pl` separates them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Param-with-logical-axes leaves
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PL:
+    """A parameter leaf: value (or ShapeDtypeStruct) + logical axis names."""
+    arr: Any
+    logical: Tuple[Optional[str], ...]
+
+
+def is_pl(x) -> bool:
+    return isinstance(x, PL)
+
+
+def log_str(logical: Tuple[Optional[str], ...]) -> str:
+    """Encode logical axes as a '|'-joined string (strings are pytree LEAVES,
+    tuples are not — this keeps the logical tree congruent to the param tree)."""
+    return "|".join(a or "" for a in logical)
+
+
+def log_parse(s: str) -> Tuple[Optional[str], ...]:
+    return tuple(a if a else None for a in s.split("|")) if s else ()
+
+
+def split_pl(tree):
+    """(params, logical) trees from a tree of PL leaves."""
+    params = jax.tree.map(lambda l: l.arr, tree, is_leaf=is_pl)
+    logical = jax.tree.map(lambda l: log_str(l.logical), tree, is_leaf=is_pl)
+    return params, logical
+
+
+class Maker:
+    """Deterministic param factory: splits keys, applies fan-in init."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+
+    def _next(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def w(self, shape: Sequence[int], logical: Sequence[Optional[str]],
+          fan_in: Optional[int] = None, scale: float = 1.0) -> PL:
+        assert len(shape) == len(logical), (shape, logical)
+        fi = fan_in if fan_in is not None else shape[0]
+        std = scale / math.sqrt(max(fi, 1))
+        arr = (jax.random.normal(self._next(), tuple(shape), jnp.float32) * std
+               ).astype(self.dtype)
+        return PL(arr, tuple(logical))
+
+    def z(self, shape: Sequence[int], logical: Sequence[Optional[str]]) -> PL:
+        assert len(shape) == len(logical)
+        return PL(jnp.zeros(tuple(shape), self.dtype), tuple(logical))
+
+    def ones(self, shape: Sequence[int], logical: Sequence[Optional[str]]) -> PL:
+        assert len(shape) == len(logical)
+        return PL(jnp.ones(tuple(shape), self.dtype), tuple(logical))
+
+    def const(self, value, logical: Sequence[Optional[str]]) -> PL:
+        arr = jnp.asarray(value, self.dtype)
+        return PL(arr, tuple(logical))
+
+
+# --------------------------------------------------------------------------
+# Numerics
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean((h - mu) ** 2, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    return jax.nn.silu(x_gate.astype(jnp.float32)).astype(x_gate.dtype) * x_up
+
+
+def geglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x_gate.astype(jnp.float32)).astype(x_gate.dtype) * x_up
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) rotated pairwise; positions: (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. logits (..., V) fp-any, labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def positional_encoding(x: jax.Array, n_bands: int) -> jax.Array:
+    """NeRF-style PE: concat(x, sin/cos(2^i x)) — also used by the color MLP."""
+    outs = [x]
+    for i in range(n_bands):
+        outs.append(jnp.sin((2.0 ** i) * x))
+        outs.append(jnp.cos((2.0 ** i) * x))
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,203 @@
+"""Mixture-of-Experts with RT-NeRF-style *hybrid sparse dispatch*.
+
+The paper (H1) encodes sparse factors as bitmap (<80% sparsity) or COO
+(>=80%). The token->expert assignment matrix is exactly such a factor with
+sparsity 1 - top_k/E, so the framework offers both dispatch modes:
+
+  "coo"    — sort/gather dispatch (GShard-style, groups = sequences so the
+             expert resharding lowers to all-to-all, not all-gather).
+             DeepSeek-V3: 96.9% sparse -> COO regime.
+  "bitmap" — dense-masked: every token through every expert, gate weights
+             zero out unrouted pairs (seq-chunked so the (T,E,F) intermediate
+             stays bounded). Grok-1: 75% sparse -> bitmap regime per the
+             paper's rule. §Perf revisits whether the 80% ASIC-storage
+             threshold survives TPU compute economics.
+
+Both are numerically equivalent up to capacity drops (property-tested).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Maker, swiglu, geglu
+from repro.models.sharding import shard_act
+
+BITMAP_CHUNK = 256          # tokens per chunk in dense-masked mode
+
+
+def init_moe(mk: Maker, cfg: ModelConfig):
+    d = cfg.d_model
+    dff = cfg.d_ff_expert or cfg.d_ff
+    e = cfg.n_experts
+    p = {
+        "router": mk.w((d, e), ("embed", "experts"), fan_in=d),
+        "w1": mk.w((e, d, dff), ("experts", "embed", "mlp"), fan_in=d),
+        "w2": mk.w((e, dff, d), ("experts", "mlp", "embed"), fan_in=dff),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = mk.w((e, d, dff), ("experts", "embed", "mlp"), fan_in=d)
+    if cfg.n_shared_experts:
+        sdff = dff * cfg.n_shared_experts
+        p["sw1"] = mk.w((d, sdff), ("embed", "mlp"), fan_in=d)
+        p["sw2"] = mk.w((sdff, d), ("mlp", "embed"), fan_in=sdff)
+        if cfg.act in ("swiglu", "geglu"):
+            p["sw3"] = mk.w((d, sdff), ("embed", "mlp"), fan_in=d)
+    return p
+
+
+def _act_fn(cfg):
+    return geglu if cfg.act == "geglu" else swiglu
+
+
+def _expert_ffn(p, cfg: ModelConfig, xin):
+    """xin (..., E, C, D) -> (..., E, C, D), batched over experts."""
+    h1 = jnp.einsum("...ecd,edf->...ecf", xin, p["w1"])
+    if "w3" in p:
+        h = _act_fn(cfg)(h1, jnp.einsum("...ecd,edf->...ecf", xin, p["w3"]))
+    else:
+        h = jax.nn.gelu(h1.astype(jnp.float32)).astype(h1.dtype)
+    return jnp.einsum("...ecf,efd->...ecd", h, p["w2"])
+
+
+def _router_scores(p, cfg: ModelConfig, x):
+    """x (..., D) -> (vals, idx, aux): top-k gates + load-balance aux loss."""
+    logits = jnp.einsum("...d,de->...e", x, p["router"]).astype(jnp.float32)
+    if cfg.name.startswith("deepseek"):
+        scores = jax.nn.sigmoid(logits)            # DeepSeek-V3 sigmoid gates
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(scores, cfg.top_k)
+    vals = vals / jnp.maximum(jnp.sum(vals, axis=-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux: E * mean_e(frac_tokens_e * mean_prob_e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    e = cfg.n_experts
+    sel = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32)   # primary expert
+    frac = jnp.mean(sel.reshape(-1, e), axis=0)
+    mprob = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(frac * mprob)
+    return vals, idx, aux
+
+
+# --------------------------------------------------------------------------
+# COO mode — sort/gather dispatch, grouped per sequence
+# --------------------------------------------------------------------------
+
+
+def _route_one_group(idx, vals, S: int, E: int, C: int):
+    """idx/vals (S,k) -> buf (E,C) token-index (S = empty), wbuf (E,C)."""
+    k = idx.shape[-1]
+    e_flat = idx.reshape(-1)
+    w_flat = vals.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)
+    order = jnp.argsort(e_flat, stable=True)
+    e_s, t_s, w_s = e_flat[order], t_flat[order], w_flat[order]
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts
+    posn = jnp.arange(S * k) - starts[e_s]
+    valid = posn < C
+    e_tgt = jnp.where(valid, e_s, E)               # row E = drop
+    p_tgt = jnp.clip(posn, 0, C - 1)
+    buf = jnp.full((E + 1, C), S, jnp.int32).at[e_tgt, p_tgt].set(t_s, mode="drop")
+    wbuf = jnp.zeros((E + 1, C), w_flat.dtype).at[e_tgt, p_tgt].set(w_s, mode="drop")
+    return buf[:E], wbuf[:E]
+
+
+def moe_forward_coo(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,D). Groups = sequences -> all-to-all dispatch under GSPMD."""
+    B, S, D = x.shape
+    if S == 1:                                     # decode: one group of B
+        out, aux = _moe_coo_grouped(p, cfg, x.reshape(1, B, D), B)
+        return out.reshape(B, S, D), aux
+    return _moe_coo_grouped(p, cfg, x, S)
+
+
+def _moe_coo_grouped(p, cfg, xg, S):
+    G, _, D = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(int(S * k / E * cfg.capacity_factor), k)
+    vals, idx, aux = _router_scores(p, cfg, xg)
+    buf, wbuf = jax.vmap(lambda i, v: _route_one_group(i, v, S, E, C))(idx, vals)
+    x_pad = jnp.concatenate([xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)
+    # keep the gather source and combine target pinned to batch sharding;
+    # an unconstrained scatter output otherwise becomes a REPLICATED global
+    # (G, S+1, D) fp32 buffer + all-reduce — the dominant collective in the
+    # baseline deepseek train cell (EXPERIMENTS.md §Perf iteration 3)
+    x_pad = shard_act(x_pad, "batch", "seq", None)
+    xin = jnp.take_along_axis(
+        x_pad, buf.reshape(G, E * C, 1), axis=1).reshape(G, E, C, D)
+    xin = shard_act(xin, "batch", "experts", "cap", None)
+    y = _expert_ffn(p, cfg, xin)                   # (G,E,C,D)
+    y = y * wbuf[..., None].astype(y.dtype)
+    out0 = shard_act(jnp.zeros((G, S + 1, D), y.dtype), "batch", "seq", None)
+    out = out0.at[
+        jnp.arange(G)[:, None], buf.reshape(G, E * C)
+    ].add(y.reshape(G, E * C, D))
+    out = shard_act(out, "batch", "seq", None)
+    return out[:, :S], aux
+
+
+# --------------------------------------------------------------------------
+# Bitmap mode — dense-masked (all experts), seq-chunked
+# --------------------------------------------------------------------------
+
+
+def moe_forward_bitmap(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    vals, idx, aux = _router_scores(p, cfg, x)     # (B,S,k)
+    # dense gate matrix (B,S,E) — the "bitmap" with weights
+    gates = jnp.zeros((B, S, E), jnp.float32).at[
+        jnp.arange(B)[:, None, None],
+        jnp.arange(S)[None, :, None],
+        idx,
+    ].set(vals)
+
+    Cc = min(BITMAP_CHUNK, S)
+    n = (S + Cc - 1) // Cc
+    Sp = n * Cc
+    if Sp != S:
+        x = jnp.pad(x, ((0, 0), (0, Sp - S), (0, 0)))
+        gates = jnp.pad(gates, ((0, 0), (0, Sp - S), (0, 0)))
+    xc = x.reshape(B, n, Cc, D).transpose(1, 0, 2, 3)
+    gc = gates.reshape(B, n, Cc, E).transpose(1, 0, 2, 3)
+
+    def body(_, xs):
+        xj, gj = xs                                # (B,Cc,D), (B,Cc,E)
+        h1 = jnp.einsum("bcd,edf->becf", xj, p["w1"])
+        if "w3" in p:
+            h = _act_fn(cfg)(h1, jnp.einsum("bcd,edf->becf", xj, p["w3"]))
+        else:
+            h = jax.nn.gelu(h1.astype(jnp.float32)).astype(h1.dtype)
+        ye = jnp.einsum("becf,efd->becd", h, p["w2"])
+        yj = jnp.einsum("becd,bce->bcd", ye, gj.astype(ye.dtype))
+        return None, yj
+
+    _, yc = jax.lax.scan(body, None, (xc, gc))
+    y = yc.transpose(1, 0, 2, 3).reshape(B, Sp, D)[:, :S]
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# entry point
+# --------------------------------------------------------------------------
+
+
+def moe_forward(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    mode = cfg.resolved_dispatch()
+    out, aux = (moe_forward_coo if mode == "coo" else moe_forward_bitmap)(p, cfg, x)
+    if cfg.moe_out_shard:
+        # pin the combine output to batch sharding so the partial-sum reduce
+        # over the expert (model) axis happens HERE, once, at bf16 width
+        out = shard_act(out, "batch", "seq", None)
+    if cfg.n_shared_experts:
+        h1 = jnp.einsum("bsd,df->bsf", x, p["sw1"])
+        if "sw3" in p:
+            h = _act_fn(cfg)(h1, jnp.einsum("bsd,df->bsf", x, p["sw3"]))
+        else:
+            h = jax.nn.gelu(h1.astype(jnp.float32)).astype(h1.dtype)
+        out = out + jnp.einsum("bsf,fd->bsd", h, p["sw2"])
+    return out, aux

@@ -1,0 +1,142 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Decode state per layer: {"shift_t", "shift_c": (B,D), "wkv": (B,H,hd,hd)} —
+constant-size, which is what makes rwkv6 the long_500k reference arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Maker, layer_norm
+
+DDLERP_RANK = 32
+DECAY_RANK = 64
+N_MIX = 5  # r, k, v, g, w
+
+
+def init_rwkv6(mk: Maker, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = cfg.resolved_head_dim
+    return {
+        "ln1_g": mk.ones((d,), ("embed",)), "ln1_b": mk.z((d,), ("embed",)),
+        "ln2_g": mk.ones((d,), ("embed",)), "ln2_b": mk.z((d,), ("embed",)),
+        # --- time mix ---
+        "mu_base": mk.z((d,), ("embed",)),
+        "mu": mk.z((N_MIX, d), (None, "embed")),
+        "w_a1": mk.w((d, N_MIX * DDLERP_RANK), ("embed", None), fan_in=d),
+        "w_a2": mk.w((N_MIX, DDLERP_RANK, d), (None, None, "embed"), fan_in=DDLERP_RANK),
+        "wr": mk.w((d, h, hd), ("embed", "heads", "head_dim"), fan_in=d),
+        "wk": mk.w((d, h, hd), ("embed", "heads", "head_dim"), fan_in=d),
+        "wv": mk.w((d, h, hd), ("embed", "heads", "head_dim"), fan_in=d),
+        "wg": mk.w((d, h, hd), ("embed", "heads", "head_dim"), fan_in=d),
+        "w0": mk.const(jnp.zeros(d) - 4.0, ("embed",)),        # decay bias
+        "ww1": mk.w((d, DECAY_RANK), ("embed", None), fan_in=d),
+        "ww2": mk.w((DECAY_RANK, d), (None, "embed"), fan_in=DECAY_RANK),
+        "u": mk.z((h, hd), ("heads", "head_dim")),             # bonus
+        "gn_g": mk.ones((h, hd), ("heads", "head_dim")),
+        "gn_b": mk.z((h, hd), ("heads", "head_dim")),
+        "wo": mk.w((h, hd, d), ("heads", "head_dim", "embed"), fan_in=d),
+        # --- channel mix ---
+        "cmu_k": mk.z((d,), ("embed",)),
+        "cmu_r": mk.z((d,), ("embed",)),
+        "cwk": mk.w((d, cfg.d_ff), ("embed", "mlp"), fan_in=d),
+        "cwv": mk.w((cfg.d_ff, d), ("mlp", "embed"), fan_in=cfg.d_ff),
+        "cwr": mk.w((d, d), ("embed", "embed"), fan_in=d),
+    }
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent token-shift mixes. x,xx (B,S,D) -> 5 mixed tensors."""
+    base = x + xx * p["mu_base"]
+    a = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, p["w_a1"]).astype(jnp.float32))
+    a = a.reshape(*a.shape[:-1], N_MIX, DDLERP_RANK)
+    off = jnp.einsum("bsmr,mrd->bsmd", a.astype(x.dtype), p["w_a2"])
+    mix = p["mu"][None, None] + off                        # (B,S,5,D)
+    return [x + xx * mix[..., i, :] for i in range(N_MIX)]
+
+
+def _decay(p, xw):
+    w = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dr->bsr", xw, p["ww1"]).astype(jnp.float32) @ p["ww2"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(w))                            # (B,S,D) in (0,1)
+
+
+def _group_norm(y, g, b, eps):
+    """Per-head layer norm. y (B,S,H,hd)."""
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.mean((yf - mu) ** 2, axis=-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + eps)
+    return (yf * g.astype(jnp.float32) + b.astype(jnp.float32)).astype(y.dtype)
+
+
+def _time_mix(p, cfg, x, shift_prev, wkv0):
+    """x (B,S,D) post-ln. Returns (out, last_x, wkv_state)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    x_prev = jnp.concatenate([shift_prev[:, None], x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xr, xk, xv, xg, xw = _ddlerp(p, x, xx)
+    r = jnp.einsum("bsd,dhe->bshe", xr, p["wr"])
+    k = jnp.einsum("bsd,dhe->bshe", xk, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", xv, p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,dhe->bshe", xg, p["wg"]).astype(jnp.float32))
+    w = _decay(p, xw).reshape(B, S, H, hd)
+
+    def step(s_wkv, inp):
+        rt, kt, vt, wt = inp                              # (B,H,hd) fp32
+        att = s_wkv + (p["u"].astype(jnp.float32) * kt)[..., :, None] * vt[..., None, :]
+        yt = jnp.einsum("bhij,bhi->bhj", att, rt)
+        s_wkv = wt[..., :, None] * s_wkv + kt[..., :, None] * vt[..., None, :]
+        return s_wkv, yt
+
+    tr = lambda t: t.transpose(1, 0, 2, 3).astype(jnp.float32)
+    s_last, ys = jax.lax.scan(step, wkv0, (tr(r), tr(k), tr(v), tr(w)))
+    y = ys.transpose(1, 0, 2, 3)                          # (B,S,H,hd) fp32
+    y = _group_norm(y, p["gn_g"], p["gn_b"], cfg.norm_eps)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", y, p["wo"])
+    return out, x[:, -1], s_last
+
+
+def _channel_mix(p, x, shift_prev):
+    x_prev = jnp.concatenate([shift_prev[:, None], x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * p["cmu_k"]
+    xr = x + xx * p["cmu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["cwk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cwv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cwr"]).astype(jnp.float32))
+    return (r * kv.astype(jnp.float32)).astype(x.dtype), x[:, -1]
+
+
+def rwkv6_forward(p, cfg: ModelConfig, x, state=None):
+    """x (B,S,D). state None (train) or decode state dict. Returns (x, state)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    if state is None:
+        state = {
+            "shift_t": jnp.zeros((B, D), x.dtype),
+            "shift_c": jnp.zeros((B, D), x.dtype),
+            "wkv": jnp.zeros((B, H, hd, hd), jnp.float32),
+        }
+    h1 = layer_norm(x, p["ln1_g"], p["ln1_b"], cfg.norm_eps)
+    att, sh_t, wkv = _time_mix(p, cfg, h1, state["shift_t"], state["wkv"])
+    x = x + att
+    h2 = layer_norm(x, p["ln2_g"], p["ln2_b"], cfg.norm_eps)
+    ffn, sh_c = _channel_mix(p, h2, state["shift_c"])
+    x = x + ffn
+    return x, {"shift_t": sh_t, "shift_c": sh_c, "wkv": wkv}
+
+
+def rwkv6_state_shape(cfg: ModelConfig, batch: int):
+    hd = cfg.resolved_head_dim
+    return {
+        "shift_t": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.bfloat16),
+        "shift_c": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.bfloat16),
+        "wkv": jax.ShapeDtypeStruct((batch, cfg.n_heads, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,173 @@
+"""Logical-axis -> mesh-axis resolution.
+
+Params and activations carry *logical* axis names ("embed", "mlp", "heads",
+"vocab", "experts", "batch", "seq", ...). `AxisRules` maps each logical name
+to a mesh axis (or tuple of axes). `resolve_spec` greedily assigns mesh axes
+left-to-right over a tensor's dims, dropping an assignment when
+
+  (a) the mesh axis is already used by an earlier dim of the same tensor, or
+  (b) the dim size does not divide the mesh-axis size.
+
+Rule (b) is what makes one rule-set serve all 10 archs: qwen1.5's 40 heads or
+granite-34b's single KV head simply fall back to replication on that dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisEntry = Union[str, Tuple[str, ...], None]
+
+# Default rules for the production meshes. `batch` spans the pure-data axes
+# (pod + data on the multi-pod mesh); `embed` is the FSDP/ZeRO-3 param axis.
+DEFAULT_PARAM_RULES: Dict[str, AxisEntry] = {
+    "embed": "data",        # FSDP: shard d_model of weights over data
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "experts": "model",
+    # q_lora is a CONTRACTION dim of the up-projections; sharding it forces
+    # an all-reduce of the full (B,S,H,e) q tensor every layer (§Perf iter 3)
+    "q_lora": None,
+    "kv_lora": None,
+    "head_dim": None,
+    "state": None,
+    "stack": None,          # layer-stack axis of scanned params
+}
+
+DEFAULT_ACT_RULES: Dict[str, AxisEntry] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "experts": "model",
+    "cap": None,
+    "head_dim": None,
+    "state": None,
+    "seq_model": "model",   # sequence-parallel attention (qwen / long ctx)
+}
+
+
+@dataclasses.dataclass
+class AxisRules:
+    mesh: Mesh
+    param_rules: Dict[str, AxisEntry]
+    act_rules: Dict[str, AxisEntry]
+
+    def axis_size(self, entry: AxisEntry) -> int:
+        if entry is None:
+            return 1
+        names = (entry,) if isinstance(entry, str) else entry
+        n = 1
+        for a in names:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def make_rules(mesh: Mesh,
+               param_overrides: Optional[Dict[str, AxisEntry]] = None,
+               act_overrides: Optional[Dict[str, AxisEntry]] = None) -> AxisRules:
+    pr = dict(DEFAULT_PARAM_RULES)
+    ar = dict(DEFAULT_ACT_RULES)
+    mesh_axes = set(mesh.axis_names)
+    if "pod" not in mesh_axes:
+        ar["batch"] = "data"
+    else:
+        # on multi-pod meshes, shard FSDP params over (pod, data)
+        pr["embed"] = ("pod", "data")
+    if param_overrides:
+        pr.update(param_overrides)
+    if act_overrides:
+        ar.update(act_overrides)
+    return AxisRules(mesh=mesh, param_rules=pr, act_rules=ar)
+
+
+def resolve_spec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 rules: Dict[str, AxisEntry], ar: AxisRules, fill=None) -> P:
+    """Greedy left-to-right assignment with divisibility + reuse checks.
+
+    `fill` is what unresolved dims get: None (replicated — params, which must
+    be fully specified for in_shardings) or P.UNCONSTRAINED (activations —
+    let GSPMD propagate from the weights, e.g. grok's 8 kv-heads on a 16-way
+    model axis).
+    """
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        entry = rules.get(name) if name else None
+        if entry is None:
+            parts.append(fill)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        # drop axes already used by this tensor
+        names = tuple(a for a in names if a not in used and a in ar.mesh.shape)
+        size = 1
+        for a in names:
+            size *= ar.mesh.shape[a]
+        if not names or size <= 1 or dim % size != 0:
+            parts.append(fill)
+            continue
+        used.update(names)
+        parts.append(names[0] if len(names) == 1 else names)
+    return P(*parts)
+
+
+def param_sharding(params, logical, rules: AxisRules):
+    """NamedSharding tree for a param tree + its logical tree (string leaves,
+    see common.log_str; scalars with empty logical are replicated)."""
+    from repro.models.common import log_parse
+
+    def one(arr, log):
+        axes = log_parse(log) if isinstance(log, str) else tuple(log)
+        if len(axes) != len(arr.shape):
+            axes = (None,) * len(arr.shape)
+        spec = resolve_spec(arr.shape, axes, rules.param_rules, rules)
+        return NamedSharding(rules.mesh, spec)
+    return jax.tree.map(one, params, logical)
+
+
+# --------------------------------------------------------------------------
+# Activation constraints — a thread-local rules context so model code can be
+# written once and run with or without a mesh (CPU smoke tests set no rules).
+# --------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+class use_rules:
+    def __init__(self, rules: Optional[AxisRules]):
+        self.rules = rules
+
+    def __enter__(self):
+        self.prev = getattr(_CTX, "rules", None)
+        _CTX.rules = self.rules
+        return self.rules
+
+    def __exit__(self, *exc):
+        _CTX.rules = self.prev
+        return False
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_CTX, "rules", None)
+
+
+def shard_act(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding; no-op outside a rules context."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"logical {logical} vs shape {x.shape}")
+    spec = resolve_spec(x.shape, logical, rules.act_rules, rules,
+                        fill=P.UNCONSTRAINED)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

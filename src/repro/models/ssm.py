@@ -1,0 +1,196 @@
+"""Mamba2 (SSD) block — zamba2's trunk.
+
+Baseline `ssm_impl="scan"` is a per-step recurrence (faithful, simple);
+`ssm_impl="chunked"` is the matmul-heavy chunk-parallel SSD form used by the
+perf pass (MXU-friendly). Both validated against each other in tests.
+
+State: h (B, nH, hd, N); conv state (B, conv_w-1, d_conv_channels).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Maker
+
+SSD_CHUNK = 128
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_state
+    return d_in, nh, conv_ch
+
+
+def init_mamba2(mk: Maker, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    n = cfg.ssm_state
+    return {
+        "in_proj": mk.w((d, 2 * d_in + 2 * n + nh), ("embed", "mlp"), fan_in=d),
+        "conv_w": mk.w((cfg.ssm_conv, conv_ch), (None, "mlp"), fan_in=cfg.ssm_conv),
+        "conv_b": mk.z((conv_ch,), ("mlp",)),
+        "a_log": mk.const(jnp.zeros(nh) + 0.5, (None,)),
+        "d_skip": mk.ones((nh,), (None,)),
+        "dt_bias": mk.z((nh,), (None,)),
+        "norm": mk.ones((d_in,), ("mlp",)),
+        "out_proj": mk.w((d_in, d), ("mlp", "embed"), fan_in=d_in),
+    }
+
+
+def _split_proj(p, cfg, zxbcdt):
+    d_in, nh, _ = ssm_dims(cfg)
+    n = cfg.ssm_state
+    z = zxbcdt[..., :d_in]
+    xs = zxbcdt[..., d_in:2 * d_in]
+    b = zxbcdt[..., 2 * d_in:2 * d_in + n]
+    c = zxbcdt[..., 2 * d_in + n:2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, xs, b, c, dt
+
+
+def _causal_conv(xbc, w, bias, conv_state=None):
+    """Depthwise causal conv. xbc (B,S,C); w (K,C). Returns (y, new_state)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(K)) + bias
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def _gated_norm(y, z, gamma, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return (yf * gamma.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_forward(p, cfg: ModelConfig, x, *, impl: str = "scan"):
+    """Train/prefill. x (B,S,D) -> (y, final_state_dict)."""
+    B, S, D = x.shape
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    n, hd = cfg.ssm_state, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xs, b, c, dt_raw = _split_proj(p, cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(
+        jnp.concatenate([xs, b, c], axis=-1), p["conv_w"], p["conv_b"])
+    xs, b, c = xbc[..., :d_in], xbc[..., d_in:d_in + n], xbc[..., d_in + n:]
+    xh = xs.reshape(B, S, nh, hd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    da = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt)      # (B,S,nh)
+
+    if impl == "chunked":
+        y, h_last = _ssd_chunked(xh, b, c, dt, da)
+    else:
+        def step(h, inp):
+            xt, bt, ct, dtt, dat = inp
+            h = h * dat[:, :, None, None] + (dtt[:, :, None] * xt)[..., None] \
+                * bt[:, None, None, :]
+            yt = jnp.einsum("bhdn,bn->bhd", h, ct)
+            return h, yt
+        h0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+        xsw = (xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+               b.transpose(1, 0, 2).astype(jnp.float32),
+               c.transpose(1, 0, 2).astype(jnp.float32),
+               dt.transpose(1, 0, 2), da.transpose(1, 0, 2))
+        h_last, ys = jax.lax.scan(step, h0, xsw)
+        y = ys.transpose(1, 0, 2, 3)                                  # (B,S,nh,hd)
+
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    state = {"h": h_last.astype(jnp.float32), "conv": conv_state}
+    return out, state
+
+
+def _ssd_chunked(xh, b, c, dt, da):
+    """Chunk-parallel SSD. xh (B,S,nh,hd); b,c (B,S,n); dt,da (B,S,nh) fp32.
+
+    Within a chunk: y_intra via a decay-weighted quadratic form; across
+    chunks: carry h with per-chunk decay. All contractions are matmuls.
+    """
+    B, S, nh, hd = xh.shape
+    n = b.shape[-1]
+    C = min(SSD_CHUNK, S)
+    nc = (S + C - 1) // C
+    Sp = nc * C
+    pad = Sp - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+
+    def rs(t):  # (B,Sp,...) -> (nc,B,C,...)
+        return t.reshape(B, nc, C, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    xc, bc_, cc, dtc, dac = rs(xh.astype(jnp.float32)), rs(b.astype(jnp.float32)), \
+        rs(c.astype(jnp.float32)), rs(dt), rs(da)
+
+    def chunk(h, inp):
+        xj, bj, cj, dtj, daj = inp                 # (B,C,...)
+        logd = jnp.log(jnp.maximum(daj, 1e-38))
+        cum = jnp.cumsum(logd, axis=1)             # (B,C,nh)
+        # intra-chunk: y[t] = sum_{s<=t} exp(cum_t - cum_s) dt_s (c_t.b_s) x_s
+        w = cum[:, :, None, :] - cum[:, None, :, :]            # (B,C,C,nh)
+        mask = jnp.tril(jnp.ones((C, C), bool))
+        g = jnp.where(mask[None, :, :, None], jnp.exp(w), 0.0)  # decay matrix
+        cb = jnp.einsum("btn,bsn->bts", cj, bj)                 # (B,C,C)
+        m = cb[:, :, :, None] * g * dtj[:, None, :, :]          # (B,C,C,nh)
+        y_intra = jnp.einsum("btsh,bshd->bthd", m, xj)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum("bhdn,btn->bthd", h, cj).transpose(0, 1, 2, 3)
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)            # (B,C,nh)
+        hb = jnp.einsum("bth,bthd,btn->bhdn", dtj * decay_to_end, xj, bj)
+        h = h * jnp.exp(cum[:, -1])[:, :, None, None] + hb
+        return h, y_intra + y_inter
+
+    h0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+    h_last, yc = jax.lax.scan(chunk, h0, (xc, bc_, cc, dtc, dac))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, Sp, nh, hd)[:, :S]
+    return y, h_last
+
+
+def mamba2_decode(p, cfg: ModelConfig, x1, state) -> Tuple[jax.Array, dict]:
+    """One token. x1 (B,1,D); state {"h","conv"}."""
+    B = x1.shape[0]
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    n, hd = cfg.ssm_state, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x1, p["in_proj"])
+    z, xs, b, c, dt_raw = _split_proj(p, cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(
+        jnp.concatenate([xs, b, c], axis=-1), p["conv_w"], p["conv_b"],
+        conv_state=state["conv"])
+    xs, b, c = xbc[..., :d_in], xbc[..., d_in:d_in + n], xbc[..., d_in + n:]
+    xt = xs.reshape(B, nh, hd).astype(jnp.float32)
+    bt = b[:, 0].astype(jnp.float32)
+    ct = c[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    da = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt)
+    h = state["h"] * da[:, :, None, None] + (dt[:, :, None] * xt)[..., None] * bt[:, None, None, :]
+    y = jnp.einsum("bhdn,bn->bhd", h, ct)
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xt
+    y = y.reshape(B, 1, d_in).astype(x1.dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"h": h, "conv": conv_state}
+
+
+def mamba2_state_shape(cfg: ModelConfig, batch: int):
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    return {
+        "h": jax.ShapeDtypeStruct((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                                  jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch),
+                                     jnp.bfloat16),
+    }

@@ -1,0 +1,617 @@
+"""Model assembly for all 10 assigned architectures.
+
+Every trunk is a `lax.scan` over stacked layer params (compile time O(1) in
+depth; remat policy applied to the scan body). Entry points:
+
+  init_model(cfg, key)                       -> PL tree (params + logical)
+  model_loss(params, cfg, batch)             -> (loss, metrics)      [train]
+  model_prefill(params, cfg, batch)          -> (last_logits, cache) [serve]
+  model_decode(params, cfg, token, pos, cache) -> (logits, cache)    [serve]
+  serve_cache_spec(cfg, batch, seq)          -> (shape_tree, logical_tree)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (Maker, PL, cross_entropy, geglu, is_pl,
+                                 rms_norm, split_pl, swiglu)
+from repro.models.sharding import shard_act
+
+# window kicks in only for long-context decode (DESIGN.md §5, zamba2 deviation)
+WINDOW_MIN_SEQ = 131_072
+
+
+# --------------------------------------------------------------------------
+# layer init
+# --------------------------------------------------------------------------
+
+
+def _init_mlp(mk: Maker, cfg: ModelConfig, d_ff: int):
+    d = cfg.d_model
+    p = {"w1": mk.w((d, d_ff), ("embed", "mlp"), fan_in=d),
+         "w2": mk.w((d_ff, d), ("mlp", "embed"), fan_in=d_ff)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = mk.w((d, d_ff), ("embed", "mlp"), fan_in=d)
+    return p
+
+
+def _init_dense_layer(key, cfg: ModelConfig, *, cross: bool = False):
+    mk = Maker(key)
+    p = {"ln1": mk.ones((cfg.d_model,), ("embed",)),
+         "attn": attn_lib.init_attention(mk, cfg),
+         "ln2": mk.ones((cfg.d_model,), ("embed",)),
+         "mlp": _init_mlp(mk, cfg, cfg.d_ff)}
+    if cross:
+        p["lnx"] = mk.ones((cfg.d_model,), ("embed",))
+        p["xattn"] = attn_lib.init_gqa(mk, cfg)
+    return p
+
+
+def _init_moe_layer(key, cfg: ModelConfig):
+    mk = Maker(key)
+    return {"ln1": mk.ones((cfg.d_model,), ("embed",)),
+            "attn": attn_lib.init_attention(mk, cfg),
+            "ln2": mk.ones((cfg.d_model,), ("embed",)),
+            "moe": moe_lib.init_moe(mk, cfg)}
+
+
+def _init_mamba_layer(key, cfg: ModelConfig):
+    mk = Maker(key)
+    return {"ln": mk.ones((cfg.d_model,), ("embed",)),
+            "mamba": ssm_lib.init_mamba2(mk, cfg)}
+
+
+def _init_rwkv_layer(key, cfg: ModelConfig):
+    mk = Maker(key)
+    return rwkv_lib.init_rwkv6(mk, cfg)
+
+
+def _init_stack(key, cfg, layer_init, n: int):
+    """Stacked layer params via vmap; logical gets a leading 'stack' axis."""
+    keys = jax.random.split(key, n)
+    one = layer_init(keys[0], cfg)
+    _, logical = split_pl(one)
+    arrays = jax.vmap(lambda k: split_pl(layer_init(k, cfg))[0])(keys)
+    return jax.tree.map(
+        lambda a, s: PL(a, ("stack",) + tuple(x if x else None for x in s.split("|"))),
+        arrays, logical)
+
+
+def init_model(cfg: ModelConfig, key) -> Dict[str, Any]:
+    mk = Maker(jax.random.fold_in(key, 0))
+    d, Vp = cfg.d_model, cfg.vocab_padded
+    p: Dict[str, Any] = {
+        "embed": mk.w((Vp, d), ("vocab", "embed"), fan_in=d),
+        "final_norm": mk.ones((d,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = mk.w((d, Vp), ("embed", "vocab"), fan_in=d)
+
+    kt = jax.random.fold_in(key, 1)
+    if cfg.family == "ssm":
+        p["layers"] = _init_stack(kt, cfg, _init_rwkv_layer, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        p["mamba"] = _init_stack(kt, cfg, _init_mamba_layer, cfg.n_layers)
+        p["shared"] = _init_dense_layer(jax.random.fold_in(key, 2), cfg)
+    elif cfg.enc_dec:
+        p["enc"] = _init_stack(kt, cfg, _init_dense_layer, cfg.n_enc_layers)
+        p["enc_norm"] = mk.ones((d,), ("embed",))
+        p["dec"] = _init_stack(
+            jax.random.fold_in(key, 2), cfg,
+            functools.partial(_init_dense_layer, cross=True), cfg.n_layers)
+    elif cfg.is_moe:
+        nd = cfg.n_dense_layers
+        if nd:
+            p["dense_layers"] = _init_stack(kt, cfg, _init_dense_layer, nd)
+        p["moe_layers"] = _init_stack(
+            jax.random.fold_in(key, 2), cfg, _init_moe_layer, cfg.n_layers - nd)
+    else:
+        p["layers"] = _init_stack(kt, cfg, _init_dense_layer, cfg.n_layers)
+
+    if cfg.mtp:
+        mk2 = Maker(jax.random.fold_in(key, 3))
+        p["mtp"] = {
+            "norm_h": mk2.ones((d,), ("embed",)),
+            "norm_e": mk2.ones((d,), ("embed",)),
+            "proj": mk2.w((2 * d, d), ("embed", "embed"), fan_in=2 * d),
+            "layer": _init_dense_layer(jax.random.fold_in(key, 4), cfg),
+        }
+    return p
+
+
+# --------------------------------------------------------------------------
+# layer forward
+# --------------------------------------------------------------------------
+
+
+def _mlp_fwd(p, cfg: ModelConfig, x):
+    h1 = jnp.einsum("bsd,df->bsf", x, p["w1"])
+    h1 = shard_act(h1, "batch", "seq", "mlp")
+    if "w3" in p:
+        act = geglu if cfg.act == "geglu" else swiglu
+        h = act(h1, jnp.einsum("bsd,df->bsf", x, p["w3"]))
+    else:
+        h = jax.nn.gelu(h1.astype(jnp.float32)).astype(h1.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+def _dense_layer_fwd(lp, cfg, x, positions, *, causal=True, window=0,
+                     memory=None, return_cache=False):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, cache = attn_lib.attention_forward(
+        lp["attn"], cfg, h, positions, causal=causal, window=window,
+        return_cache=return_cache)
+    x = x + a
+    if memory is not None:
+        xh = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + attn_lib.cross_forward(lp["xattn"], cfg, xh, memory)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + _mlp_fwd(lp["mlp"], cfg, h)
+    x = shard_act(x, "batch", "seq", None)
+    return x, cache
+
+
+def _moe_layer_fwd(lp, cfg, x, positions, *, return_cache=False):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, cache = attn_lib.attention_forward(lp["attn"], cfg, h, positions,
+                                          return_cache=return_cache)
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m, aux = moe_lib.moe_forward(lp["moe"], cfg, h)
+    x = x + m
+    x = shard_act(x, "batch", "seq", None)
+    return x, aux, cache
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------
+# trunks (train / prefill): return (h, aux, cache_tree)
+# --------------------------------------------------------------------------
+
+
+def _scan_dense(stack, cfg, x, positions, *, memory=None, window=0,
+                collect_cache=False):
+    def body(carry, lp):
+        y, cache = _dense_layer_fwd(lp, cfg, carry, positions, window=window,
+                                    memory=memory, return_cache=collect_cache)
+        return y, cache
+    x, caches = jax.lax.scan(_remat(body, cfg), x, stack)
+    return x, caches
+
+
+def _scan_moe(stack, cfg, x, positions, *, collect_cache=False):
+    def body(carry, lp):
+        y, aux, cache = _moe_layer_fwd(lp, cfg, carry[0], positions,
+                                       return_cache=collect_cache)
+        return (y, carry[1] + aux), cache
+    (x, aux), caches = jax.lax.scan(_remat(body, cfg), (x, jnp.float32(0)), stack)
+    return x, aux, caches
+
+
+def _scan_encoder(stack, cfg, x, positions):
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        a, _ = attn_lib.gqa_forward(lp["attn"], cfg, h, positions, causal=False)
+        y = carry + a
+        h = rms_norm(y, lp["ln2"], cfg.norm_eps)
+        y = y + _mlp_fwd(lp["mlp"], cfg, h)
+        return y, None
+    x, _ = jax.lax.scan(_remat(body, cfg), x, stack)
+    return x
+
+
+def _hybrid_groups(cfg: ModelConfig):
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    trailing = cfg.n_layers - n_groups * g
+    return g, n_groups, trailing
+
+
+def _split_hybrid_stack(stack, cfg):
+    g, n_groups, trailing = _hybrid_groups(cfg)
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * g].reshape(n_groups, g, *a.shape[1:]), stack)
+    tail = jax.tree.map(lambda a: a[n_groups * g:], stack)
+    return grouped, tail
+
+
+def _mamba_block(lp, cfg, x, impl):
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    y, state = ssm_lib.mamba2_forward(lp["mamba"], cfg, h, impl=impl)
+    return x + y, state
+
+
+def _hybrid_trunk(params, cfg, x, positions, impl=None):
+    impl = impl or cfg.ssm_impl
+    grouped, tail = _split_hybrid_stack(params["mamba"], cfg)
+    shared = params["shared"]
+
+    def inner(carry, lp):
+        y, _ = _mamba_block(lp, cfg, carry, impl)
+        return y, None
+
+    def group_body(carry, lp_group):
+        y, _ = jax.lax.scan(inner, carry, lp_group)
+        y, _ = _dense_layer_fwd(shared, cfg, y, positions)
+        return y, None
+
+    x, _ = jax.lax.scan(_remat(group_body, cfg), x, grouped)
+    _, _, trailing = _hybrid_groups(cfg)
+    if trailing:
+        x, _ = jax.lax.scan(_remat(inner, cfg), x, tail)
+    return x
+
+
+def _rwkv_trunk(params, cfg, x):
+    def body(carry, lp):
+        y, _ = rwkv_lib.rwkv6_forward(lp, cfg, carry)
+        return y, None
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["layers"])
+    return x
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+
+
+def _embed(params, cfg, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    return shard_act(e, "batch", "seq", None)
+
+
+def _logits(params, cfg, h):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        lg = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        lg = jnp.einsum("bsd,dv->bsv", h, params["head"])
+    return shard_act(lg, "batch", "seq", "vocab")
+
+
+def _assemble_input(params, cfg, batch):
+    """tokens (+ stub frontend embeddings) -> (x, positions)."""
+    x = _embed(params, cfg, batch["tokens"])
+    if cfg.frontend and "frontend" in batch:
+        x = jnp.concatenate([batch["frontend"].astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    return x, jnp.arange(S)
+
+
+def _trunk(params, cfg, x, positions, *, memory=None, window=0):
+    """Train/prefill trunk dispatch. Returns (h, aux_loss, caches|None)."""
+    aux = jnp.float32(0)
+    caches = None
+    if cfg.family == "ssm":
+        h = _rwkv_trunk(params, cfg, x)
+    elif cfg.family == "hybrid":
+        h = _hybrid_trunk(params, cfg, x, positions)
+    elif cfg.enc_dec:
+        h, caches = _scan_dense(params["dec"], cfg, x, positions, memory=memory)
+    elif cfg.is_moe:
+        if cfg.n_dense_layers:
+            x, _ = _scan_dense(params["dense_layers"], cfg, x, positions)
+        h, aux, caches = _scan_moe(params["moe_layers"], cfg, x, positions)
+    else:
+        h, caches = _scan_dense(params["layers"], cfg, x, positions, window=window)
+    return h, aux, caches
+
+
+# --------------------------------------------------------------------------
+# training loss
+# --------------------------------------------------------------------------
+
+MOE_AUX_WEIGHT = 0.01
+MTP_WEIGHT = 0.3
+
+
+def model_loss(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict]:
+    memory = None
+    if cfg.enc_dec:
+        frames = shard_act(batch["enc_frames"].astype(jnp.bfloat16),
+                           "batch", "seq", None)
+        memory = _scan_encoder(params["enc"], cfg, frames,
+                               jnp.arange(frames.shape[1]))
+        memory = rms_norm(memory, params["enc_norm"], cfg.norm_eps)
+    x, positions = _assemble_input(params, cfg, batch)
+    h, aux, _ = _trunk(params, cfg, x, positions, memory=memory)
+    logits = _logits(params, cfg, h)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    ce = cross_entropy(logits, labels, mask)
+    loss = ce + MOE_AUX_WEIGHT * aux
+
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp:
+        mtp = params["mtp"]
+        hn = rms_norm(h[:, :-1], mtp["norm_h"], cfg.norm_eps)
+        # teacher token t+1 embedding predicts token t+2
+        nxt = _embed(params, cfg, batch["tokens"][:, 1:])
+        if cfg.frontend and "frontend" in batch:   # align to h positions
+            nxt = jnp.concatenate([batch["frontend"].astype(nxt.dtype), nxt],
+                                  axis=1)[:, : hn.shape[1]]
+        en = rms_norm(nxt[:, : hn.shape[1]], mtp["norm_e"], cfg.norm_eps)
+        hm = jnp.einsum("bsd,de->bse", jnp.concatenate([hn, en], axis=-1),
+                        mtp["proj"])
+        hm, _ = _dense_layer_fwd(mtp["layer"], cfg, hm, positions[:-1])
+        mtp_logits = _logits(params, cfg, hm)
+        mtp_labels = labels[:, 1:]
+        mtp_mask = mask[:, 1:] if mask is not None else None
+        mtp_ce = cross_entropy(mtp_logits, mtp_labels, mtp_mask)
+        loss = loss + MTP_WEIGHT * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+
+def model_prefill(params, cfg: ModelConfig, batch):
+    """Full-prompt forward; returns (last_logits, cache)."""
+    memory = None
+    if cfg.enc_dec:
+        frames = batch["enc_frames"].astype(jnp.bfloat16)
+        memory = _scan_encoder(params["enc"], cfg, frames,
+                               jnp.arange(frames.shape[1]))
+        memory = rms_norm(memory, params["enc_norm"], cfg.norm_eps)
+    x, positions = _assemble_input(params, cfg, batch)
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            y, st = rwkv_lib.rwkv6_forward(lp, cfg, carry)
+            return y, st
+        h, states = jax.lax.scan(body, x, params["layers"])
+        cache = {"layers": states, "memory": None}
+    elif cfg.family == "hybrid":
+        h, cache = _hybrid_prefill(params, cfg, x, positions)
+    elif cfg.enc_dec:
+        def ed_body(carry, lp):
+            y, kv = _dense_layer_fwd(lp, cfg, carry, positions, memory=memory,
+                                     return_cache=True)
+            xkv = attn_lib.cross_kv(lp["xattn"], memory)
+            return y, (kv, xkv)
+        h, (kv, xkv) = jax.lax.scan(ed_body, x, params["dec"])
+        cache = {"layers": kv, "xkv": {"k": xkv[0], "v": xkv[1]}, "memory": None}
+    elif cfg.is_moe:
+        nd = cfg.n_dense_layers
+        dkv = None
+        if nd:
+            x, dkv = _scan_dense(params["dense_layers"], cfg, x, positions,
+                                 collect_cache=True)
+        h, _, mkv = _scan_moe(params["moe_layers"], cfg, x, positions,
+                              collect_cache=True)
+        cache = {"dense": dkv, "moe": mkv, "memory": None}
+    else:
+        h, kv = _scan_dense(params["layers"], cfg, x, positions,
+                            collect_cache=True)
+        cache = {"layers": kv, "memory": None}
+    logits = _logits(params, cfg, h[:, -1:])
+    return logits, cache
+
+
+def _hybrid_prefill(params, cfg, x, positions):
+    grouped, tail = _split_hybrid_stack(params["mamba"], cfg)
+    shared = params["shared"]
+
+    def inner(carry, lp):
+        y, st = _mamba_block(lp, cfg, carry, "scan")
+        return y, st
+
+    def group_body(carry, lp_group):
+        y, sts = jax.lax.scan(inner, carry, lp_group)
+        y, kv = _dense_layer_fwd(shared, cfg, y, positions, return_cache=True)
+        return y, (sts, kv)
+
+    x, (m_states, a_kv) = jax.lax.scan(group_body, x, grouped)
+    _, _, trailing = _hybrid_groups(cfg)
+    if trailing:
+        x, t_states = jax.lax.scan(inner, x, tail)
+    else:
+        t_states = None
+    return x, {"mamba_g": m_states, "attn": a_kv, "mamba_t": t_states,
+               "memory": None}
+
+
+def _decode_window(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.window and seq_len > WINDOW_MIN_SEQ:
+        return cfg.window
+    return 0
+
+
+def model_decode(params, cfg: ModelConfig, token, pos, cache, *,
+                 seq_len: int):
+    """One-token step. token (B,1) int32; pos scalar int32."""
+    x = _embed(params, cfg, token)
+    window = _decode_window(cfg, seq_len)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            lp, st = xs
+            y, st2 = rwkv_lib.rwkv6_forward(lp, cfg, carry, state=st)
+            return y, st2
+        h, states = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": states, "memory": None}
+    elif cfg.family == "hybrid":
+        h, new_cache = _hybrid_decode(params, cfg, x, pos, cache, window)
+    elif cfg.enc_dec:
+        def body(carry, xs):
+            lp, kv, xk, xv = xs
+            hh = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            a, kv2 = attn_lib.attention_decode(lp["attn"], cfg, hh, pos, kv)
+            y = carry + a
+            yh = rms_norm(y, lp["lnx"], cfg.norm_eps)
+            y = y + attn_lib.cross_forward(lp["xattn"], cfg, yh, kv=(xk, xv))
+            hh = rms_norm(y, lp["ln2"], cfg.norm_eps)
+            y = y + _mlp_fwd(lp["mlp"], cfg, hh)
+            return y, kv2
+        h, kv = jax.lax.scan(body, x, (params["dec"], cache["layers"],
+                                       cache["xkv"]["k"], cache["xkv"]["v"]))
+        new_cache = {"layers": kv, "xkv": cache["xkv"], "memory": None}
+    elif cfg.is_moe:
+        nd = cfg.n_dense_layers
+        dkv = None
+        if nd:
+            def dbody(carry, xs):
+                lp, kv = xs
+                hh = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+                a, kv2 = attn_lib.attention_decode(lp["attn"], cfg, hh, pos, kv)
+                y = carry + a
+                hh = rms_norm(y, lp["ln2"], cfg.norm_eps)
+                y = y + _mlp_fwd(lp["mlp"], cfg, hh)
+                return y, kv2
+            x, dkv = jax.lax.scan(dbody, x, (params["dense_layers"],
+                                             cache["dense"]))
+        def mbody(carry, xs):
+            lp, kv = xs
+            hh = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            a, kv2 = attn_lib.attention_decode(lp["attn"], cfg, hh, pos, kv)
+            y = carry + a
+            hh = rms_norm(y, lp["ln2"], cfg.norm_eps)
+            m, _ = moe_lib.moe_forward(lp["moe"], cfg, hh)
+            return y + m, kv2
+        h, mkv = jax.lax.scan(mbody, x, (params["moe_layers"], cache["moe"]))
+        new_cache = {"dense": dkv, "moe": mkv, "memory": None}
+    else:
+        def body(carry, xs):
+            lp, kv = xs
+            hh = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            a, kv2 = attn_lib.attention_decode(lp["attn"], cfg, hh, pos, kv,
+                                               window=window)
+            y = carry + a
+            hh = rms_norm(y, lp["ln2"], cfg.norm_eps)
+            y = y + _mlp_fwd(lp["mlp"], cfg, hh)
+            return y, kv2
+        h, kv = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": kv, "memory": cache.get("memory")}
+
+    logits = _logits(params, cfg, h)
+    return logits, new_cache
+
+
+def _hybrid_decode(params, cfg, x, pos, cache, window):
+    grouped, tail = _split_hybrid_stack(params["mamba"], cfg)
+    shared = params["shared"]
+
+    def inner(carry, xs):
+        lp, st = xs
+        h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+        y, st2 = ssm_lib.mamba2_decode(lp["mamba"], cfg, h, st)
+        return carry + y, st2
+
+    def group_body(carry, xs):
+        lp_group, m_st, kv = xs
+        y, m_st2 = jax.lax.scan(inner, carry, (lp_group, m_st))
+        hh = rms_norm(y, shared["ln1"], cfg.norm_eps)
+        a, kv2 = attn_lib.attention_decode(shared["attn"], cfg, hh, pos, kv,
+                                           window=window)
+        y = y + a
+        hh = rms_norm(y, shared["ln2"], cfg.norm_eps)
+        y = y + _mlp_fwd(shared["mlp"], cfg, hh)
+        return y, (m_st2, kv2)
+
+    x, (m_states, a_kv) = jax.lax.scan(
+        group_body, x, (grouped, cache["mamba_g"], cache["attn"]))
+    _, _, trailing = _hybrid_groups(cfg)
+    t_states = None
+    if trailing:
+        x, t_states = jax.lax.scan(inner, x, (tail, cache["mamba_t"]))
+    return x, {"mamba_g": m_states, "attn": a_kv, "mamba_t": t_states,
+               "memory": None}
+
+
+# --------------------------------------------------------------------------
+# cache specs (for dry-run decode cells: ShapeDtypeStruct + logical axes)
+# --------------------------------------------------------------------------
+
+
+def _with_stack(tree, n):
+    shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+    return shapes
+
+
+def serve_cache_spec(cfg: ModelConfig, batch: int, seq_len: int,
+                     enc_len: int = 0):
+    """(ShapeDtypeStruct tree, logical-string tree) for the decode cache.
+
+    enc_len: actual encoder-memory length for enc-dec archs (defaults to
+    cfg.enc_memory_len). Cross-KV must be allocated at the REAL encoder
+    output length — zero-padded cross slots are attended with score 0, not
+    masked (caught by tests/test_decode_parity.py)."""
+    window = _decode_window(cfg, seq_len)
+    seq_ax = "seq" if attn_lib.heads_shardable(cfg) else "seq_model"
+    kv_log = {"k": f"stack|batch|{seq_ax}|kv_heads|head_dim",
+              "v": f"stack|batch|{seq_ax}|kv_heads|head_dim"}
+    mla_log = {"c": "stack|batch|seq|", "kr": "stack|batch|seq|"}
+    att_log = mla_log if cfg.attention == "mla" else kv_log
+
+    def kv(n):
+        return _with_stack(attn_lib.attention_cache_shape(
+            cfg, batch, seq_len, window=window), n)
+
+    if cfg.family == "ssm":
+        st = rwkv_lib.rwkv6_state_shape(cfg, batch)
+        shapes = {"layers": _with_stack(st, cfg.n_layers), "memory": None}
+        log = {"layers": {"shift_t": "stack|batch|",
+                          "shift_c": "stack|batch|",
+                          "wkv": "stack|batch|heads||"},
+               "memory": None}
+        return shapes, log
+    if cfg.family == "hybrid":
+        g, n_groups, trailing = _hybrid_groups(cfg)
+        mst = ssm_lib.mamba2_state_shape(cfg, batch)
+        m_log = {"h": "stack|stack2|batch|||", "conv": "stack|stack2|batch||mlp"}
+        shapes = {
+            "mamba_g": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_groups, g) + s.shape, s.dtype), mst),
+            "attn": kv(n_groups),
+            "mamba_t": (_with_stack(mst, trailing) if trailing else None),
+            "memory": None,
+        }
+        log = {"mamba_g": m_log,
+               "attn": {k: v for k, v in att_log.items()},
+               "mamba_t": ({"h": "stack|batch|||", "conv": "stack|batch||mlp"}
+                           if trailing else None),
+               "memory": None}
+        return shapes, log
+    if cfg.enc_dec:
+        M = enc_len or cfg.enc_memory_len
+        hd = cfg.resolved_head_dim
+        xkv = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, M, cfg.n_kv_heads, hd), jnp.bfloat16)
+        shapes = {"layers": kv(cfg.n_layers),
+                  "xkv": {"k": xkv, "v": xkv}, "memory": None}
+        log = {"layers": att_log,
+               "xkv": {"k": "stack|batch|seq|kv_heads|head_dim",
+                       "v": "stack|batch|seq|kv_heads|head_dim"},
+               "memory": None}
+        return shapes, log
+    if cfg.is_moe:
+        nd = cfg.n_dense_layers
+        shapes = {"dense": (kv(nd) if nd else None),
+                  "moe": kv(cfg.n_layers - nd), "memory": None}
+        log = {"dense": (att_log if nd else None), "moe": att_log,
+               "memory": None}
+        return shapes, log
+    shapes = {"layers": kv(cfg.n_layers), "memory": None}
+    return shapes, {"layers": att_log, "memory": None}

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, adafactor, sgd, pick_optimizer, clip_by_global_norm)
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_topk, decompress_topk, quantize_int8, dequantize_int8)

@@ -1,0 +1,41 @@
+"""Gradient compression for cross-pod all-reduce (distributed-opt tricks).
+
+Top-k sparsification reuses the paper's COO insight on gradients: at high
+sparsity, (index, value) streams beat dense exchange. int8 quantization is
+the bitmap-regime analogue (dense but narrow). Used by launch/train.py when
+``--grad-compression`` is set; error feedback keeps convergence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_topk(g: jax.Array, frac: float = 0.01) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Keep the top `frac` entries by magnitude. Returns (idx, vals, residual)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(int(flat.shape[0] * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    residual = flat.at[idx].set(0.0).reshape(g.shape)
+    return idx.astype(jnp.int32), vals, residual
+
+
+def decompress_topk(idx: jax.Array, vals: jax.Array, shape) -> jax.Array:
+    n = 1
+    for s in shape:
+        n *= s
+    return jnp.zeros((n,), jnp.float32).at[idx].add(vals).reshape(shape)
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

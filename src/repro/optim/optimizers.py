@@ -1,0 +1,141 @@
+"""Pure-JAX optimizers (no optax in this container).
+
+`Optimizer` is a pair of pure functions (init, update) over pytrees.
+AdamW keeps fp32 m/v (+ optional fp32 master for bf16 params); Adafactor
+keeps a factored second moment so DeepSeek-V3-scale archs fit 16GB/chip
+(DESIGN.md §7). `pick_optimizer` applies the size rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    name: str = "opt"
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, wd: float = 0.0,
+          schedule: Optional[Callable] = None) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, _loss=None):
+        step = state["step"] + 1
+        lr_t = lr * (schedule(step) if schedule is not None else 1.0)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            if wd:
+                u = u + wd * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr_t * u
+            return m2, v2, p2.astype(p.dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        p = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_thresh: float = 1.0,
+              schedule: Optional[Callable] = None) -> Optimizer:
+    """Factored 2nd moment (row/col) for >=2D params; no momentum, no master."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(one, params)}
+
+    def update(grads, state, params, _loss=None):
+        step = state["step"] + 1
+        lr_t = lr * (schedule(step) if schedule is not None else 1.0)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(vr[..., None] / denom[..., None])
+                u = u * jax.lax.rsqrt(vc[..., None, :])
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = g * jax.lax.rsqrt(nv["v"])
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            p2 = p.astype(jnp.float32) - lr_t * u
+            return p2.astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        p = tdef.unflatten([o[0] for o in outs])
+        v = tdef.unflatten([o[1] for o in outs])
+        return p, {"step": step, "v": v}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def sgd(lr: float = 1e-2) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _loss=None):
+        p = jax.tree.map(
+            lambda pp, g: (pp.astype(jnp.float32)
+                           - lr * g.astype(jnp.float32)).astype(pp.dtype),
+            params, grads)
+        return p, {"step": state["step"] + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+ADAFACTOR_PARAM_THRESHOLD = 30_000_000_000  # 30B
+
+
+def pick_optimizer(n_params: int, lr: float = 1e-4,
+                   schedule: Optional[Callable] = None) -> Optimizer:
+    """AdamW below 30B params; Adafactor at/above (HBM budget, DESIGN §7)."""
+    if n_params >= ADAFACTOR_PARAM_THRESHOLD:
+        return adafactor(lr=lr, schedule=schedule)
+    return adamw(lr=lr, schedule=schedule)

@@ -1,0 +1,13 @@
+"""Test config: single-device jax (no XLA_FLAGS here by design — the 512-
+device forcing belongs ONLY to launch/dryrun.py), small hypothesis profile."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci", max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("ci")

@@ -1,0 +1,93 @@
+"""Integration: prefill-then-decode must reproduce teacher-forced forward
+logits for every cache family (GQA, MLA, MoE, enc-dec, Mamba2, RWKV6,
+hybrid). The strongest correctness check of the serving path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, reduced
+from repro.models import transformer as tf
+from repro.models.common import split_pl
+
+# one representative per cache family
+FAMILIES = ["llama3.2-1b", "deepseek-v3-671b", "grok-1-314b",
+            "seamless-m4t-large-v2", "zamba2-7b", "rwkv6-1.6b"]
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_prefill_then_decode_matches_forward(name):
+    import dataclasses
+    cfg = reduced(ARCHS[name])
+    if cfg.is_moe:
+        # isolate cache correctness from capacity-drop semantics: COO
+        # dispatch groups differ between teacher-forced forward (per-seq)
+        # and decode (per-batch), so give capacity headroom
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    params, _ = split_pl(tf.init_model(cfg, jax.random.PRNGKey(0)))
+    B, S = 2, 12
+    n_gen = 4
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks[:, : S - n_gen]}
+    if cfg.enc_dec:
+        frames = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+        batch["enc_frames"] = frames
+
+    # prefill on the prompt
+    logits_p, cache = jax.jit(
+        lambda p, b: tf.model_prefill(p, cfg, b))(params, batch)
+
+    # pad caches to full horizon S (cross-KV stays at true encoder length)
+    shapes, _ = tf.serve_cache_spec(cfg, B, S, enc_len=S)
+
+    def fit(c, s):
+        if c is None:
+            return None
+        if tuple(c.shape) == tuple(s.shape):
+            return c.astype(s.dtype)
+        pad = [(0, a - b) for a, b in zip(s.shape, c.shape)]
+        return jnp.pad(c.astype(s.dtype), pad)
+    cache = jax.tree.map(fit, cache, shapes)
+
+    decode = jax.jit(lambda p, t, pos, c: tf.model_decode(
+        p, cfg, t, pos, c, seq_len=S))
+
+    # teacher-forced decode of the last n_gen tokens
+    dec_logits = [logits_p]
+    for i in range(n_gen - 1):
+        pos = S - n_gen + i
+        t = toks[:, pos:pos + 1]
+        lg, cache = decode(params, t, jnp.int32(pos), cache)
+        dec_logits.append(lg)
+    dec = jnp.concatenate(dec_logits, axis=1)     # (B, n_gen, V)
+    # MLA decode uses the weight-absorbed formulation — mathematically equal
+    # but bf16-reassociated, so its tolerance is wider.
+    tol = 8e-2 if cfg.attention == "mla" else 3e-2
+
+    # full teacher-forced forward over all S tokens
+    full_batch = {"tokens": toks}
+    if cfg.enc_dec:
+        full_batch["enc_frames"] = frames
+    h_logits = _full_logits(params, cfg, full_batch)
+    want = h_logits[:, S - n_gen - 1: S - 1]      # logits predicting t+1
+
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def _full_logits(params, cfg, batch):
+    """All-position logits via the training trunk (no loss)."""
+    import repro.models.transformer as t
+
+    memory = None
+    if cfg.enc_dec:
+        frames = batch["enc_frames"].astype(jnp.bfloat16)
+        memory = t._scan_encoder(params["enc"], cfg, frames,
+                                 jnp.arange(frames.shape[1]))
+        from repro.models.common import rms_norm
+        memory = rms_norm(memory, params["enc_norm"], cfg.norm_eps)
+    x, positions = t._assemble_input(params, cfg, batch)
+    h, _, _ = t._trunk(params, cfg, x, positions, memory=memory)
+    return jax.jit(lambda p, hh: t._logits(p, cfg, hh))(params, h)

@@ -1,0 +1,68 @@
+"""Trip-weighted HLO parser: the §Perf measurement tool must itself be
+correct (flops exact on scan matmuls; collective models sane)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_parse
+from repro.launch.hlo_analysis import roofline_terms, model_flops
+
+
+def _compile_scan_matmul(n, d=256):
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=n)
+        return y
+    return jax.jit(f).lower(
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+        jax.ShapeDtypeStruct((d, d), jnp.float32)).compile()
+
+
+@pytest.mark.parametrize("n", [1, 3, 17])
+def test_flops_scale_with_trip_count(n):
+    rec = hlo_parse.analyze(_compile_scan_matmul(n).as_text())
+    assert rec["flops"] == pytest.approx(2 * 256 ** 3 * n, rel=1e-6)
+    if n > 1:
+        assert rec["trip_counts"][0] == n
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            y, _ = jax.lax.scan(inner, c, None, length=3)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                         jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    rec = hlo_parse.analyze(c.as_text())
+    assert rec["flops"] == pytest.approx(2 * 64 ** 3 * 15, rel=1e-6)
+
+
+def test_collective_wire_model():
+    # synthetic HLO line checks for the ring model
+    txt = """
+ENTRY %main (p: f32[128,8]) -> f32[128,8] {
+  %p = f32[128,8]{1,0} parameter(0)
+  %all-reduce.1 = f32[128,8]{1,0} all-reduce(%p), replica_groups=[4,4]<=[16], to_apply=%add
+  ROOT %all-gather.2 = f32[128,8]{1,0} all-gather(%all-reduce.1), replica_groups=[2,8]<=[16], dimensions={0}
+}
+"""
+    rec = hlo_parse.analyze(txt)
+    n = 128 * 8 * 4
+    assert rec["wire_all-reduce"] == pytest.approx(2 * n * 3 / 4)
+    assert rec["wire_all-gather"] == pytest.approx(n * 7 / 8)
+    assert rec["n_all-reduce"] == 1 and rec["n_all-gather"] == 1
+
+
+def test_roofline_terms_and_model_flops():
+    t = roofline_terms(197e12, 819e9, 50e9)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    assert model_flops(10, 0, 7, "train") == 6 * 10 * 7
+    assert model_flops(10, 4, 7, "decode") == 2 * 4 * 7

@@ -1,0 +1,135 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle,
+plus hypothesis property tests on randomly-sparse inputs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import sparse
+from repro.kernels import ops, ref
+from repro.kernels.bitmap_decode import bitmap_matmul
+from repro.kernels.coo_gather import coo_gather
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.volume_render import volume_render
+
+
+# ---------------------------------------------------------------- bitmap ---
+@pytest.mark.parametrize("rows,cols,n", [(8, 32, 4), (16, 64, 8), (32, 128, 1),
+                                         (8, 96, 16)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+@pytest.mark.parametrize("density", [0.05, 0.5, 1.0])
+def test_bitmap_matmul_sweep(rows, cols, n, dtype, density):
+    rng = np.random.RandomState(rows * cols + n)
+    w = rng.randn(rows, cols).astype(dtype)
+    w[rng.rand(rows, cols) >= density] = 0
+    enc = sparse.encode_bitmap(w)
+    x = rng.randn(cols, n).astype(dtype)
+    y_pal = bitmap_matmul(enc.words, enc.rowptr, enc.values, jnp.asarray(x),
+                          cols=cols, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32), w @ x,
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_bitmap_all_zero():
+    w = np.zeros((8, 32), np.float32)
+    enc = sparse.encode_bitmap(w)
+    x = np.ones((32, 2), np.float32)
+    y = bitmap_matmul(enc.words, enc.rowptr, enc.values, jnp.asarray(x),
+                      cols=32, interpret=True)
+    assert np.all(np.asarray(y) == 0)
+
+
+# ------------------------------------------------------------------- coo ---
+@pytest.mark.parametrize("size,nq", [(64, 128), (1000, 512), (5, 128)])
+def test_coo_gather_sweep(size, nq):
+    rng = np.random.RandomState(size)
+    flat = rng.randn(size).astype(np.float32)
+    flat[rng.rand(size) < 0.9] = 0
+    enc = sparse.encode_coo(flat.reshape(1, -1))
+    q = jnp.asarray(rng.randint(0, size, nq), jnp.int32)
+    got = coo_gather(enc.coords, enc.values, q, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), flat[np.asarray(q)])
+
+
+@given(st.integers(16, 200), st.floats(0.5, 1.0), st.integers(0, 10_000))
+def test_coo_gather_property(size, sparsity, seed):
+    rng = np.random.RandomState(seed)
+    flat = rng.randn(size).astype(np.float32)
+    flat[rng.rand(size) < sparsity] = 0
+    enc = sparse.encode_coo(flat.reshape(1, -1))
+    q = jnp.asarray(rng.randint(0, size, 128), jnp.int32)
+    got = ref.coo_gather_ref(enc.coords, enc.values, q)
+    np.testing.assert_allclose(np.asarray(got), flat[np.asarray(q)])
+
+
+# --------------------------------------------------------- volume render ---
+@pytest.mark.parametrize("r,n", [(128, 64), (256, 128), (128, 192)])
+@pytest.mark.parametrize("scale", [0.1, 3.0, 50.0])
+def test_volume_render_sweep(r, n, scale):
+    rng = np.random.RandomState(r + n)
+    sigma = jnp.asarray(np.abs(rng.randn(r, n)).astype(np.float32) * scale)
+    rgb = jnp.asarray(rng.rand(r, n, 3).astype(np.float32))
+    c1, t1, n1 = ref.volume_render_ref(sigma, rgb, 0.02, 1e-4)
+    c2, t2, n2 = volume_render(sigma, rgb, delta=0.02, term_eps=1e-4,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), atol=1e-6)
+    assert float(n1) == float(n2)
+
+
+def test_volume_render_early_termination_counts():
+    # opaque wall at sample 2: nearly everything after it should be skipped
+    sigma = jnp.zeros((64, 64), jnp.float32).at[:, 2].set(1e4)
+    rgb = jnp.ones((64, 64, 3), jnp.float32) * 0.5
+    c, t, nproc = ref.volume_render_ref(sigma, rgb, 0.1, 1e-4)
+    assert float(nproc) <= 64 * 4          # only the first few samples
+    np.testing.assert_allclose(np.asarray(t), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c), 0.5, atol=1e-4)
+
+
+def test_volume_render_transmittance_invariants():
+    rng = np.random.RandomState(0)
+    sigma = jnp.asarray(np.abs(rng.randn(32, 32)).astype(np.float32))
+    rgb = jnp.asarray(rng.rand(32, 32, 3).astype(np.float32))
+    c, t, _ = ref.volume_render_ref(sigma, rgb, 0.05, 1e-4)
+    assert np.all(np.asarray(t) >= 0) and np.all(np.asarray(t) <= 1)
+    # colors bounded by max rgb (convex-ish combination + leftover T)
+    assert np.all(np.asarray(c) <= 1.0 + 1e-5)
+
+
+# ----------------------------------------------------------------- flash ---
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 128, 64), (2, 4, 256, 64),
+                                     (1, 1, 512, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, s, d, causal):
+    rng = np.random.RandomState(b * s + d)
+    q = jnp.asarray(rng.randn(b, h, s, d).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.randn(b, h, s, d).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.randn(b, h, s, d).astype(np.float32))
+    o_ref = ref.flash_attention_ref(q, k, v, causal=causal)
+    o_pal = flash_attention(q, k, v, causal=causal, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.RandomState(7)
+    mk = lambda: jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    q, k, v = mk(), mk(), mk()
+    o_ref = ref.flash_attention_ref(q, k, v)
+    o_pal = flash_attention(q, k, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# --------------------------------------------------------------- ops API ---
+def test_ops_dispatch_ref_on_cpu():
+    rng = np.random.RandomState(1)
+    w = rng.randn(8, 32).astype(np.float32)
+    w[rng.rand(8, 32) < 0.5] = 0
+    enc = sparse.encode_bitmap(w)
+    x = jnp.asarray(rng.randn(32, 4).astype(np.float32))
+    y = ops.bitmap_matmul(enc.words, enc.rowptr, enc.values, x, cols=32)
+    np.testing.assert_allclose(np.asarray(y), w @ np.asarray(x), rtol=1e-5)

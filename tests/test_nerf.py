@@ -1,0 +1,173 @@
+"""RT-NeRF core invariants: Eq.2 field, occupancy, pipeline A1/A2."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import occupancy as occ_lib
+from repro.core import pipeline as rt_pipe
+from repro.core import rendering, tensorf
+from repro.data import rays as rays_lib
+
+CFG = NeRFConfig(grid_res=32, occ_res=32, cube_size=4, max_cubes=256,
+                 r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                 max_samples_per_ray=64, near=2.0, far=6.0)
+
+
+@pytest.fixture(scope="module")
+def field():
+    return tensorf.init_field(CFG, jax.random.PRNGKey(0))
+
+
+def test_eq2_matches_explicit_sum(field):
+    """Eq. 2: sigma = softplus(sum_m sum_r plane_m[r](a,b) * line_m[r](c))."""
+    pts = jax.random.uniform(jax.random.PRNGKey(1), (64, 3),
+                             minval=-1.0, maxval=1.0)
+    got = tensorf.eval_sigma(field, CFG, pts)
+    pg = tensorf.to_grid(CFG, pts)
+    acc = 0.0
+    for m in range(3):
+        a, b = tensorf.PLANE_AXES[m]
+        pm = tensorf._interp_plane(field["sigma_planes"][m], pg[:, a], pg[:, b])
+        lm = tensorf._interp_line(field["sigma_lines"][m], pg[:, m])
+        acc = acc + jnp.sum(pm * lm, axis=0)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jax.nn.softplus(acc)), rtol=1e-5)
+
+
+def test_sigma_nonnegative_and_color_bounded(field):
+    pts = jax.random.uniform(jax.random.PRNGKey(2), (128, 3),
+                             minval=-1.5, maxval=1.5)
+    sig = tensorf.eval_sigma(field, CFG, pts)
+    assert np.all(np.asarray(sig) >= 0)
+    feats = tensorf.eval_app_features(field, CFG, pts)
+    dirs = jnp.ones((128, 3)) / np.sqrt(3)
+    rgb = tensorf.eval_color(field, CFG, feats, dirs)
+    assert np.all(np.asarray(rgb) >= 0) and np.all(np.asarray(rgb) <= 1)
+
+
+def test_prune_creates_exact_zeros(field):
+    pruned = tensorf.prune_factors(field, tol=0.05)
+    sp = tensorf.factor_sparsity(pruned)
+    assert all(0 < v < 1 for v in sp.values())
+    assert np.all(np.asarray(jnp.abs(pruned["sigma_planes"])
+                             [pruned["sigma_planes"] != 0]) >= 0.05)
+
+
+def test_occupancy_and_cube_extraction(field):
+    occ = occ_lib.build_occupancy(field, CFG, sigma_thresh=1.0)
+    cubes = occ_lib.extract_cubes(occ, CFG)
+    assert cubes.centers.shape == (CFG.max_cubes, 3)
+    assert cubes.count == int(np.asarray(cubes.valid).sum())
+    # every valid cube center lies inside the scene bound
+    c = np.asarray(cubes.centers)[np.asarray(cubes.valid)]
+    assert np.all(np.abs(c) <= CFG.scene_bound)
+    # occupancy query agrees with the raw grid
+    pts = jnp.asarray(c[:8], jnp.float32)
+    hit = occ_lib.occupancy_query(occ, CFG, pts)
+    gc = CFG.cube_size
+    # a cube is non-zero because SOME voxel inside is occupied; probing the
+    # center may miss, so just check the query runs and is boolean
+    assert hit.dtype == jnp.bool_
+
+
+def test_order_cubes_front_to_back(field):
+    occ = occ_lib.build_occupancy(field, CFG, sigma_thresh=1.0)
+    cubes = occ_lib.extract_cubes(occ, CFG)
+    origin = jnp.asarray([4.0, 0.0, 0.0])
+    perm = rt_pipe.order_cubes(cubes, origin, "distance")
+    c = np.asarray(cubes.centers)[np.asarray(perm)]
+    v = np.asarray(cubes.valid)[np.asarray(perm)]
+    d = np.linalg.norm(c - np.asarray(origin), axis=-1)
+    dv = d[v]
+    assert np.all(np.diff(dv) >= -1e-5)         # sorted front-to-back
+    assert not v[len(dv):].any()                # invalid cubes pushed last
+
+    perm_o = rt_pipe.order_cubes(cubes, origin, "octant")
+    vo = np.asarray(cubes.valid)[np.asarray(perm_o)]
+    assert vo[: int(vo.sum())].all()            # valid first under octant too
+
+
+def _trained_setup():
+    """Small trained field shared by the pipeline-equivalence tests."""
+    from repro.core import train as nerf_train
+    cfg = NeRFConfig(grid_res=32, occ_res=32, cube_size=4, max_cubes=512,
+                     r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                     max_samples_per_ray=96, train_rays=512)
+    res = nerf_train.train_nerf(cfg, "mic", steps=120, n_views=6,
+                                image_hw=48, log_every=1000, verbose=False)
+    scene = rays_lib.make_scene("mic")
+    cam = rays_lib.make_cameras(5, 48, 48)[1]
+    gt = rays_lib.render_gt(scene, cam)
+    return cfg, res, cam, gt
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return _trained_setup()
+
+
+def test_pipeline_matches_uniform_psnr(trained):
+    cfg, res, cam, gt = trained
+    from repro.core import train as nerf_train
+    p_uni, s_uni, _ = nerf_train.eval_view(res.params, cfg, res.cubes, cam,
+                                           gt, pipeline="uniform")
+    p_rt, s_rt, _ = nerf_train.eval_view(res.params, cfg, res.cubes, cam, gt,
+                                         pipeline="rtnerf")
+    assert p_rt > p_uni - 1.5                   # quality parity (box clip)
+    # A1 claim: occupancy accesses reduced by orders of magnitude
+    assert s_rt["occ_accesses"] < s_uni["occ_accesses"] / 50
+
+
+def test_ordering_modes_agree(trained):
+    """A2 invariance: octant vs distance order must render the same image
+    (compositing along each ray is order-independent across disjoint cubes
+    as long as both orders are front-to-back per ray ... up to early-term
+    boundary effects, so compare loosely)."""
+    cfg, res, cam, gt = trained
+    img_o, _ = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam,
+                                     order_mode="octant")
+    img_d, _ = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam,
+                                     order_mode="distance")
+    diff = np.abs(np.asarray(img_o) - np.asarray(img_d)).mean()
+    assert diff < 5e-3
+
+
+def test_chunked_matches_sequential(trained):
+    cfg, res, cam, gt = trained
+    img_1, _ = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam, chunk=1)
+    img_8, _ = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam, chunk=8)
+    diff = np.abs(np.asarray(img_1) - np.asarray(img_8)).mean()
+    assert diff < 5e-3
+
+
+def test_early_termination_reduces_work(trained):
+    cfg, res, cam, gt = trained
+    import dataclasses
+    cfg_no_term = dataclasses.replace(cfg, term_eps=0.0)
+    _, s_term = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam)
+    _, s_all = rt_pipe.render_rtnerf(res.params, cfg_no_term, res.cubes, cam)
+    assert float(s_term["processed_samples"]) <= float(s_all["processed_samples"])
+
+
+def test_composite_eq1_white_background():
+    sigma = jnp.zeros((4, 8))
+    rgb = jnp.ones((4, 8, 3)) * 0.3
+    color, t_final, w = rendering.composite(sigma, rgb,
+                                            jnp.ones((4, 8), bool), 0.1)
+    np.testing.assert_allclose(np.asarray(color), 1.0)   # empty -> white bg
+    np.testing.assert_allclose(np.asarray(t_final), 1.0)
+
+
+def test_gt_renderer_and_cameras():
+    scene = rays_lib.make_scene("chair")
+    cam = rays_lib.make_cameras(3, 32, 32)[0]
+    img = rays_lib.render_gt(scene, cam)
+    a = np.asarray(img)
+    assert a.shape == (32 * 32, 3)
+    assert np.all(a >= 0) and np.all(a <= 1)
+    assert a.min() < 0.95                        # something visible
+    o, d = rendering.camera_rays(cam)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(d), axis=-1), 1.0,
+                               rtol=1e-5)

@@ -1,0 +1,95 @@
+"""Optimizers, schedules, gradient compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.optim.optimizers import adafactor, adamw, pick_optimizer, sgd
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("make", [lambda: adamw(lr=0.1),
+                                  lambda: adafactor(lr=0.3),
+                                  lambda: sgd(lr=0.1)])
+def test_optimizer_converges_on_quadratic(make):
+    opt = make()
+    params = {"w": jnp.ones((4, 8)), "b": jnp.zeros((8,))}
+    state = opt.init(params)
+    loss0 = float(quad_loss(params))
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(quad_loss)(p)
+        return opt.update(g, s, p)
+
+    for _ in range(60):
+        params, state = step(params, state)
+    assert float(quad_loss(params)) < loss0 * 0.05
+
+
+def test_adamw_state_shapes_match_params():
+    opt = adamw()
+    params = {"a": jnp.ones((3, 5)), "nested": {"b": jnp.ones((7,))}}
+    s = opt.init(params)
+    assert s["m"]["a"].shape == (3, 5)
+    assert s["v"]["nested"]["b"].shape == (7,)
+
+
+def test_adafactor_factored_stats():
+    opt = adafactor()
+    params = {"w": jnp.ones((16, 32)), "b": jnp.ones((16,))}
+    s = opt.init(params)
+    assert s["v"]["w"]["vr"].shape == (16,)
+    assert s["v"]["w"]["vc"].shape == (32,)
+    assert s["v"]["b"]["v"].shape == (16,)
+    # factored memory << full second moment
+    n_stats = 16 + 32
+    assert n_stats < 16 * 32
+
+
+def test_pick_optimizer_size_rule():
+    assert pick_optimizer(1_000_000).name == "adamw"
+    assert pick_optimizer(100_000_000_000).name == "adafactor"
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 100.0}
+    clipped, gn = optim.clip_by_global_norm(g, 1.0)
+    assert float(gn) > 100
+    total = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_schedules():
+    s = optim.cosine_schedule(10, 100)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert float(s(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.1, abs=1e-3)
+    w = optim.linear_warmup(5)
+    assert float(w(jnp.int32(2))) == pytest.approx(0.4)
+
+
+def test_topk_compression_roundtrip_with_error_feedback():
+    rng = np.random.RandomState(0)
+    g = jnp.asarray(rng.randn(1000).astype(np.float32))
+    idx, vals, residual = optim.compress_topk(g, frac=0.1)
+    dec = optim.decompress_topk(idx, vals, (1000,))
+    # decompressed + residual == original
+    np.testing.assert_allclose(np.asarray(dec + residual.reshape(-1)),
+                               np.asarray(g), atol=1e-6)
+    # top-k keeps the largest-magnitude entries
+    kept = np.abs(np.asarray(g))[np.asarray(idx)]
+    assert kept.min() >= np.sort(np.abs(np.asarray(g)))[-100:].min() - 1e-6
+
+
+def test_int8_quantization_error_bounded():
+    rng = np.random.RandomState(1)
+    g = jnp.asarray(rng.randn(256, 4).astype(np.float32))
+    q, scale = optim.quantize_int8(g)
+    back = optim.dequantize_int8(q, scale)
+    assert q.dtype == jnp.int8
+    assert float(jnp.abs(back - g).max()) <= float(scale) * 0.5 + 1e-6

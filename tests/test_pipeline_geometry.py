@@ -1,0 +1,74 @@
+"""Property tests on the RT-NeRF pipeline geometry (Steps 2-1-a..d)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import pipeline as rt_pipe
+from repro.core.rendering import look_at_camera, pixel_rays
+
+CFG = NeRFConfig(grid_res=32, occ_res=32, cube_size=4, max_cubes=64,
+                 r_sigma=4, r_color=4, app_dim=6, mlp_hidden=8)
+
+
+def _cam(az=0.7, r=4.0, res=48):
+    o = [r * np.cos(az), r * np.sin(az), 1.5]
+    return look_at_camera(o, [0, 0, 0], 1.2 * res, res, res)
+
+
+@given(st.floats(-1.2, 1.2), st.floats(-1.2, 1.2), st.floats(-1.2, 1.2),
+       st.floats(0.0, 6.2))
+def test_ball_segment_contains_box_segment(cx, cy, cz, az):
+    """Step 2-1-d: every box-clipped sample must also lie inside the
+    bounding ball (the ball is a superset -> the paper's intersection is
+    conservative w.r.t. ours)."""
+    cam = _cam(az)
+    center = jnp.asarray([cx, cy, cz], jnp.float32)
+    tile = 8
+    _, _, pts_ball, _, m_ball = rt_pipe._cube_samples(CFG, cam, center, tile,
+                                                      "ball")
+    _, _, pts_box, _, m_box = rt_pipe._cube_samples(CFG, cam, center, tile,
+                                                    "box")
+    m_box = np.asarray(m_box)
+    if not m_box.any():
+        return
+    p = np.asarray(pts_box)[m_box]
+    d = np.linalg.norm(p - np.asarray(center), axis=-1)
+    assert (d <= CFG.cube_ball_radius() + 1e-4).all()
+    # and box samples are inside the cube itself
+    assert (np.abs(p - np.asarray(center)) <= CFG.cube_world() / 2 + 1e-4).all()
+
+
+def test_projected_center_pixel_hits_cube():
+    """Step 2-1-b/c: the ray through the projected center intersects the
+    ball (projection is geometrically consistent)."""
+    cam = _cam()
+    for center in ([0.0, 0.0, 0.0], [0.8, -0.5, 0.3], [-1.0, 1.0, -0.7]):
+        c = jnp.asarray(center, jnp.float32)
+        pid, d, pts, ts, mask = rt_pipe._cube_samples(CFG, cam, c, 16, "ball")
+        assert bool(np.asarray(mask).any()), f"no samples for cube at {center}"
+
+
+def test_samples_front_to_back_monotone():
+    cam = _cam()
+    c = jnp.asarray([0.2, 0.1, 0.0], jnp.float32)
+    _, _, _, ts, mask = rt_pipe._cube_samples(CFG, cam, c, 16, "box")
+    ts = np.asarray(ts)
+    assert (np.diff(ts, axis=-1) > 0).all()      # increasing along the ray
+
+
+def test_auto_tile_covers_projection():
+    cam = _cam(res=96)
+    t = rt_pipe.auto_tile(CFG, cam)
+    assert t % 8 == 0 and 8 <= t <= 128
+    # projected diameter at the nearest possible cube depth fits the tile
+    r_pix = cam.focal * CFG.cube_ball_radius() / max(
+        CFG.near - CFG.cube_ball_radius(), 0.5)
+    assert t >= min(2 * r_pix, 120)
+
+
+def test_samples_per_segment_bound():
+    ns = rt_pipe.samples_per_segment(CFG)
+    from repro.core.rendering import step_world
+    assert ns >= 2 * CFG.cube_ball_radius() / step_world(CFG)

@@ -1,0 +1,98 @@
+"""Hybrid sparse encoding (paper H1): roundtrips, format rule, size model."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import sparse
+
+
+@given(st.integers(1, 40), st.integers(1, 120), st.floats(0.0, 1.0),
+       st.integers(0, 10_000))
+def test_bitmap_roundtrip(rows, cols, sparsity, seed):
+    rng = np.random.RandomState(seed)
+    w = rng.randn(rows, cols).astype(np.float32)
+    w[rng.rand(rows, cols) < sparsity] = 0
+    enc = sparse.encode_bitmap(w)
+    dec = np.asarray(sparse.decode_bitmap(enc))
+    np.testing.assert_array_equal(dec, w)
+
+
+@given(st.integers(1, 40), st.integers(1, 120), st.floats(0.0, 1.0),
+       st.integers(0, 10_000))
+def test_coo_roundtrip(rows, cols, sparsity, seed):
+    rng = np.random.RandomState(seed)
+    w = rng.randn(rows, cols).astype(np.float32)
+    w[rng.rand(rows, cols) < sparsity] = 0
+    enc = sparse.encode_coo(w)
+    dec = np.asarray(sparse.decode_coo(enc))
+    np.testing.assert_array_equal(dec, w)
+
+
+def test_coo_coords_sorted_and_lookup():
+    rng = np.random.RandomState(3)
+    w = rng.randn(16, 16).astype(np.float32)
+    w[rng.rand(16, 16) < 0.85] = 0
+    enc = sparse.encode_coo(w)
+    c = np.asarray(enc.coords)[: enc.nnz]
+    assert np.all(np.diff(c) > 0)
+    q = jnp.arange(256, dtype=jnp.int32)
+    got = np.asarray(sparse.coo_lookup(enc, q))
+    np.testing.assert_array_equal(got, w.reshape(-1))
+
+
+def test_choose_format_threshold():
+    assert sparse.choose_format(0.79) == "bitmap"
+    assert sparse.choose_format(0.80) == "coo"
+    assert sparse.choose_format(0.95) == "coo"
+    assert sparse.choose_format(0.04) == "bitmap"
+
+
+def test_storage_model_crossover():
+    """Byte-model facts behind the paper's 80% rule: bitmap wins at low
+    sparsity, COO at very high. NOTE the pure-storage crossover for fp32
+    values + int32 coords sits near ~95%, ABOVE the paper's 80% — their
+    threshold also prices decode latency (3-cycle bitmap lookup vs log-depth
+    search). Measured in benchmarks/encoding_table.py; see EXPERIMENTS.md."""
+    shape = (128, 128)
+    total = shape[0] * shape[1]
+    for s in (0.2, 0.5, 0.7, 0.8, 0.9):
+        nnz = int(total * (1 - s))
+        assert (sparse.storage_bytes(shape, nnz, "bitmap")
+                < sparse.storage_bytes(shape, nnz, "coo"))
+    for s in (0.97, 0.99):
+        nnz = int(total * (1 - s))
+        assert (sparse.storage_bytes(shape, nnz, "coo")
+                < sparse.storage_bytes(shape, nnz, "bitmap"))
+    # bitmap beats dense at any meaningful sparsity
+    nnz = int(total * 0.7)            # 30% sparse
+    assert sparse.storage_bytes(shape, nnz, "bitmap") < \
+        sparse.storage_bytes(shape, nnz, "dense")
+
+
+def test_encode_hybrid_picks_by_sparsity():
+    rng = np.random.RandomState(0)
+    dense_ish = rng.randn(32, 32).astype(np.float32)
+    dense_ish[rng.rand(32, 32) < 0.3] = 0
+    fmt, s, _ = sparse.encode_hybrid(dense_ish)
+    assert fmt == "bitmap" and s < 0.5
+    sparse_w = rng.randn(32, 32).astype(np.float32)
+    sparse_w[rng.rand(32, 32) < 0.95] = 0
+    fmt2, s2, _ = sparse.encode_hybrid(sparse_w)
+    assert fmt2 == "coo" and s2 > 0.8
+
+
+def test_factor_report_on_field():
+    import jax
+    from repro.configs.rtnerf import NeRFConfig
+    from repro.core import tensorf
+    cfg = NeRFConfig(grid_res=16, r_sigma=4, r_color=4, app_dim=6,
+                     mlp_hidden=8)
+    params = tensorf.init_field(cfg, jax.random.PRNGKey(0))
+    params = tensorf.prune_factors(params, tol=0.05)
+    rep = sparse.factor_report(params)
+    assert len(rep) == 12                       # 4 factor kinds x 3 modes
+    for v in rep.values():
+        assert 0.0 <= v["sparsity"] <= 1.0
+        assert v["chosen_bytes"] == min(v["bitmap_bytes"], v["coo_bytes"]) or \
+            v["format"] in ("bitmap", "coo")
