@@ -1,0 +1,108 @@
+"""Dense vs hybrid (bitmap/COO) compressed-field rendering (paper Sec. 4.2.2).
+
+Trains a small TensoRF field, magnitude-prunes it to several sparsity
+levels, and for each level renders the same novel view through the RT-NeRF
+pipeline twice — once from the raw factor arrays, once straight from the
+hybrid encoding — reporting the factor bytes the hot loop reads
+(sparse.storage_bytes size model), wall-clock, and hybrid-vs-dense PSNR.
+
+    PYTHONPATH=src python benchmarks/compressed_render.py
+    PYTHONPATH=src python benchmarks/compressed_render.py --tiny --check  # CI
+
+CPU wall-clock is a relative signal only (TPU is the compile target; the
+CPU hybrid path decodes via the jnp oracles) — the paper-claim column is
+factor_bytes, the DRAM-traffic proxy.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax.numpy as jnp
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import occupancy as occ_lib
+from repro.core import pipeline as rt_pipe
+from repro.core import rendering, sparse, tensorf
+from repro.core import train as nerf_train
+from repro.data import rays as rays_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scene", default="lego")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--res", type=int, default=56)
+    ap.add_argument("--levels", default="0.5,0.8,0.9,0.95")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape: 20 steps, 32^2 render, one level")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the paper-claim row holds "
+                         "(>=3x bytes at 0.9 sparsity, PSNR >= 40 dB)")
+    args = ap.parse_args()
+    if args.tiny:
+        args.steps, args.res, args.levels = 20, 32, "0.9"
+    levels = [float(x) for x in args.levels.split(",")]
+
+    if args.tiny:
+        cfg = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=320,
+                         r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                         max_samples_per_ray=64, train_rays=512)
+    else:
+        cfg = NeRFConfig(grid_res=40, occ_res=40, cube_size=4, max_cubes=768,
+                         r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                         max_samples_per_ray=112, train_rays=1024)
+    res = nerf_train.train_nerf(cfg, args.scene, steps=args.steps, n_views=8,
+                                image_hw=args.res, log_every=10_000,
+                                verbose=False)
+    cam = rays_lib.make_cameras(7, args.res, args.res)[2]
+
+    if args.check and not any(lv >= 0.9 for lv in levels):
+        print("CHECK FAILED: --check needs at least one level >= 0.9 "
+              f"(got {args.levels})")
+        sys.exit(2)
+
+    print("sparsity,dense_bytes,hybrid_bytes,ratio,psnr_hybrid_vs_dense,"
+          "dense_s,hybrid_s,formats")
+    failures = []
+    for level in levels:
+        params = tensorf.prune_to_sparsity(res.params, level)
+        occ = occ_lib.build_occupancy(params, cfg, sigma_thresh=0.5)
+        cubes = occ_lib.extract_cubes(occ, cfg)
+        cf = sparse.compress_field(params, cfg)
+
+        t0 = time.time()
+        img_d, st_d = rt_pipe.render_rtnerf(params, cfg, cubes, cam,
+                                            chunk=8, field_mode="dense")
+        img_d.block_until_ready()
+        dt_d = time.time() - t0
+        t0 = time.time()
+        img_h, st_h = rt_pipe.render_rtnerf(cf, cfg, cubes, cam,
+                                            chunk=8, field_mode="hybrid")
+        img_h.block_until_ready()
+        dt_h = time.time() - t0
+
+        bytes_d = int(st_d["factor_bytes"])
+        bytes_h = int(st_h["factor_bytes"])
+        ratio = bytes_d / max(bytes_h, 1)
+        psnr = float(rendering.psnr(jnp.clip(img_h, 0, 1),
+                                    jnp.clip(img_d, 0, 1)))
+        fmts = sorted({ef.fmt for efs in cf.factors.values() for ef in efs})
+        print(f"{level:.2f},{bytes_d},{bytes_h},{ratio:.2f},{psnr:.1f},"
+              f"{dt_d:.2f},{dt_h:.2f},{'|'.join(fmts)}")
+        if level >= 0.9:
+            if ratio < 3.0:
+                failures.append(f"ratio {ratio:.2f} < 3x at {level}")
+            if psnr < 40.0:
+                failures.append(f"psnr {psnr:.1f} < 40 dB at {level}")
+    if args.check and failures:
+        print("CHECK FAILED: " + "; ".join(failures))
+        sys.exit(1)
+    if args.check:
+        print("CHECK OK: >=3x factor-byte reduction at >=0.9 sparsity, "
+              "hybrid-vs-dense PSNR >= 40 dB")
+
+
+if __name__ == "__main__":
+    main()

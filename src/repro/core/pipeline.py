@@ -30,9 +30,10 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.rtnerf import NeRFConfig
-from repro.core import tensorf
+from repro.core import sparse, tensorf
 from repro.core.occupancy import CubeSet
 from repro.core.rendering import Camera, composite, pixel_rays, step_world
 
@@ -150,9 +151,43 @@ def _cube_samples(cfg: NeRFConfig, cam: Camera, center, tile: int,
 
 def render_rtnerf(params, cfg: NeRFConfig, cubes: CubeSet, cam: Camera, *,
                   order_mode: str = "octant", chunk: int = 1,
-                  intersect: str = "box",
+                  intersect: str = "box", field_mode: str = "dense",
                   white_bg: bool = True) -> Tuple[jax.Array, Dict]:
-    """Full-image render via the RT-NeRF pipeline. Returns (rgb (H*W,3), stats)."""
+    """Full-image render via the RT-NeRF pipeline. Returns (rgb (H*W,3), stats).
+
+    field_mode="dense"  — evaluate the raw TensoRF factor arrays (baseline).
+    field_mode="hybrid" — evaluate the hybrid bitmap/COO-encoded factors
+    (paper Sec. 4.2.2): every grid read decodes the compressed stream in
+    place, so the field's memory footprint in the hot loop is the encoded
+    bytes. `params` may be a params dict (encoded here, once) or an
+    already-built sparse.CompressedField.
+    """
+    if field_mode not in ("dense", "hybrid"):
+        raise ValueError(f"field_mode must be dense|hybrid, got {field_mode}")
+    if field_mode == "hybrid":
+        cf = params if isinstance(params, sparse.CompressedField) \
+            else sparse.compress_field(params, cfg)
+        mlp_params = cf.extras
+
+        def f_sigma(pts):
+            return tensorf.eval_sigma_hybrid(cf, cfg, pts)
+
+        def f_app(pts):
+            return tensorf.eval_app_features_hybrid(cf, cfg, pts)
+        factor_bytes = cf.factor_bytes()
+        factor_bytes_dense = cf.dense_factor_bytes()
+    else:
+        if isinstance(params, sparse.CompressedField):
+            params = sparse.decompress_field(params)
+        mlp_params = params
+
+        def f_sigma(pts):
+            return tensorf.eval_sigma(params, cfg, pts)
+
+        def f_app(pts):
+            return tensorf.eval_app_features(params, cfg, pts)
+        factor_bytes = factor_bytes_dense = sum(
+            int(np.prod(params[k].shape)) * 4 for k in sparse.FACTOR_KEYS)
     tile = auto_tile(cfg, cam)
     perm = order_cubes(cubes, cam.origin, order_mode)
     centers = cubes.centers[perm]
@@ -179,11 +214,11 @@ def render_rtnerf(params, cfg: NeRFConfig, cubes: CubeSet, cam: Camera, *,
         s_mask = s_mask & alive[..., None]
 
         flat = pts.reshape(-1, 3)
-        sigma = tensorf.eval_sigma(params, cfg, flat).reshape(s_mask.shape)
+        sigma = f_sigma(flat).reshape(s_mask.shape)
         sigma = jnp.where(s_mask, sigma, 0.0)
-        feats = tensorf.eval_app_features(params, cfg, flat)
+        feats = f_app(flat)
         dirs = jnp.broadcast_to(d[:, :, None], pts.shape).reshape(-1, 3)
-        rgb = tensorf.eval_color(params, cfg, feats, dirs).reshape(
+        rgb = tensorf.eval_color(mlp_params, cfg, feats, dirs).reshape(
             *s_mask.shape, 3)
 
         # per-(cube,pixel) local compositing along the segment
@@ -222,5 +257,10 @@ def render_rtnerf(params, cfg: NeRFConfig, cubes: CubeSet, cam: Camera, *,
         "processed_samples": processed,
         "n_cubes": jnp.asarray(float(cubes.count), jnp.float32),
         "tile": jnp.asarray(float(tile), jnp.float32),
+        # field-memory footprint of the hot loop (paper Sec. 4.2.2): the
+        # bytes the factor reads stream from, in the active representation
+        "factor_bytes": jnp.asarray(float(factor_bytes), jnp.float32),
+        "factor_bytes_dense": jnp.asarray(float(factor_bytes_dense),
+                                          jnp.float32),
     }
     return color, stats

@@ -13,6 +13,11 @@ Formats:
 `choose_format` applies the paper's 80% sparsity switch; `storage_bytes`
 exposes the size model that justifies it. Consumers: TensoRF VM factors and
 (beyond paper) MoE dispatch mode selection in models/moe.py.
+
+`CompressedField` / `compress_field` package the whole TensoRF factor set in
+encoded form so the renderer can *sample* the compressed stream directly
+(core/tensorf.py eval_sigma_hybrid / eval_app_features_hybrid) — the paper's
+actual memory-path win, not just an offline size table.
 """
 from __future__ import annotations
 
@@ -111,6 +116,41 @@ def decode_coo(enc: CooEncoded) -> jax.Array:
     return flat.reshape(enc.shape)
 
 
+def bitmap_lookup_linear(words: jax.Array, rowptr: jax.Array,
+                         values: jax.Array, queries: jax.Array,
+                         cols: int) -> jax.Array:
+    """jnp oracle: random access into a bitmap-encoded matrix (raw arrays).
+
+    queries (Q,) linear indices into the row-major (rows, cols) matrix. The
+    lookup is the paper's fixed-latency path: one bit test plus a bounded
+    prefix-popcount over the query row's bitmap words to find the packed
+    address (3 cycles in the ASIC; one word-vector popcount here). This is
+    the single source of truth for the decode math; kernels/ref.py delegates
+    here and the Pallas kernel (kernels/bitmap_decode.py) mirrors it.
+    """
+    r = queries // cols
+    c = queries % cols
+    wi = (c // 32).astype(jnp.int32)
+    bi = (c % 32).astype(jnp.uint32)
+    qwords = words[r]                                       # (Q, W)
+    widx = jnp.arange(words.shape[1], dtype=jnp.int32)[None, :]
+    below = jnp.left_shift(jnp.uint32(1), bi) - jnp.uint32(1)
+    mask = jnp.where(widx < wi[:, None], jnp.uint32(0xFFFFFFFF),
+                     jnp.where(widx == wi[:, None], below[:, None],
+                               jnp.uint32(0)))
+    prefix = jnp.sum(jax.lax.population_count(qwords & mask), axis=1)
+    bit = (words[r, wi] >> bi) & jnp.uint32(1)
+    addr = rowptr[r] + prefix.astype(jnp.int32)
+    vals = values[jnp.clip(addr, 0, values.shape[0] - 1)]
+    return jnp.where(bit > 0, vals, 0).astype(values.dtype)
+
+
+def bitmap_lookup(enc: BitmapEncoded, queries: jax.Array) -> jax.Array:
+    """bitmap_lookup_linear over an encoded container."""
+    return bitmap_lookup_linear(enc.words, enc.rowptr, enc.values, queries,
+                                enc.shape[1])
+
+
 def coo_lookup(enc: CooEncoded, queries: jax.Array) -> jax.Array:
     """Branchless binary search over sorted coords. queries (Q,) linear idx."""
     n = enc.coords.shape[0]
@@ -147,10 +187,137 @@ def encode_hybrid(w, threshold: float = 0.80):
     return fmt, s, enc
 
 
+# --------------------------------------------------------------------------
+# Compressed TensoRF field — the renderer-facing form of the H1 codec
+# --------------------------------------------------------------------------
+
+FACTOR_KEYS = ("sigma_planes", "sigma_lines", "app_planes", "app_lines")
+
+
+@dataclasses.dataclass
+class EncodedFactor:
+    """One VM factor slice (mode m of a plane/line tensor) in its chosen
+    format. The matrix view is (R, ncols): ncols = G*G for planes, G for
+    lines; `nd_shape` remembers the original (R, G[, G]) layout."""
+    fmt: str                        # "dense" | "bitmap" | "coo"
+    nd_shape: tuple                 # original per-mode factor shape
+    shape: tuple                    # (R, ncols) matrix view
+    nnz: int
+    sparsity: float
+    dense: Optional[jax.Array] = None       # fmt == "dense"
+    bitmap: Optional[BitmapEncoded] = None  # fmt == "bitmap"
+    coo: Optional[CooEncoded] = None        # fmt == "coo"
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    def storage(self) -> int:
+        return storage_bytes(self.shape, self.nnz, self.fmt)
+
+    def dense_storage(self) -> int:
+        return storage_bytes(self.shape, self.nnz, "dense")
+
+    def decode(self) -> jax.Array:
+        """Reconstruct the dense (R, ncols) matrix (jnp oracle path)."""
+        if self.fmt == "dense":
+            return self.dense
+        if self.fmt == "bitmap":
+            return decode_bitmap(self.bitmap)
+        return decode_coo(self.coo)
+
+
+@dataclasses.dataclass
+class CompressedField:
+    """The full TensoRF parameter set with every VM factor hybrid-encoded.
+
+    `factors[key][m]` is the EncodedFactor for mode m of factor tensor `key`;
+    `extras` carries the untouched dense params (basis + color MLP). The
+    renderer samples factors through core/tensorf.gather_factor without ever
+    materialising the dense grids — the paper's compressed-domain eval.
+    """
+    factors: Dict[str, tuple]
+    extras: Dict[str, jax.Array]
+    threshold: float
+
+    def factor_bytes(self) -> int:
+        return sum(ef.storage() for efs in self.factors.values()
+                   for ef in efs)
+
+    def dense_factor_bytes(self) -> int:
+        return sum(ef.dense_storage() for efs in self.factors.values()
+                   for ef in efs)
+
+    def compression_ratio(self) -> float:
+        return self.dense_factor_bytes() / max(self.factor_bytes(), 1)
+
+    def report(self) -> Dict[str, Dict]:
+        out = {}
+        for k, efs in self.factors.items():
+            for m, ef in enumerate(efs):
+                out[f"{k}[{m}]"] = {
+                    "format": ef.fmt, "sparsity": ef.sparsity,
+                    "bytes": ef.storage(),
+                    "dense_bytes": ef.dense_storage(),
+                }
+        return out
+
+
+def compress_field(params, cfg=None, threshold: Optional[float] = None
+                   ) -> CompressedField:
+    """Encode each TensoRF VM factor per the 80% rule.
+
+    A factor whose encoded form would not beat its dense bytes stays dense
+    (don't pessimize nearly-dense fields); otherwise bitmap below the
+    sparsity threshold, COO at/above it. The switch point comes from
+    `threshold` if given, else cfg.sparse_threshold, else the paper's 0.80.
+    """
+    if threshold is None:
+        threshold = getattr(cfg, "sparse_threshold", 0.80) \
+            if cfg is not None else 0.80
+    factors: Dict[str, tuple] = {}
+    extras: Dict[str, jax.Array] = {}
+    for k, v in params.items():
+        if k not in FACTOR_KEYS:
+            extras[k] = v
+    for k in FACTOR_KEYS:
+        w = np.asarray(params[k])
+        efs = []
+        for m in range(3):
+            wm = w[m].reshape(w.shape[1], -1)
+            s = sparsity(wm)
+            nnz = int((wm != 0).sum())
+            fmt = choose_format(s, threshold)
+            if storage_bytes(wm.shape, nnz, fmt) >= \
+                    storage_bytes(wm.shape, nnz, "dense"):
+                fmt = "dense"
+            ef = EncodedFactor(fmt=fmt, nd_shape=w[m].shape, shape=wm.shape,
+                               nnz=nnz, sparsity=s)
+            if fmt == "dense":
+                ef.dense = jnp.asarray(wm)
+            elif fmt == "bitmap":
+                ef.bitmap = encode_bitmap(wm)
+            else:
+                ef.coo = encode_coo(wm)
+            efs.append(ef)
+        factors[k] = tuple(efs)
+    return CompressedField(factors=factors, extras=extras,
+                           threshold=threshold)
+
+
+def decompress_field(cf: CompressedField) -> Dict:
+    """Exact inverse of compress_field (reference / testing path)."""
+    params = dict(cf.extras)
+    for k, efs in cf.factors.items():
+        params[k] = jnp.stack([ef.decode().reshape(ef.nd_shape)
+                               for ef in efs])
+    return params
+
+
 def factor_report(params) -> Dict[str, Dict]:
     """Per-factor encoding decision + storage for the TensoRF field params."""
     out = {}
-    for k in ("sigma_planes", "sigma_lines", "app_planes", "app_lines"):
+    for k in FACTOR_KEYS:
         w = np.asarray(params[k])
         for m in range(3):
             wm = w[m].reshape(w.shape[1], -1)

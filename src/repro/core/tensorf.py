@@ -16,6 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.rtnerf import NeRFConfig
+from repro.core import sparse
+from repro.kernels import bitmap_decode
+from repro.kernels import coo_gather as coo_gather_kernel
+from repro.kernels import ops
 from repro.models.common import Maker, PL, positional_encoding, split_pl
 
 # mode m pairs plane axes PLANE_AXES[m] with line axis LINE_AXES[m]
@@ -117,6 +121,106 @@ def eval_app_features(params, cfg: NeRFConfig, pts: jax.Array) -> jax.Array:
     return feat @ params["basis"]                  # (N, app_dim)
 
 
+# --------------------------------------------------------------------------
+# Compressed-field (hybrid bitmap/COO) evaluation — paper Sec. 4.2.2.
+# Samples the encoded factor streams directly: the decode happens per grid
+# lookup (bitmap prefix-popcount / COO binary search), never materialising
+# the dense grids. Dispatch: Pallas kernels on TPU, jnp oracles on CPU
+# (kernels/ops.py `force` semantics).
+# --------------------------------------------------------------------------
+
+
+def gather_factor(ef: "sparse.EncodedFactor", cols: jax.Array,
+                  force=None) -> jax.Array:
+    """All R rows of an encoded (R, ncols) factor at column indices `cols`
+    (N,) -> (R, N). Callers batch the whole interpolation stencil into one
+    call, so each factor read is a single fused gather over the stream.
+    """
+    if ef.fmt == "dense":
+        return ef.dense[:, cols]
+    rows, ncols = ef.shape
+    q = (jnp.arange(rows, dtype=jnp.int32)[:, None] * ncols
+         + cols[None, :].astype(jnp.int32)).reshape(-1)
+    nq = q.shape[0]
+    if ef.fmt == "bitmap":
+        block = bitmap_decode.DEFAULT_BLOCK_Q
+    else:
+        block = coo_gather_kernel.DEFAULT_BLOCK_Q
+    pad = (-nq) % block                  # kernel block alignment
+    if pad:
+        q = jnp.concatenate([q, jnp.zeros((pad,), jnp.int32)])
+    if ef.fmt == "bitmap":
+        e = ef.bitmap
+        out = ops.bitmap_gather(e.words, e.rowptr, e.values, q, cols=ncols,
+                                force=force)
+    else:
+        e = ef.coo
+        out = ops.coo_gather(e.coords, e.values, q, force=force)
+    return out[:nq].reshape(rows, -1)
+
+
+def _interp_line_enc(ef, x: jax.Array, force=None) -> jax.Array:
+    """Encoded counterpart of _interp_line: (R, N) linear interp. Both
+    stencil endpoints go through one gather."""
+    g = ef.ncols
+    x = jnp.clip(x, 0.0, g - 1.0)
+    x0 = jnp.clip(jnp.floor(x).astype(jnp.int32), 0, g - 2)
+    f = x - x0
+    v0, v1 = jnp.split(
+        gather_factor(ef, jnp.concatenate([x0, x0 + 1]), force), 2, axis=1)
+    return v0 * (1 - f) + v1 * f
+
+
+def _interp_plane_enc(ef, u: jax.Array, v: jax.Array, force=None) -> jax.Array:
+    """Encoded counterpart of _interp_plane: (R, N) bilinear interp over a
+    (R, G, G) plane stored as a (R, G*G) encoded matrix. All four stencil
+    corners go through one gather."""
+    g = int(ef.nd_shape[-1])
+    u = jnp.clip(u, 0.0, g - 1.0)
+    v = jnp.clip(v, 0.0, g - 1.0)
+    u0 = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, g - 2)
+    v0 = jnp.clip(jnp.floor(v).astype(jnp.int32), 0, g - 2)
+    fu, fv = u - u0, v - v0
+    c00 = u0 * g + v0
+    p00, p01, p10, p11 = jnp.split(
+        gather_factor(ef, jnp.concatenate([c00, c00 + 1, c00 + g,
+                                           c00 + g + 1]), force),
+        4, axis=1)
+    return (p00 * (1 - fu) * (1 - fv) + p01 * (1 - fu) * fv
+            + p10 * fu * (1 - fv) + p11 * fu * fv)
+
+
+def vm_components_hybrid(plane_efs, line_efs, pts_g, force=None) -> jax.Array:
+    """Eq. 2 inner products sampled from the compressed stream: (3, R, N)."""
+    outs = []
+    for m in range(3):
+        a, b = PLANE_AXES[m]
+        pm = _interp_plane_enc(plane_efs[m], pts_g[:, a], pts_g[:, b], force)
+        lm = _interp_line_enc(line_efs[m], pts_g[:, LINE_AXES[m]], force)
+        outs.append(pm * lm)
+    return jnp.stack(outs)
+
+
+def eval_sigma_hybrid(cf: "sparse.CompressedField", cfg: NeRFConfig,
+                      pts: jax.Array, force=None) -> jax.Array:
+    """eval_sigma over a CompressedField — bit-identical math to the dense
+    path, but every factor read goes through the hybrid codec."""
+    pts_g = to_grid(cfg, pts)
+    comp = vm_components_hybrid(cf.factors["sigma_planes"],
+                                cf.factors["sigma_lines"], pts_g, force)
+    raw = jnp.sum(comp, axis=(0, 1))
+    return jax.nn.softplus(raw)
+
+
+def eval_app_features_hybrid(cf: "sparse.CompressedField", cfg: NeRFConfig,
+                             pts: jax.Array, force=None) -> jax.Array:
+    pts_g = to_grid(cfg, pts)
+    comp = vm_components_hybrid(cf.factors["app_planes"],
+                                cf.factors["app_lines"], pts_g, force)
+    feat = comp.reshape(3 * cfg.r_color, -1).T
+    return feat @ cf.extras["basis"]
+
+
 def eval_color(params, cfg: NeRFConfig, feats: jax.Array,
                dirs: jax.Array) -> jax.Array:
     """View-dependent color MLP. feats (N, app_dim); dirs (N, 3) unit."""
@@ -151,16 +255,29 @@ def prune_factors(params, tol: float = 1e-3):
     """Hard-threshold tiny factor entries to exact zeros (post-training step
     that realises the sparsity the hybrid encoding consumes)."""
     out = dict(params)
-    for k in ("sigma_planes", "sigma_lines", "app_planes", "app_lines"):
+    for k in sparse.FACTOR_KEYS:
         w = params[k]
         out[k] = jnp.where(jnp.abs(w) < tol, 0.0, w)
+    return out
+
+
+def prune_to_sparsity(params, target: float):
+    """Magnitude-prune each factor tensor to (at least) `target` fraction of
+    exact zeros — the post-training sparsification step that puts the field
+    into the regime the hybrid codec is built for (paper Fig. 5 reports
+    50-90% natural sparsity; this makes the level explicit and tunable)."""
+    out = dict(params)
+    for k in sparse.FACTOR_KEYS:
+        w = params[k]
+        thresh = jnp.quantile(jnp.abs(w).reshape(-1), target)
+        out[k] = jnp.where(jnp.abs(w) <= thresh, 0.0, w)
     return out
 
 
 def factor_sparsity(params) -> Dict[str, float]:
     """Fraction of exact zeros per factor (paper Fig. 5)."""
     out = {}
-    for k in ("sigma_planes", "sigma_lines", "app_planes", "app_lines"):
+    for k in sparse.FACTOR_KEYS:
         w = params[k]
         out[k] = float(jnp.mean(w == 0.0))
     return out

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.configs.rtnerf import NeRFConfig
 from repro.core import occupancy as occ_lib
 from repro.core import pipeline as rt_pipe
-from repro.core import rendering, tensorf
+from repro.core import rendering, sparse, tensorf
 from repro.data import rays as rays_lib
 from repro.optim import adamw
 
@@ -74,13 +74,25 @@ def train_nerf(cfg: NeRFConfig, scene_name: str, *, steps: int = 400,
 
 def eval_view(params, cfg: NeRFConfig, cubes, cam, gt, *,
               pipeline: str = "rtnerf", order_mode: str = "octant",
-              chunk: int = 1, intersect: str = "box"):
-    """Render one view with either pipeline; return (psnr, stats, img)."""
+              chunk: int = 1, intersect: str = "box",
+              field_mode: str = "dense"):
+    """Render one view with either pipeline; return (psnr, stats, img).
+
+    field_mode="hybrid" (rtnerf pipeline only) evaluates the field from its
+    hybrid bitmap/COO encoding; `params` may be a sparse.CompressedField to
+    amortise the encoding across views.
+    """
     if pipeline == "rtnerf":
         img, stats = rt_pipe.render_rtnerf(params, cfg, cubes, cam,
                                            order_mode=order_mode, chunk=chunk,
-                                           intersect=intersect)
+                                           intersect=intersect,
+                                           field_mode=field_mode)
     else:
+        if field_mode != "dense":
+            raise ValueError("field_mode='hybrid' requires pipeline='rtnerf' "
+                             "(the uniform baseline has no compressed path)")
+        if isinstance(params, sparse.CompressedField):
+            params = sparse.decompress_field(params)
         o, d = rendering.camera_rays(cam)
         img, stats = rendering.render_uniform(params, cfg, cubes, o, d)
     p = float(rendering.psnr(jnp.clip(img, 0, 1), gt))

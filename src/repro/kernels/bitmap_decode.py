@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_ROWS = 8
+DEFAULT_BLOCK_Q = 512
 
 
 def _kernel(words_ref, rowptr_ref, values_ref, x_ref, y_ref, *, cols: int):
@@ -37,6 +38,59 @@ def _kernel(words_ref, rowptr_ref, values_ref, x_ref, y_ref, *, cols: int):
     y_ref[...] = jnp.dot(w, x_ref[...],
                          preferred_element_type=jnp.float32
                          ).astype(y_ref.dtype)
+
+
+def _gather_kernel(words_ref, rowptr_ref, values_ref, q_ref, out_ref, *,
+                   cols: int):
+    """Random-access block: per query lane, bit test + prefix-popcount over
+    the query row's bitmap words (the ASIC's fixed 3-cycle search)."""
+    words = words_ref[...]                           # (rows, W) in VMEM
+    q = q_ref[...]
+    r = q // cols
+    c = q % cols
+    wi = (c // 32).astype(jnp.int32)
+    bi = (c % 32).astype(jnp.uint32)
+    qwords = jnp.take(words, r, axis=0)              # (BQ, W)
+    widx = jnp.arange(words.shape[1], dtype=jnp.int32)[None, :]
+    below = jnp.left_shift(jnp.uint32(1), bi) - jnp.uint32(1)
+    mask = jnp.where(widx < wi[:, None], jnp.uint32(0xFFFFFFFF),
+                     jnp.where(widx == wi[:, None], below[:, None],
+                               jnp.uint32(0)))
+    prefix = jnp.sum(jax.lax.population_count(qwords & mask), axis=1)
+    word_at = jnp.take(words.reshape(-1), r * words.shape[1] + wi)
+    bit = (word_at >> bi) & jnp.uint32(1)
+    addr = jnp.take(rowptr_ref[...], r) + prefix.astype(jnp.int32)
+    nv = values_ref.shape[0]
+    vals = jnp.take(values_ref[...], jnp.clip(addr, 0, nv - 1))
+    out_ref[...] = jnp.where(bit > 0, vals, 0).astype(out_ref.dtype)
+
+
+def bitmap_gather(words: jax.Array, rowptr: jax.Array, values: jax.Array,
+                  queries: jax.Array, *, cols: int,
+                  block_q: int = DEFAULT_BLOCK_Q,
+                  interpret: bool = True) -> jax.Array:
+    """values of the encoded matrix at linear indices `queries` (0 at zeros).
+
+    The whole compressed stream (bitmap words + rowptr + packed values) sits
+    in VMEM; each grid step serves one query block. Interpret mode is the
+    CPU validation target; the oracle is ref.bitmap_gather_ref.
+    """
+    nq = queries.shape[0]
+    bq = min(block_q, nq)
+    assert nq % bq == 0, (nq, bq)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, cols=cols),
+        grid=(nq // bq,),
+        in_specs=[
+            pl.BlockSpec(words.shape, lambda i: (0, 0)),
+            pl.BlockSpec((rowptr.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((values.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nq,), values.dtype),
+        interpret=interpret,
+    )(words, rowptr, values, queries)
 
 
 def bitmap_matmul(words: jax.Array, rowptr: jax.Array, values: jax.Array,

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.bitmap_decode import bitmap_gather as _bitmap_gather_pallas
 from repro.kernels.bitmap_decode import bitmap_matmul as _bitmap_pallas
 from repro.kernels.coo_gather import coo_gather as _coo_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
@@ -33,6 +34,16 @@ def bitmap_matmul(words, rowptr, values, x, *, cols: int,
         return ref.bitmap_decode_matmul_ref(words, rowptr, values, x, cols)
     return _bitmap_pallas(words, rowptr, values, x, cols=cols,
                           interpret=(jax.default_backend() != "tpu"))
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "force"))
+def bitmap_gather(words, rowptr, values, queries, *, cols: int,
+                  force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return ref.bitmap_gather_ref(words, rowptr, values, queries, cols)
+    return _bitmap_gather_pallas(words, rowptr, values, queries, cols=cols,
+                                 interpret=(jax.default_backend() != "tpu"))
 
 
 @functools.partial(jax.jit, static_argnames=("force",))

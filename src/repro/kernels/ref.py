@@ -25,6 +25,19 @@ def bitmap_decode_matmul_ref(words: jax.Array, rowptr: jax.Array,
     return w @ x
 
 
+def bitmap_gather_ref(words: jax.Array, rowptr: jax.Array, values: jax.Array,
+                      queries: jax.Array, cols: int) -> jax.Array:
+    """Random access into a bitmap-encoded (rows, cols) matrix.
+
+    queries (Q,) linear row-major indices. Per query: one bit test plus a
+    prefix-popcount over the row's bitmap words — the ASIC's fixed-latency
+    search, vectorised over the query block. The math lives in
+    core/sparse.bitmap_lookup_linear (the codec's single source of truth).
+    """
+    from repro.core.sparse import bitmap_lookup_linear
+    return bitmap_lookup_linear(words, rowptr, values, queries, cols)
+
+
 def coo_gather_ref(coords: jax.Array, values: jax.Array,
                    queries: jax.Array) -> jax.Array:
     """Look up linear indices `queries` in a sorted COO stream (0 if absent)."""

@@ -4,7 +4,8 @@ novel-view rendering (rtnerf).
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --arch rtnerf \
-        --scene lego --views 2 --res 64
+        --scene lego --views 2 --res 64 \
+        --field-mode hybrid --prune-sparsity 0.9
 """
 from __future__ import annotations
 
@@ -74,6 +75,8 @@ def serve_lm(args):
 
 def serve_nerf(args):
     from repro.configs.rtnerf import NeRFConfig
+    from repro.core import occupancy as occ_lib
+    from repro.core import sparse, tensorf
     from repro.core import train as nerf_train
     from repro.data import rays as rays_lib
 
@@ -82,19 +85,35 @@ def serve_nerf(args):
                      max_samples_per_ray=128, train_rays=1024)
     res = nerf_train.train_nerf(cfg, args.scene, steps=args.train_steps,
                                 n_views=8, image_hw=args.res, log_every=100)
+    params, cubes = res.params, res.cubes
+    if args.prune_sparsity > 0.0:
+        # magnitude-sparsify then rebuild occupancy (the field changed)
+        params = tensorf.prune_to_sparsity(params, args.prune_sparsity)
+        occ = occ_lib.build_occupancy(params, cfg, sigma_thresh=0.5)
+        cubes = occ_lib.extract_cubes(occ, cfg)
+    field = params
+    if args.field_mode == "hybrid":
+        # encode once, serve every view from the compressed stream
+        field = sparse.compress_field(params, cfg)
+        print(f"compressed field: {field.factor_bytes()} B factors "
+              f"(dense {field.dense_factor_bytes()} B, "
+              f"{field.compression_ratio():.2f}x)")
     scene = rays_lib.make_scene(args.scene)
     cams = rays_lib.make_cameras(args.views, args.res, args.res)
     total = 0.0
     for i, cam in enumerate(cams):
         gt = rays_lib.render_gt(scene, cam)
         t0 = time.time()
-        p, stats, _ = nerf_train.eval_view(res.params, cfg, res.cubes, cam,
-                                           gt, pipeline="rtnerf", chunk=8)
+        p, stats, _ = nerf_train.eval_view(field, cfg, cubes, cam,
+                                           gt, pipeline="rtnerf", chunk=8,
+                                           field_mode=args.field_mode)
         dt = time.time() - t0
         total += dt
         print(f"view {i}: psnr={p:.2f} {dt:.2f}s "
-              f"occ_accesses={stats['occ_accesses']:.0f}")
-    print(f"served {args.views} views, {args.views / total:.3f} FPS (CPU)")
+              f"occ_accesses={stats['occ_accesses']:.0f} "
+              f"factor_bytes={stats['factor_bytes']:.0f}")
+    print(f"served {args.views} views, {args.views / total:.3f} FPS (CPU), "
+          f"field_mode={args.field_mode}")
 
 
 def main():
@@ -109,6 +128,13 @@ def main():
     ap.add_argument("--views", type=int, default=2)
     ap.add_argument("--res", type=int, default=64)
     ap.add_argument("--train-steps", type=int, default=200)
+    ap.add_argument("--field-mode", choices=("dense", "hybrid"),
+                    default="dense",
+                    help="rtnerf only: evaluate raw factors or the hybrid "
+                         "bitmap/COO compressed stream (Sec. 4.2.2)")
+    ap.add_argument("--prune-sparsity", type=float, default=0.0,
+                    help="rtnerf only: magnitude-prune factors to this "
+                         "sparsity before serving (0 = training prune only)")
     args = ap.parse_args()
     if args.arch == "rtnerf":
         serve_nerf(args)

@@ -1,0 +1,179 @@
+"""Compressed-field (hybrid bitmap/COO) rendering path: codec boundary,
+dense/hybrid eval parity, and end-to-end render parity (paper Sec. 4.2.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import occupancy as occ_lib
+from repro.core import pipeline as rt_pipe
+from repro.core import rendering, sparse, tensorf
+from repro.data import rays as rays_lib
+
+CFG = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=256,
+                 r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                 max_samples_per_ray=64, train_rays=256)
+
+
+def _pruned_field(target=0.9, seed=0):
+    params = tensorf.init_field(CFG, jax.random.PRNGKey(seed))
+    return tensorf.prune_to_sparsity(params, target)
+
+
+def test_prune_to_sparsity_hits_target():
+    params = _pruned_field(0.9)
+    for k, s in tensorf.factor_sparsity(params).items():
+        assert s >= 0.89, (k, s)
+
+
+def test_compress_field_roundtrip_exact():
+    params = _pruned_field(0.9)
+    cf = sparse.compress_field(params, CFG)
+    rec = sparse.decompress_field(cf)
+    for k in sparse.FACTOR_KEYS:
+        np.testing.assert_array_equal(np.asarray(rec[k]),
+                                      np.asarray(params[k]))
+    # extras pass through untouched
+    assert "basis" in cf.extras and "mlp_w1" in cf.extras
+
+
+def test_compress_field_dense_factors_stay_dense():
+    """Don't pessimize: an unpruned (fully dense) field must not be encoded
+    into a format larger than its raw bytes."""
+    params = tensorf.init_field(CFG, jax.random.PRNGKey(1))
+    cf = sparse.compress_field(params, CFG)
+    for efs in cf.factors.values():
+        for ef in efs:
+            assert ef.fmt == "dense"
+            assert ef.storage() <= ef.dense_storage()
+    assert cf.factor_bytes() == cf.dense_factor_bytes()
+
+
+def test_compress_field_bytes_ratio_at_90pct():
+    cf = sparse.compress_field(_pruned_field(0.9), CFG)
+    assert cf.compression_ratio() >= 3.0
+    for efs in cf.factors.values():
+        for ef in efs:
+            assert ef.fmt == "coo"          # 0.9 >= 0.8 threshold
+            assert ef.storage() < ef.dense_storage()
+
+
+def test_compress_field_respects_threshold():
+    """Between the storage break-even and the 0.80 switch, factors encode
+    as bitmap; at/above the switch, COO."""
+    params = _pruned_field(0.6)
+    cf = sparse.compress_field(params, CFG, threshold=0.80)
+    fmts = {ef.fmt for efs in cf.factors.values() for ef in efs}
+    assert "coo" not in fmts                # 0.6 sparsity < threshold
+    cf2 = sparse.compress_field(params, CFG, threshold=0.55)
+    fmts2 = {ef.fmt for efs in cf2.factors.values() for ef in efs}
+    assert "coo" in fmts2
+
+
+@pytest.mark.parametrize("target", [0.6, 0.9])
+def test_eval_sigma_hybrid_matches_dense(target):
+    params = _pruned_field(target)
+    cf = sparse.compress_field(params, CFG)
+    pts = jax.random.uniform(jax.random.PRNGKey(2), (513, 3),
+                             minval=-1.4, maxval=1.4)
+    sd = np.asarray(tensorf.eval_sigma(params, CFG, pts))
+    sh = np.asarray(tensorf.eval_sigma_hybrid(cf, CFG, pts))
+    np.testing.assert_allclose(sh, sd, rtol=1e-6, atol=1e-6)
+
+
+def test_eval_app_features_hybrid_matches_dense():
+    params = _pruned_field(0.9)
+    cf = sparse.compress_field(params, CFG)
+    pts = jax.random.uniform(jax.random.PRNGKey(3), (257, 3),
+                             minval=-1.4, maxval=1.4)
+    fd = np.asarray(tensorf.eval_app_features(params, CFG, pts))
+    fh = np.asarray(tensorf.eval_app_features_hybrid(cf, CFG, pts))
+    np.testing.assert_allclose(fh, fd, rtol=1e-5, atol=1e-6)
+
+
+def test_hybrid_render_psnr_vs_dense():
+    """End-to-end: the RT-NeRF pipeline rendered from the compressed stream
+    must match the dense-factor render (>= 40 dB on a pruned toy field)."""
+    params = _pruned_field(0.9)
+    occ = occ_lib.build_occupancy(params, CFG, sigma_thresh=0.01)
+    cubes = occ_lib.extract_cubes(occ, CFG)
+    assert cubes.count > 0
+    cam = rays_lib.make_cameras(3, 32, 32)[0]
+    img_d, st_d = rt_pipe.render_rtnerf(params, CFG, cubes, cam, chunk=8,
+                                        field_mode="dense")
+    img_h, st_h = rt_pipe.render_rtnerf(params, CFG, cubes, cam, chunk=8,
+                                        field_mode="hybrid")
+    psnr = float(rendering.psnr(jnp.clip(img_h, 0, 1),
+                                jnp.clip(img_d, 0, 1)))
+    assert psnr >= 40.0, psnr
+    assert float(st_h["factor_bytes"]) * 3 <= float(st_d["factor_bytes"])
+    assert float(st_h["factor_bytes_dense"]) == float(st_d["factor_bytes"])
+
+
+def test_render_accepts_prebuilt_compressed_field():
+    params = _pruned_field(0.9)
+    occ = occ_lib.build_occupancy(params, CFG, sigma_thresh=0.01)
+    cubes = occ_lib.extract_cubes(occ, CFG)
+    cam = rays_lib.make_cameras(3, 24, 24)[0]
+    cf = sparse.compress_field(params, CFG)
+    img_cf, _ = rt_pipe.render_rtnerf(cf, CFG, cubes, cam, chunk=8,
+                                      field_mode="hybrid")
+    img_p, _ = rt_pipe.render_rtnerf(params, CFG, cubes, cam, chunk=8,
+                                     field_mode="hybrid")
+    np.testing.assert_allclose(np.asarray(img_cf), np.asarray(img_p),
+                               rtol=1e-6, atol=1e-6)
+    # dense mode decompresses a CompressedField rather than failing
+    img_dd, _ = rt_pipe.render_rtnerf(cf, CFG, cubes, cam, chunk=8,
+                                      field_mode="dense")
+    assert np.isfinite(np.asarray(img_dd)).all()
+
+
+def test_eval_view_rejects_hybrid_on_uniform_pipeline():
+    from repro.core import train as nerf_train
+    from repro.data import rays as rays_lib
+
+    params = _pruned_field(0.9)
+    occ = occ_lib.build_occupancy(params, CFG, sigma_thresh=0.01)
+    cubes = occ_lib.extract_cubes(occ, CFG)
+    cam = rays_lib.make_cameras(3, 16, 16)[0]
+    gt = jnp.zeros((16 * 16, 3))
+    with pytest.raises(ValueError, match="uniform"):
+        nerf_train.eval_view(params, CFG, cubes, cam, gt,
+                             pipeline="uniform", field_mode="hybrid")
+    # a CompressedField on the uniform pipeline decompresses, not crashes
+    cf = sparse.compress_field(params, CFG)
+    p, stats, img = nerf_train.eval_view(cf, CFG, cubes, cam, gt,
+                                         pipeline="uniform")
+    assert np.isfinite(np.asarray(img)).all()
+
+
+def test_render_rejects_unknown_field_mode():
+    params = _pruned_field(0.9)
+    occ = occ_lib.build_occupancy(params, CFG, sigma_thresh=0.01)
+    cubes = occ_lib.extract_cubes(occ, CFG)
+    cam = rays_lib.make_cameras(3, 16, 16)[0]
+    with pytest.raises(ValueError):
+        rt_pipe.render_rtnerf(params, CFG, cubes, cam, field_mode="sparse")
+
+
+def test_gather_factor_all_formats_agree():
+    """The renderer-facing gather must agree across dense/bitmap/coo
+    representations of the same factor."""
+    rng = np.random.RandomState(0)
+    w = rng.randn(6, 24 * 24).astype(np.float32)
+    w[rng.rand(*w.shape) < 0.85] = 0
+    cols = jnp.asarray(rng.randint(0, w.shape[1], 100), jnp.int32)
+    want = w[:, np.asarray(cols)]
+    for fmt in ("dense", "bitmap", "coo"):
+        ef = sparse.EncodedFactor(
+            fmt=fmt, nd_shape=(6, 24, 24), shape=w.shape,
+            nnz=int((w != 0).sum()), sparsity=sparse.sparsity(w))
+        if fmt == "dense":
+            ef.dense = jnp.asarray(w)
+        elif fmt == "bitmap":
+            ef.bitmap = sparse.encode_bitmap(w)
+        else:
+            ef.coo = sparse.encode_coo(w)
+        got = np.asarray(tensorf.gather_factor(ef, cols))
+        np.testing.assert_array_equal(got, want, err_msg=fmt)

@@ -8,7 +8,7 @@ from hypothesis import given, strategies as st
 
 from repro.core import sparse
 from repro.kernels import ops, ref
-from repro.kernels.bitmap_decode import bitmap_matmul
+from repro.kernels.bitmap_decode import bitmap_gather, bitmap_matmul
 from repro.kernels.coo_gather import coo_gather
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.volume_render import volume_render
@@ -38,6 +38,47 @@ def test_bitmap_all_zero():
     y = bitmap_matmul(enc.words, enc.rowptr, enc.values, jnp.asarray(x),
                       cols=32, interpret=True)
     assert np.all(np.asarray(y) == 0)
+
+
+@pytest.mark.parametrize("rows,cols,nq", [(8, 32, 128), (16, 96, 512),
+                                          (40, 70, 256)])
+@pytest.mark.parametrize("density", [0.0, 0.1, 0.5, 1.0])
+def test_bitmap_gather_sweep(rows, cols, nq, density):
+    """Pallas bitmap random-access (interpret) vs jnp oracle vs dense."""
+    rng = np.random.RandomState(rows + cols + nq)
+    w = rng.randn(rows, cols).astype(np.float32)
+    w[rng.rand(rows, cols) >= density] = 0
+    enc = sparse.encode_bitmap(w)
+    q = jnp.asarray(rng.randint(0, rows * cols, nq), jnp.int32)
+    got_pal = bitmap_gather(enc.words, enc.rowptr, enc.values, q,
+                            cols=cols, interpret=True)
+    got_ref = ref.bitmap_gather_ref(enc.words, enc.rowptr, enc.values, q,
+                                    cols)
+    want = w.reshape(-1)[np.asarray(q)]
+    np.testing.assert_array_equal(np.asarray(got_pal), want)
+    np.testing.assert_array_equal(np.asarray(got_ref), want)
+
+
+def test_bitmap_gather_empty_rows():
+    w = np.zeros((8, 64), np.float32)
+    w[3, 10] = 2.5
+    w[6, 63] = -1.0
+    enc = sparse.encode_bitmap(w)
+    q = jnp.arange(8 * 64, dtype=jnp.int32)
+    got = bitmap_gather(enc.words, enc.rowptr, enc.values, q, cols=64,
+                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(got).reshape(8, 64), w)
+
+
+def test_ops_bitmap_gather_ref_dispatch():
+    rng = np.random.RandomState(5)
+    w = rng.randn(8, 32).astype(np.float32)
+    w[rng.rand(8, 32) < 0.6] = 0
+    enc = sparse.encode_bitmap(w)
+    q = jnp.asarray(rng.randint(0, 8 * 32, 64), jnp.int32)
+    got = ops.bitmap_gather(enc.words, enc.rowptr, enc.values, q, cols=32)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  w.reshape(-1)[np.asarray(q)])
 
 
 # ------------------------------------------------------------------- coo ---

@@ -82,6 +82,67 @@ def test_encode_hybrid_picks_by_sparsity():
     assert fmt2 == "coo" and s2 > 0.8
 
 
+def test_encode_hybrid_roundtrip_at_threshold_boundary():
+    """Exactly-0.79 sparsity must pick bitmap, exactly-0.81 COO, and both
+    must round-trip bit-exactly (the codec boundary the renderer relies on)."""
+    rng = np.random.RandomState(0)
+    for n_zero, want_fmt in ((79, "bitmap"), (80, "coo"), (81, "coo")):
+        w = rng.randn(10, 10).astype(np.float32)
+        w[np.unravel_index(rng.permutation(100)[:n_zero], w.shape)] = 0
+        assert int((w == 0).sum()) == n_zero
+        fmt, s, enc = sparse.encode_hybrid(w)
+        assert fmt == want_fmt, (n_zero, fmt)
+        dec = np.asarray(sparse.decode_coo(enc) if fmt == "coo"
+                         else sparse.decode_bitmap(enc))
+        np.testing.assert_array_equal(dec, w)
+
+
+def test_bitmap_all_zero_and_empty_rows():
+    w = np.zeros((8, 40), np.float32)
+    enc = sparse.encode_bitmap(w)
+    assert enc.nnz == 0
+    np.testing.assert_array_equal(np.asarray(sparse.decode_bitmap(enc)), w)
+    q = jnp.arange(8 * 40, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(sparse.bitmap_lookup(enc, q)),
+                                  np.zeros(8 * 40, np.float32))
+    # rows 0, 3, 7 empty; lookups across empty rows must still land on the
+    # right packed addresses for the non-empty ones
+    w2 = np.zeros((8, 40), np.float32)
+    rng = np.random.RandomState(1)
+    for r in (1, 2, 4, 5, 6):
+        w2[r, rng.randint(0, 40, 7)] = rng.randn(7)
+    enc2 = sparse.encode_bitmap(w2)
+    got = np.asarray(sparse.bitmap_lookup(enc2, q)).reshape(8, 40)
+    np.testing.assert_array_equal(got, w2)
+
+
+def test_coo_all_zero_and_empty_rows():
+    w = np.zeros((4, 32), np.float32)
+    enc = sparse.encode_coo(w)
+    assert enc.nnz == 0
+    np.testing.assert_array_equal(np.asarray(sparse.decode_coo(enc)), w)
+    q = jnp.arange(4 * 32, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(sparse.coo_lookup(enc, q)),
+                                  np.zeros(4 * 32, np.float32))
+    w2 = np.zeros((4, 32), np.float32)
+    w2[2, 5] = 1.5
+    w2[2, 30] = -2.0
+    enc2 = sparse.encode_coo(w2)
+    got = np.asarray(sparse.coo_lookup(enc2, q)).reshape(4, 32)
+    np.testing.assert_array_equal(got, w2)
+
+
+def test_bitmap_lookup_matches_decode():
+    rng = np.random.RandomState(7)
+    w = rng.randn(13, 70).astype(np.float32)
+    w[rng.rand(13, 70) < 0.5] = 0
+    enc = sparse.encode_bitmap(w)
+    q = jnp.asarray(rng.randint(0, 13 * 70, 300), jnp.int32)
+    got = np.asarray(sparse.bitmap_lookup(enc, q))
+    want = np.asarray(sparse.decode_bitmap(enc)).reshape(-1)[np.asarray(q)]
+    np.testing.assert_array_equal(got, want)
+
+
 def test_factor_report_on_field():
     import jax
     from repro.configs.rtnerf import NeRFConfig
