@@ -44,8 +44,9 @@ def get_trained(scene: str, steps: int = 250, image_hw: int = 56):
         return BENCH_CFG, params, cubes
     res = nerf_train.train_nerf(BENCH_CFG, scene, steps=steps, n_views=8,
                                 image_hw=image_hw, log_every=10_000,
-                                sigma_thresh=0.5,   # thin scenes (mic) need
-                                verbose=False)      # a low cube threshold
+                                # thin scenes (mic) need a low cube threshold
+                                sigma_thresh=BENCH_CFG.occ_sigma_thresh,
+                                verbose=False)
     with open(path, "wb") as f:
         pickle.dump((jax.tree.map(np.asarray, res.params),
                      (np.asarray(res.cubes.centers),

@@ -68,7 +68,8 @@ def main():
     failures = []
     for level in levels:
         params = tensorf.prune_to_sparsity(res.params, level)
-        occ = occ_lib.build_occupancy(params, cfg, sigma_thresh=0.5)
+        occ = occ_lib.build_occupancy(params, cfg,
+                                      sigma_thresh=cfg.occ_sigma_thresh)
         cubes = occ_lib.extract_cubes(occ, cfg)
         cf = sparse.compress_field(params, cfg)
 

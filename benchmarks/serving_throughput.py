@@ -1,0 +1,158 @@
+"""Batched multi-view serving (serving.RenderEngine) vs the sequential
+per-view loop it replaced, from the same resident compressed field.
+
+Sequential = the pre-engine `serve --arch rtnerf` path: one
+`eval_view`/`render_rtnerf` call per camera (re-traced per view, every
+(cube, pixel) pair evaluated). Batched = the engine: one jitted
+micro-batched ray step with active-pair compaction, octant-cached cube
+orderings, and the encoded streams resident. Both render the same cameras
+against sphere-traced ground truth, so the FPS ratio is at equal PSNR.
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py
+    PYTHONPATH=src python benchmarks/serving_throughput.py --tiny --check
+
+Emits BENCH_serving.json (FPS, p50/p95 latency, factor bytes) so the perf
+trajectory is tracked across PRs. --check exits non-zero unless batched
+FPS >= 1.5x sequential at PSNR parity (within 0.5 dB).
+
+CPU wall-clock is a relative signal (TPU is the compile target), but the
+batched/sequential *ratio* is the claim under test: what the engine
+amortises — compilation, encode, ordering — and what compaction skips.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import occupancy as occ_lib
+from repro.core import sparse, tensorf
+from repro.core import train as nerf_train
+from repro.data import rays as rays_lib
+from repro.serving import RenderEngine
+
+
+def pctl(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scene", default="lego")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--res", type=int, default=56)
+    ap.add_argument("--views", type=int, default=8)
+    ap.add_argument("--prune", type=float, default=0.9)
+    ap.add_argument("--field-mode", choices=("dense", "hybrid"),
+                    default="hybrid")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape: 20 steps, 32^2, 5 views")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless batched FPS >= 1.5x the "
+                         "sequential loop at PSNR parity (0.5 dB)")
+    args = ap.parse_args()
+    if args.tiny:
+        args.steps, args.res, args.views = 20, 32, 5
+
+    if args.tiny:
+        cfg = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=320,
+                         r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                         max_samples_per_ray=64, train_rays=512)
+    else:
+        cfg = NeRFConfig(grid_res=40, occ_res=40, cube_size=4, max_cubes=768,
+                         r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                         max_samples_per_ray=112, train_rays=1024)
+
+    res = nerf_train.train_nerf(cfg, args.scene, steps=args.steps, n_views=8,
+                                image_hw=args.res, log_every=10_000,
+                                verbose=False)
+    params = tensorf.prune_to_sparsity(res.params, args.prune)
+    occ = occ_lib.build_occupancy(params, cfg,
+                                  sigma_thresh=cfg.occ_sigma_thresh)
+    cubes = occ_lib.extract_cubes(occ, cfg)
+    field = sparse.compress_field(params, cfg) \
+        if args.field_mode == "hybrid" else params
+
+    scene = rays_lib.make_scene(args.scene)
+    cams = rays_lib.make_cameras(args.views, args.res, args.res)
+    gts = [rays_lib.render_gt(scene, cam) for cam in cams]
+
+    # -- sequential per-view loop (the replaced serve path) ----------------
+    seq_lat, seq_psnr = [], []
+    t_seq = time.time()
+    for cam, gt in zip(cams, gts):
+        t0 = time.time()
+        p, stats, _ = nerf_train.eval_view(field, cfg, cubes, cam, gt,
+                                           pipeline="rtnerf", chunk=8,
+                                           field_mode=args.field_mode)
+        seq_lat.append(time.time() - t0)
+        seq_psnr.append(p)
+    seq_total = time.time() - t_seq
+    seq_fps = args.views / seq_total
+
+    # -- batched engine over the same resident field -----------------------
+    engine = RenderEngine(cfg, field, cubes, field_mode=args.field_mode,
+                          ray_chunk=args.res * args.res,
+                          max_batch_views=args.views)
+    t_bat = time.time()
+    results = engine.render_views(cams, gts)
+    bat_total = time.time() - t_bat
+    bat_fps = args.views / bat_total
+    bat_psnr = [r.psnr for r in results]
+    bat_lat = [r.latency_s for r in results]
+    es = engine.stats()
+
+    speedup = bat_fps / max(seq_fps, 1e-9)
+    report = {
+        "scene": args.scene, "views": args.views, "res": args.res,
+        "prune": args.prune, "field_mode": args.field_mode,
+        "factor_bytes": es["factor_bytes"],
+        "factor_bytes_dense": es["factor_bytes_dense"],
+        "occ_accesses_per_view": es["occ_accesses_per_view"],
+        "dropped_pairs": es["dropped_pairs"],
+        "ordering_cache": es["ordering_cache"],
+        "sequential": {
+            "fps": seq_fps, "total_s": seq_total,
+            "latency_p50_s": pctl(seq_lat, 50),
+            "latency_p95_s": pctl(seq_lat, 95),
+            "psnr_mean": float(np.mean(seq_psnr)),
+        },
+        "batched": {
+            "fps": bat_fps, "total_s": bat_total,
+            "latency_p50_s": pctl(bat_lat, 50),
+            "latency_p95_s": pctl(bat_lat, 95),
+            "psnr_mean": float(np.mean(bat_psnr)),
+        },
+        "speedup": speedup,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+
+    if args.check:
+        failures = []
+        if speedup < 1.5:
+            failures.append(f"batched speedup {speedup:.2f}x < 1.5x")
+        dp = float(np.mean(bat_psnr)) - float(np.mean(seq_psnr))
+        if dp < -0.5:
+            failures.append(f"batched psnr {np.mean(bat_psnr):.2f} more "
+                            f"than 0.5 dB below sequential "
+                            f"{np.mean(seq_psnr):.2f}")
+        if es["dropped_pairs"] > 0:
+            failures.append(f"{es['dropped_pairs']} ray-cube pairs dropped "
+                            "(pair budget too small)")
+        if failures:
+            print("CHECK FAILED: " + "; ".join(failures))
+            sys.exit(1)
+        print(f"CHECK OK: {speedup:.2f}x FPS over the sequential loop at "
+              f"PSNR parity ({np.mean(bat_psnr):.2f} vs "
+              f"{np.mean(seq_psnr):.2f} dB)")
+
+
+if __name__ == "__main__":
+    main()

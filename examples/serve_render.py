@@ -1,17 +1,19 @@
 """Batched novel-view rendering service demo (the paper's AR/VR serving
-scenario): one trained field, a stream of camera-pose requests, rendered
-through the RT-NeRF pipeline with view-dependent cube ordering per request.
+scenario): one trained field goes resident in a serving.RenderEngine, a
+stream of camera-pose requests is submitted, and the engine micro-batches
+them through its single jitted render step with octant-cached
+view-dependent cube ordering.
 
     PYTHONPATH=src python examples/serve_render.py --views 4
+    PYTHONPATH=src python examples/serve_render.py --ckpt-dir /tmp/chair  # reuse
 """
 import argparse
-import time
 
 import numpy as np
 
 from repro.configs.rtnerf import NeRFConfig
-from repro.core import train as nerf_train
 from repro.data import rays as rays_lib
+from repro.serving import RenderEngine
 
 
 def main():
@@ -19,32 +21,37 @@ def main():
     ap.add_argument("--scene", default="chair")
     ap.add_argument("--views", type=int, default=4)
     ap.add_argument("--res", type=int, default=56)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="train once and checkpoint here; repeated runs "
+                         "restore instead of retraining")
     args = ap.parse_args()
 
     cfg = NeRFConfig(grid_res=40, occ_res=40, cube_size=4, max_cubes=768,
                      r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
                      max_samples_per_ray=112, train_rays=1024)
-    print("preparing field (train once, serve many)...")
-    res = nerf_train.train_nerf(cfg, args.scene, steps=250, n_views=8,
-                                image_hw=args.res, log_every=10_000,
-                                verbose=False)
+    print("preparing field (train once or restore, serve many)...")
+    engine = RenderEngine.from_scene(
+        cfg, args.scene, ckpt_dir=args.ckpt_dir, train_steps=250, n_views=8,
+        image_hw=args.res, prune_sparsity=0.9, verbose=False,
+        ray_chunk=args.res * args.res, max_batch_views=args.views)
+
     scene = rays_lib.make_scene(args.scene)
     cams = rays_lib.make_cameras(args.views, args.res, args.res)
-
-    psnrs, times = [], []
-    for i, cam in enumerate(cams):       # request stream
-        gt = rays_lib.render_gt(scene, cam)
-        t0 = time.time()
-        p, stats, img = nerf_train.eval_view(res.params, cfg, res.cubes, cam,
-                                             gt, pipeline="rtnerf", chunk=8)
-        dt = time.time() - t0
-        psnrs.append(p)
-        times.append(dt)
-        print(f"request {i}: psnr={p:5.2f}  {dt:5.2f}s  "
-              f"tile={stats['tile']:.0f}  cubes={stats['n_cubes']:.0f}")
-    print(f"served {args.views} views | avg psnr {np.mean(psnrs):.2f} | "
-          f"{1.0 / np.mean(times[1:] or times):.2f} FPS steady-state (CPU; "
-          f"TPU roofline in EXPERIMENTS.md)")
+    futures = [engine.submit(cam, rays_lib.render_gt(scene, cam))
+               for cam in cams]                     # request stream
+    psnrs = []
+    for i, fut in enumerate(futures):
+        r = fut.result()
+        psnrs.append(r.psnr)
+        print(f"request {i}: psnr={r.psnr:5.2f}  latency={r.latency_s:5.2f}s  "
+              f"cubes={r.stats['occ_accesses']:.0f}")
+    s = engine.stats()
+    print(f"served {s['views_served']} views | avg psnr {np.mean(psnrs):.2f} "
+          f"| {s['fps']:.2f} FPS  p50={s['latency_p50_s']:.2f}s "
+          f"p95={s['latency_p95_s']:.2f}s | ordering-cache "
+          f"hits={s['ordering_cache']['hits']} | "
+          f"{s['compression_ratio']:.1f}x factor compression (CPU; TPU "
+          f"roofline in EXPERIMENTS.md)")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,9 @@ class NeRFConfig:
     max_cubes: int = 8192            # static bound on non-zero cubes
     step_size: float = 0.5           # march step in voxel units
     max_samples_per_ray: int = 512   # static bound (uniform baseline N)
+    occ_sigma_thresh: float = 0.5    # sigma cutoff for occupancy rebuilds
+                                     # after pruning / before serving (thin
+                                     # scenes like mic need a low cutoff)
     term_eps: float = 1e-4           # early-ray-termination threshold on T
     near: float = 2.0
     far: float = 6.0

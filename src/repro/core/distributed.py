@@ -58,6 +58,59 @@ def ray_sharding(rules: AxisRules, n_rays: int):
     return NamedSharding(mesh, spec)
 
 
+def stream_sharding(rules: AxisRules) -> NamedSharding:
+    """Sharding for the resident field's encoded streams (bitmap words /
+    rowptr / values, COO coords / values, dense factors, MLP): replicated.
+    Every device walks the whole stream — the streams are KB-to-MB scale and
+    read-only, while rays are the hot, shardable axis (`ray_sharding`)."""
+    return NamedSharding(rules.mesh, P())
+
+
+def place_field(field, rules: AxisRules):
+    """device_put a resident serving field onto the mesh: every stream array
+    replicated (stream_sharding). Accepts a raw params dict or a
+    sparse.CompressedField; on a single-device mesh this is a plain
+    device placement (the serving engine's fallback path)."""
+    import dataclasses
+
+    from repro.core import sparse
+
+    sh = stream_sharding(rules)
+    if isinstance(field, dict):
+        return {k: jax.device_put(v, sh) for k, v in field.items()}
+    if isinstance(field, sparse.CompressedField):
+        def place_ef(ef):
+            rep = {}
+            if ef.dense is not None:
+                rep["dense"] = jax.device_put(ef.dense, sh)
+            if ef.bitmap is not None:
+                b = ef.bitmap
+                rep["bitmap"] = dataclasses.replace(
+                    b, words=jax.device_put(b.words, sh),
+                    rowptr=jax.device_put(b.rowptr, sh),
+                    values=jax.device_put(b.values, sh))
+            if ef.coo is not None:
+                c = ef.coo
+                rep["coo"] = dataclasses.replace(
+                    c, coords=jax.device_put(c.coords, sh),
+                    values=jax.device_put(c.values, sh))
+            return dataclasses.replace(ef, **rep)
+
+        factors = {k: tuple(place_ef(ef) for ef in efs)
+                   for k, efs in field.factors.items()}
+        extras = {k: jax.device_put(v, sh) for k, v in field.extras.items()}
+        return dataclasses.replace(field, factors=factors, extras=extras)
+    return field
+
+
+def shard_rays(rules: AxisRules, rays_o, rays_d):
+    """Place one micro-batched ray chunk across the mesh's batch axes
+    (falls back to replication when the chunk doesn't divide the mesh —
+    the single-device path)."""
+    sh = ray_sharding(rules, rays_o.shape[0])
+    return jax.device_put(rays_o, sh), jax.device_put(rays_d, sh)
+
+
 def build_render_step(cfg: NeRFConfig):
     """Batched novel-view rendering: rays -> rgb (uniform pipeline with a
     replicated occupancy grid; the serving analogue of Step 2-1/2-2/3)."""

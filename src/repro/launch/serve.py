@@ -5,7 +5,7 @@ novel-view rendering (rtnerf).
         --reduced --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --arch rtnerf \
         --scene lego --views 2 --res 64 \
-        --field-mode hybrid --prune-sparsity 0.9
+        --field-mode hybrid --prune-sparsity 0.9 --ckpt-dir /tmp/lego-ckpt
 """
 from __future__ import annotations
 
@@ -74,45 +74,45 @@ def serve_lm(args):
 
 
 def serve_nerf(args):
+    """Streaming multi-view serving from one resident compressed field.
+
+    The field is restored from --ckpt-dir when a checkpoint exists (trained
+    once and saved there otherwise), encoded once, and every queued view is
+    rendered by the engine's single jitted micro-batched step — the
+    serving.RenderEngine subsystem, not a per-view train/encode/compile
+    loop.
+    """
     from repro.configs.rtnerf import NeRFConfig
-    from repro.core import occupancy as occ_lib
-    from repro.core import sparse, tensorf
-    from repro.core import train as nerf_train
     from repro.data import rays as rays_lib
+    from repro.serving import RenderEngine
 
     cfg = NeRFConfig(grid_res=48, occ_res=48, cube_size=4, max_cubes=1024,
                      r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
                      max_samples_per_ray=128, train_rays=1024)
-    res = nerf_train.train_nerf(cfg, args.scene, steps=args.train_steps,
-                                n_views=8, image_hw=args.res, log_every=100)
-    params, cubes = res.params, res.cubes
-    if args.prune_sparsity > 0.0:
-        # magnitude-sparsify then rebuild occupancy (the field changed)
-        params = tensorf.prune_to_sparsity(params, args.prune_sparsity)
-        occ = occ_lib.build_occupancy(params, cfg, sigma_thresh=0.5)
-        cubes = occ_lib.extract_cubes(occ, cfg)
-    field = params
+    engine = RenderEngine.from_scene(
+        cfg, args.scene, ckpt_dir=args.ckpt_dir,
+        train_steps=args.train_steps, n_views=8, image_hw=args.res,
+        prune_sparsity=args.prune_sparsity, field_mode=args.field_mode,
+        ray_chunk=args.res * args.res, max_batch_views=args.views)
     if args.field_mode == "hybrid":
-        # encode once, serve every view from the compressed stream
-        field = sparse.compress_field(params, cfg)
-        print(f"compressed field: {field.factor_bytes()} B factors "
-              f"(dense {field.dense_factor_bytes()} B, "
-              f"{field.compression_ratio():.2f}x)")
+        s = engine.stats()
+        print(f"compressed field: {s['factor_bytes']:.0f} B factors "
+              f"(dense {s['factor_bytes_dense']:.0f} B, "
+              f"{s['compression_ratio']:.2f}x)")
+
     scene = rays_lib.make_scene(args.scene)
     cams = rays_lib.make_cameras(args.views, args.res, args.res)
-    total = 0.0
-    for i, cam in enumerate(cams):
-        gt = rays_lib.render_gt(scene, cam)
-        t0 = time.time()
-        p, stats, _ = nerf_train.eval_view(field, cfg, cubes, cam,
-                                           gt, pipeline="rtnerf", chunk=8,
-                                           field_mode=args.field_mode)
-        dt = time.time() - t0
-        total += dt
-        print(f"view {i}: psnr={p:.2f} {dt:.2f}s "
-              f"occ_accesses={stats['occ_accesses']:.0f} "
-              f"factor_bytes={stats['factor_bytes']:.0f}")
-    print(f"served {args.views} views, {args.views / total:.3f} FPS (CPU), "
+    gts = [rays_lib.render_gt(scene, cam) for cam in cams]
+    futures = [engine.submit(cam, gt) for cam, gt in zip(cams, gts)]
+    for i, fut in enumerate(futures):
+        r = fut.result()
+        print(f"view {i}: psnr={r.psnr:.2f} latency={r.latency_s:.2f}s "
+              f"occ_accesses={r.stats['occ_accesses']:.0f} "
+              f"factor_bytes={r.stats['factor_bytes']:.0f}")
+    s = engine.stats()
+    print(f"served {s['views_served']} views, {s['fps']:.3f} FPS (CPU), "
+          f"p50={s['latency_p50_s']:.2f}s p95={s['latency_p95_s']:.2f}s, "
+          f"ordering-cache hits={s['ordering_cache']['hits']}, "
           f"field_mode={args.field_mode}")
 
 
@@ -135,6 +135,11 @@ def main():
     ap.add_argument("--prune-sparsity", type=float, default=0.0,
                     help="rtnerf only: magnitude-prune factors to this "
                          "sparsity before serving (0 = training prune only)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="rtnerf only: restore the trained field from this "
+                         "directory when a checkpoint exists; otherwise "
+                         "train once and save there (repeated serves reuse "
+                         "it instead of retraining)")
     args = ap.parse_args()
     if args.arch == "rtnerf":
         serve_nerf(args)

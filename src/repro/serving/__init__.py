@@ -1,0 +1,4 @@
+from repro.serving.engine import (  # noqa: F401
+    RenderEngine, ViewFuture, ViewResult, prepare_field)
+from repro.serving.batching import (  # noqa: F401
+    MicroBatchPlan, ViewSlice, plan_microbatches)

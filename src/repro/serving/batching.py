@@ -1,0 +1,72 @@
+"""Micro-batching of per-view ray batches into fixed-size chunks.
+
+The serving engine renders through ONE jitted step whose ray shape is a
+static `chunk`; queued views of any resolution are concatenated, padded to
+a chunk multiple, and cut into (n_chunks, chunk) — so compilation cost is
+paid once per engine, never per view or per resolution mix. `scatter`
+inverts the packing, handing each view back its contiguous pixel block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ViewSlice:
+    """Where one view's rays live in the packed stream."""
+    view_id: int
+    start: int
+    stop: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroBatchPlan:
+    """Packed ray stream + the bookkeeping to unpack per-view results."""
+    rays_o: np.ndarray          # (n_chunks, chunk, 3)
+    rays_d: np.ndarray          # (n_chunks, chunk, 3)
+    slices: Tuple[ViewSlice, ...]
+    total: int                  # true ray count before padding
+    chunk: int
+
+    @property
+    def n_chunks(self) -> int:
+        return self.rays_o.shape[0]
+
+    def scatter(self, outs: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """Chunk outputs (each (chunk, C)) -> per-view arrays, pad dropped."""
+        flat = np.concatenate([np.asarray(o) for o in outs])[: self.total]
+        return [flat[s.start: s.stop] for s in self.slices]
+
+
+def plan_microbatches(ray_batches: Sequence[Tuple[np.ndarray, np.ndarray]],
+                      chunk: int) -> MicroBatchPlan:
+    """Pack per-view (rays_o, rays_d) batches into fixed-size chunks.
+
+    Padding rays originate far outside every scene bound with a unit
+    direction, so they intersect no cube — they never register geometric
+    hits or compete with real rays for the renderer's per-step pair budget.
+    Their outputs are dropped by `scatter`.
+    """
+    if not ray_batches:
+        raise ValueError("plan_microbatches needs at least one view")
+    slices, pos = [], 0
+    for vid, (ro, _) in enumerate(ray_batches):
+        n = int(np.asarray(ro).shape[0])
+        slices.append(ViewSlice(vid, pos, pos + n))
+        pos += n
+    total = pos
+    pad = (-total) % chunk
+    ro = np.concatenate([np.asarray(o, np.float32) for o, _ in ray_batches])
+    rd = np.concatenate([np.asarray(d, np.float32) for _, d in ray_batches])
+    if pad:
+        ro = np.concatenate([ro, np.full((pad, 3), 1e6, np.float32)])
+        pad_d = np.zeros((pad, 3), np.float32)
+        pad_d[:, 2] = 1.0                    # unit dir, points away
+        rd = np.concatenate([rd, pad_d])
+    n_chunks = ro.shape[0] // chunk
+    return MicroBatchPlan(ro.reshape(n_chunks, chunk, 3),
+                          rd.reshape(n_chunks, chunk, 3),
+                          tuple(slices), total, chunk)

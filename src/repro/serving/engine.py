@@ -1,0 +1,341 @@
+"""Streaming multi-view serving engine over a resident compressed field.
+
+The RT-NeRF serving story (ROADMAP: "streaming / multi-view compressed
+serving"): load — or train once and checkpoint — a scene, encode the TensoRF
+factors into ONE resident `sparse.CompressedField`, and serve a stream of
+novel-view requests from it. Costs the per-view loop pays on every request
+are paid once per engine instead:
+
+  * encode        — the hybrid bitmap/COO encoding is built at engine
+                    construction and stays resident,
+  * compilation   — one jitted ray-render step (`pipeline.make_ray_renderer`)
+                    at a fixed chunk shape; queued views are micro-batched
+                    into those chunks (`serving.batching`) so new cameras and
+                    mixed resolutions never retrace,
+  * ordering      — per-view `order_cubes` schedules are cached by octant
+                    ranking (`pipeline.OrderingCache`, the paper's coarse
+                    view-dependent ordering) and reused bit-exactly across
+                    requests that rank the octants alike,
+  * placement     — the encoded streams are replicated and ray chunks
+                    sharded across the mesh (`core.distributed.place_field`
+                    / `shard_rays`), with a single-device fallback.
+
+API: `submit(cam) -> ViewFuture` queues a request; `flush()` renders the
+queue; `stats()` reports FPS, latency percentiles, occupancy accesses,
+factor bytes, and ordering-cache hit rates. `benchmarks/serving_throughput.py`
+measures this engine against the sequential per-view loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt_lib
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import distributed, occupancy as occ_lib
+from repro.core import pipeline as rt_pipe
+from repro.core import rendering, sparse, tensorf
+from repro.core.occupancy import CubeSet
+from repro.core.rendering import Camera
+from repro.models.sharding import make_rules
+from repro.serving.batching import plan_microbatches
+
+
+@dataclasses.dataclass
+class ViewResult:
+    view_id: int
+    img: np.ndarray                 # (H*W, 3)
+    psnr: Optional[float]           # vs the submitted gt, if any
+    latency_s: float                # submit -> resolve (queueing + render)
+    stats: Dict[str, float]
+
+
+class ViewFuture:
+    """Handle for one queued view; `result()` flushes the engine if needed."""
+
+    def __init__(self, engine: "RenderEngine", view_id: int):
+        self._engine = engine
+        self._view_id = view_id
+        self._result: Optional[ViewResult] = None
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> ViewResult:
+        if self._result is None:
+            self._engine.flush()
+        assert self._result is not None, "flush did not resolve this future"
+        return self._result
+
+    def _set(self, res: ViewResult):
+        self._result = res
+
+
+@dataclasses.dataclass
+class _Request:
+    cam: Camera
+    gt: Optional[np.ndarray]
+    future: ViewFuture
+    t_submit: float
+
+
+FIELD_META = "field_meta.json"
+
+
+def prepare_field(cfg: NeRFConfig, scene: str, *, ckpt_dir: Optional[str],
+                  train_steps: int = 200, n_views: int = 8,
+                  image_hw: int = 64, seed: int = 0, verbose: bool = True):
+    """Load the trained TensoRF params from `ckpt_dir`, or train once and
+    checkpoint there (ckpt/checkpoint.py). The *pre-prune* params are
+    stored, so one checkpoint serves every prune level. A restore validates
+    the checkpoint against the requested scene and cfg shapes (a mismatch
+    would otherwise render silently wrong images). Returns params."""
+    import json
+    import os
+
+    import jax
+
+    from repro.core import train as nerf_train
+
+    if ckpt_dir:
+        step = ckpt_lib.latest_step(ckpt_dir)
+        if step is not None:
+            meta_path = os.path.join(ckpt_dir, FIELD_META)
+            if not os.path.exists(meta_path):
+                raise ValueError(
+                    f"checkpoint at {ckpt_dir} has no {FIELD_META} — can't "
+                    f"verify which scene it holds; delete the directory to "
+                    f"retrain or restore the meta file")
+            with open(meta_path) as f:
+                meta = json.load(f)
+            if meta.get("scene") != scene:
+                raise ValueError(
+                    f"checkpoint at {ckpt_dir} holds scene "
+                    f"'{meta.get('scene')}', not '{scene}' — use a "
+                    f"different --ckpt-dir per scene")
+            like = jax.eval_shape(
+                lambda k: tensorf.init_field(cfg, k),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            if verbose:
+                # recorded steps/seed are reuse-by-design (one checkpoint,
+                # many serves) but must be visible, not silent
+                print(f"[engine] restoring scene '{scene}' from {ckpt_dir} "
+                      f"(trained {meta.get('steps')} steps, "
+                      f"seed {meta.get('seed')})")
+            params = ckpt_lib.restore_checkpoint(ckpt_dir, step, like)
+            # every NeRFConfig yields the same 11 leaves, so the restore's
+            # leaf-count check cannot catch a cfg mismatch — compare shapes
+            bad = [f"{k}: ckpt {tuple(params[k].shape)} != "
+                   f"cfg {tuple(like[k].shape)}"
+                   for k in like
+                   if tuple(params[k].shape) != tuple(like[k].shape)]
+            if bad:
+                raise ValueError(
+                    f"checkpoint at {ckpt_dir} was trained with a different "
+                    f"NeRFConfig: {'; '.join(bad)}")
+            return params
+    res = nerf_train.train_nerf(cfg, scene, steps=train_steps,
+                                n_views=n_views, image_hw=image_hw,
+                                log_every=max(train_steps // 2, 1),
+                                seed=seed, verbose=verbose)
+    if ckpt_dir:
+        # meta first: dying between the writes leaves meta + no step, which
+        # retrains on the next run rather than failing or serving blind
+        os.makedirs(ckpt_dir, exist_ok=True)
+        with open(os.path.join(ckpt_dir, FIELD_META), "w") as f:
+            json.dump({"scene": scene, "steps": train_steps, "seed": seed,
+                       "grid_res": cfg.grid_res}, f)
+        path = ckpt_lib.save_checkpoint(ckpt_dir, train_steps, res.params)
+        if verbose:
+            print(f"[engine] checkpointed field to {path}")
+    return res.params
+
+
+class RenderEngine:
+    """Batched novel-view serving from one resident (compressed) field."""
+
+    def __init__(self, cfg: NeRFConfig, field, cubes: CubeSet, *,
+                 field_mode: str = "hybrid", ray_chunk: int = 4096,
+                 cube_chunk: int = 8, pair_budget: int = None,
+                 order_mode: str = "octant", max_batch_views: int = 8,
+                 mesh=None):
+        import jax
+
+        self.cfg = cfg
+        self.field_mode = field_mode
+        self.ray_chunk = int(ray_chunk)
+        self.cube_chunk = int(cube_chunk)
+        self.max_batch_views = int(max_batch_views)
+
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        self.rules = make_rules(mesh)
+        self.n_devices = int(np.prod(list(mesh.shape.values())))
+
+        if field_mode == "hybrid" and not isinstance(
+                field, sparse.CompressedField):
+            field = sparse.compress_field(field, cfg)
+        # byte accounting shared with the renderers (pipeline.field_eval_fns)
+        _, _, _, self.factor_bytes, self.factor_bytes_dense = \
+            rt_pipe.field_eval_fns(field, cfg, field_mode)
+        # resident placement: streams replicated, rays are the sharded axis
+        self.field = distributed.place_field(field, self.rules)
+        self.cubes = cubes
+        self.ordering = rt_pipe.OrderingCache(cubes, order_mode)
+
+        self._render = jax.jit(rt_pipe.make_ray_renderer(
+            self.field, cfg, field_mode=field_mode, chunk=self.cube_chunk,
+            pair_budget=pair_budget))
+
+        self._queue: List[_Request] = []
+        self._next_id = 0
+        self._latencies: List[float] = []
+        self._render_s_total = 0.0
+        self._views_served = 0
+        self._flushes = 0
+        self._dropped_pairs = 0
+
+    # -- field lifecycle ---------------------------------------------------
+
+    @classmethod
+    def from_scene(cls, cfg: NeRFConfig, scene: str, *,
+                   ckpt_dir: Optional[str] = None, train_steps: int = 200,
+                   n_views: int = 8, image_hw: int = 64,
+                   prune_sparsity: float = 0.0, seed: int = 0,
+                   verbose: bool = True, **kw) -> "RenderEngine":
+        """Train-once-or-restore, prune, rebuild occupancy, go resident."""
+        params = prepare_field(cfg, scene, ckpt_dir=ckpt_dir,
+                               train_steps=train_steps, n_views=n_views,
+                               image_hw=image_hw, seed=seed, verbose=verbose)
+        if prune_sparsity > 0.0:
+            params = tensorf.prune_to_sparsity(params, prune_sparsity)
+        occ = occ_lib.build_occupancy(params, cfg,
+                                      sigma_thresh=cfg.occ_sigma_thresh)
+        cubes = occ_lib.extract_cubes(occ, cfg)
+        return cls(cfg, params, cubes, **kw)
+
+    def update_cubes(self, cubes: CubeSet):
+        """Occupancy rebuilt (e.g. the field was re-pruned): swap the cube
+        set and drop every cached ordering."""
+        self.cubes = cubes
+        self.ordering.invalidate(cubes)
+
+    # -- request/response --------------------------------------------------
+
+    def submit(self, cam: Camera, gt=None) -> ViewFuture:
+        """Queue one novel-view request; returns a future. The queue is
+        flushed when it reaches `max_batch_views` (or on flush()/result())."""
+        fut = ViewFuture(self, self._next_id)
+        self._queue.append(_Request(cam, gt, fut, time.perf_counter()))
+        self._next_id += 1
+        if len(self._queue) >= self.max_batch_views:
+            self.flush()
+        return fut
+
+    def flush(self) -> List[ViewResult]:
+        """Render every queued view: group by ordering octant, micro-batch
+        each group's rays into fixed chunks, run the single jitted step.
+        If a render fails, unresolved requests go back on the queue before
+        the error propagates."""
+        if not self._queue:
+            return []
+        reqs, self._queue = self._queue, []
+        try:
+            return self._flush(reqs)
+        except BaseException:
+            self._queue = [r for r in reqs
+                           if r.future._result is None] + self._queue
+            raise
+
+    def _flush(self, reqs: List[_Request]) -> List[ViewResult]:
+        t0 = time.perf_counter()
+        groups: Dict[tuple, List[_Request]] = {}
+        for r in reqs:
+            groups.setdefault(self.ordering.key_for(r.cam.origin),
+                              []).append(r)
+
+        results: List[ViewResult] = []
+        try:
+            self._flush_groups(groups, results)
+        finally:
+            # count whatever resolved (and the time spent) even when a
+            # later group's render raised, so stats() stays consistent
+            # with the latencies recorded for the resolved views
+            self._render_s_total += time.perf_counter() - t0
+            self._views_served += len(results)
+            self._flushes += 1
+        return results
+
+    def _flush_groups(self, groups: Dict[tuple, List[_Request]],
+                      results: List[ViewResult]):
+        for reqs_g in groups.values():
+            for r in reqs_g:                      # one cache access per view
+                centers, valid = self.ordering.get_ordered(r.cam.origin)
+            batches = []
+            for r in reqs_g:
+                o, d = rendering.camera_rays(r.cam)
+                batches.append((np.asarray(o), np.asarray(d)))
+            plan = plan_microbatches(batches, self.ray_chunk)
+            outs = []
+            for i in range(plan.n_chunks):
+                ro, rd = distributed.shard_rays(
+                    self.rules, jnp.asarray(plan.rays_o[i]),
+                    jnp.asarray(plan.rays_d[i]))
+                rgb, aux = self._render(centers, valid, ro, rd)
+                outs.append(np.asarray(rgb))
+                self._dropped_pairs += int(aux["dropped_pairs"])
+            imgs = plan.scatter(outs)
+            t_done = time.perf_counter()
+            for r, img in zip(reqs_g, imgs):
+                psnr = None
+                if r.gt is not None:
+                    psnr = float(rendering.psnr(
+                        jnp.clip(jnp.asarray(img), 0, 1), jnp.asarray(r.gt)))
+                lat = t_done - r.t_submit
+                self._latencies.append(lat)
+                results.append(ViewResult(
+                    view_id=r.future._view_id, img=img, psnr=psnr,
+                    latency_s=lat, stats={
+                        "occ_accesses": float(self.cubes.count),
+                        "factor_bytes": float(self.factor_bytes),
+                        "factor_bytes_dense": float(self.factor_bytes_dense),
+                    }))
+                r.future._set(results[-1])
+
+    def render_views(self, cams, gts=None) -> List[ViewResult]:
+        """Convenience: submit a batch of cameras and flush."""
+        gts = gts if gts is not None else [None] * len(cams)
+        futs = [self.submit(c, g) for c, g in zip(cams, gts)]
+        self.flush()
+        return [f.result() for f in futs]
+
+    # -- telemetry ---------------------------------------------------------
+
+    def stats(self) -> Dict:
+        lat = np.asarray(self._latencies, np.float64)
+        return {
+            "views_served": self._views_served,
+            "flushes": self._flushes,
+            "fps": (self._views_served / self._render_s_total
+                    if self._render_s_total > 0 else 0.0),
+            "render_s_total": self._render_s_total,
+            "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "latency_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
+            "latency_mean_s": float(lat.mean()) if lat.size else 0.0,
+            "occ_accesses_per_view": float(self.cubes.count),
+            "factor_bytes": float(self.factor_bytes),
+            "factor_bytes_dense": float(self.factor_bytes_dense),
+            "compression_ratio": (self.factor_bytes_dense
+                                  / max(self.factor_bytes, 1)),
+            "dropped_pairs": self._dropped_pairs,
+            "ordering_cache": self.ordering.stats(),
+            "field_mode": self.field_mode,
+            "ray_chunk": self.ray_chunk,
+            "cube_chunk": self.cube_chunk,
+            "n_devices": self.n_devices,
+        }

@@ -72,3 +72,133 @@ def test_samples_per_segment_bound():
     ns = rt_pipe.samples_per_segment(CFG)
     from repro.core.rendering import step_world
     assert ns >= 2 * CFG.cube_ball_radius() / step_world(CFG)
+
+
+# --------------------------------------------------------------------------
+# Sec. 3.2 — view-dependent ordering + the serving engine's ordering cache
+# --------------------------------------------------------------------------
+
+
+def _cube_set(n=40, seed=0):
+    from repro.core.occupancy import CubeSet
+    rng = np.random.RandomState(seed)
+    centers = np.zeros((64, 3), np.float32)
+    centers[:n] = rng.uniform(-1.4, 1.4, (n, 3)).astype(np.float32)
+    valid = np.zeros(64, bool)
+    valid[:n] = True
+    return CubeSet(jnp.asarray(centers), jnp.asarray(valid), n, 0.1,
+                   jnp.zeros((8, 8, 8), bool))
+
+
+@given(st.floats(0.0, 6.2), st.floats(-1.2, 1.2), st.floats(2.5, 6.0))
+def test_octant_order_monotone_in_view_distance(az, elev, r):
+    """Octant mode: walking the permutation front to back, the *octant-level*
+    distance to the view origin never decreases — cubes from nearer octants
+    always precede cubes from farther octants (back-to-front reversal is
+    monotone non-increasing)."""
+    cubes = _cube_set()
+    origin = jnp.asarray([r * np.cos(az), r * np.sin(az), elev], jnp.float32)
+    perm = np.asarray(rt_pipe.order_cubes(cubes, origin, "octant"))
+    c = np.asarray(cubes.centers)[perm]
+    valid = np.asarray(cubes.valid)[perm]
+    c = c[valid]
+    # octant-center distances, same normalisation as order_cubes
+    o = np.asarray(origin)
+    o_n = o / max(np.abs(o).max(), 1e-6)
+    oct_id = (c[:, 0] > 0) * 4 + (c[:, 1] > 0) * 2 + (c[:, 2] > 0)
+    signs = np.array([[sx, sy, sz] for sx in (-1, 1) for sy in (-1, 1)
+                      for sz in (-1, 1)], np.float32) * 0.5
+    d_oct = np.linalg.norm(signs - o_n[None], axis=-1)
+    d_along = d_oct[oct_id]
+    assert (np.diff(d_along) >= -1e-6).all(), \
+        "front-to-back octant distance must be non-decreasing"
+    # invalid cubes all sort last (key = inf)
+    assert np.asarray(cubes.valid)[perm][: c.shape[0]].all()
+
+
+def test_octant_order_within_octant_keeps_scan_order():
+    """Cubes of one octant keep their fixed scan order (regular DRAM
+    pattern, Sec. 3.2) — the permutation is stable within an octant."""
+    cubes = _cube_set()
+    origin = jnp.asarray([4.0, 1.0, 1.5], jnp.float32)
+    perm = np.asarray(rt_pipe.order_cubes(cubes, origin, "octant"))
+    c = np.asarray(cubes.centers)
+    valid = np.asarray(cubes.valid)
+    oct_id = (c[:, 0] > 0) * 4 + (c[:, 1] > 0) * 2 + (c[:, 2] > 0)
+    for k in range(8):
+        idx = [p for p in perm if valid[p] and oct_id[p] == k]
+        assert idx == sorted(idx), f"octant {k} not in scan order"
+
+
+def test_ordering_cache_hits_by_octant_ranking():
+    """Views that rank the 8 octants identically reuse the cached schedule
+    bit-exactly; a different ranking (even from the SAME octant) misses."""
+    cubes = _cube_set()
+    cache = rt_pipe.OrderingCache(cubes)
+    p1 = cache.get([4.0, 1.0, 1.5])
+    p2 = cache.get([3.9, 0.9, 1.4])          # same octant ranking -> hit
+    assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    # same octant (+,+,+) but different dominant axis -> different ranking
+    # -> MISS (reusing here would composite near cubes after far ones)
+    p3 = cache.get([0.1, 0.1, 4.0])
+    assert cache.stats()["misses"] == 2
+    assert not np.array_equal(np.asarray(p1), np.asarray(p3))
+    # every cached entry matches a fresh order_cubes for its origin
+    for origin in ([4.0, 1.0, 1.5], [0.1, 0.1, 4.0]):
+        want = np.asarray(rt_pipe.order_cubes(
+            cubes, jnp.asarray(origin, jnp.float32), "octant"))
+        np.testing.assert_array_equal(np.asarray(cache.get(origin)), want)
+    # the permuted arrays are cached alongside the permutation
+    ctr, vld = cache.get_ordered([4.0, 1.0, 1.5])
+    np.testing.assert_array_equal(np.asarray(ctr),
+                                  np.asarray(cubes.centers)[np.asarray(p1)])
+    np.testing.assert_array_equal(np.asarray(vld),
+                                  np.asarray(cubes.valid)[np.asarray(p1)])
+    # invalidation drops every entry (occupancy rebuild path)
+    misses = cache.stats()["misses"]
+    cache.invalidate(cubes)
+    assert cache.stats()["entries"] == 0
+    cache.get([4.0, 1.0, 1.5])
+    assert cache.stats()["misses"] == misses + 1
+
+
+def test_ordering_key_determines_order_cubes():
+    """ordering_key is sound: equal keys -> identical permutations, for
+    random origins."""
+    cubes = _cube_set()
+    rng = np.random.RandomState(3)
+    origins = rng.uniform(-5, 5, (24, 3)).astype(np.float32)
+    by_key = {}
+    for o in origins:
+        k = rt_pipe.ordering_key(o, "octant")
+        perm = np.asarray(rt_pipe.order_cubes(cubes, jnp.asarray(o),
+                                              "octant"))
+        if k in by_key:
+            np.testing.assert_array_equal(perm, by_key[k], err_msg=str(o))
+        else:
+            by_key[k] = perm
+    assert len(by_key) >= 2                   # keys actually discriminate
+
+
+def test_ordering_key_distance_mode_keys_full_origin():
+    k1 = rt_pipe.ordering_key([4.0, 1.0, 1.5], "distance")
+    k2 = rt_pipe.ordering_key([4.0, 1.0, 1.5], "distance")
+    k3 = rt_pipe.ordering_key([4.0, 1.0, 1.6], "distance")
+    assert k1 == k2 and k1 != k3
+
+
+def test_ordering_cache_bounded_lru():
+    """Distance mode keys on the full origin — the cache must stay bounded
+    under a free camera stream and evict least-recently-used entries."""
+    cubes = _cube_set()
+    cache = rt_pipe.OrderingCache(cubes, mode="distance", max_entries=4)
+    for i in range(10):
+        cache.get([4.0, 1.0, 1.0 + 0.1 * i])
+    assert cache.stats()["entries"] == 4
+    assert cache.stats()["misses"] == 10
+    # most-recent entries survive; the oldest were evicted
+    cache.get([4.0, 1.0, 1.9])
+    assert cache.stats()["hits"] == 1
+    cache.get([4.0, 1.0, 1.0])
+    assert cache.stats()["misses"] == 11
