@@ -1,10 +1,15 @@
-"""Dense vs hybrid (bitmap/COO) compressed-field rendering (paper Sec. 4.2.2).
+"""Dense vs hybrid (bitmap/COO) compressed-field rendering (paper Sec. 4.2.2)
+plus the prune-level vs scene-PSNR trade-off sweep (ROADMAP quality/size
+curve).
 
-Trains a small TensoRF field, magnitude-prunes it to several sparsity
-levels, and for each level renders the same novel view through the RT-NeRF
-pipeline twice — once from the raw factor arrays, once straight from the
-hybrid encoding — reporting the factor bytes the hot loop reads
-(sparse.storage_bytes size model), wall-clock, and hybrid-vs-dense PSNR.
+Trains a small TensoRF field (compressed-native, core/train.py), magnitude-
+prunes it to several sparsity levels, and for each level renders the same
+novel view through the RT-NeRF pipeline twice — once from the raw factor
+arrays (`FieldBackend.decode()`), once straight from the hybrid encoding —
+reporting the factor bytes the hot loop reads (sparse.storage_bytes size
+model), wall-clock, hybrid-vs-dense parity PSNR, AND the scene PSNR against
+ground truth per prune level (the quality/size trade-off curve). The whole
+sweep is written to BENCH_compressed.json for the cross-PR trajectory.
 
     PYTHONPATH=src python benchmarks/compressed_render.py
     PYTHONPATH=src python benchmarks/compressed_render.py --tiny --check  # CI
@@ -16,6 +21,7 @@ factor_bytes, the DRAM-traffic proxy.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -24,7 +30,7 @@ import jax.numpy as jnp
 from repro.configs.rtnerf import NeRFConfig
 from repro.core import occupancy as occ_lib
 from repro.core import pipeline as rt_pipe
-from repro.core import rendering, sparse, tensorf
+from repro.core import rendering
 from repro.core import train as nerf_train
 from repro.data import rays as rays_lib
 
@@ -35,6 +41,7 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--res", type=int, default=56)
     ap.add_argument("--levels", default="0.5,0.8,0.9,0.95")
+    ap.add_argument("--out", default="BENCH_compressed.json")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke shape: 20 steps, 32^2 render, one level")
     ap.add_argument("--check", action="store_true",
@@ -56,7 +63,9 @@ def main():
     res = nerf_train.train_nerf(cfg, args.scene, steps=args.steps, n_views=8,
                                 image_hw=args.res, log_every=10_000,
                                 verbose=False)
+    scene = rays_lib.make_scene(args.scene)
     cam = rays_lib.make_cameras(7, args.res, args.res)[2]
+    gt = rays_lib.render_gt(scene, cam)
 
     if args.check and not any(lv >= 0.9 for lv in levels):
         print("CHECK FAILED: --check needs at least one level >= 0.9 "
@@ -64,23 +73,23 @@ def main():
         sys.exit(2)
 
     print("sparsity,dense_bytes,hybrid_bytes,ratio,psnr_hybrid_vs_dense,"
-          "dense_s,hybrid_s,formats")
+          "psnr_scene,dense_s,hybrid_s,formats")
     failures = []
+    rows = []
     for level in levels:
-        params = tensorf.prune_to_sparsity(res.params, level)
-        occ = occ_lib.build_occupancy(params, cfg,
-                                      sigma_thresh=cfg.occ_sigma_thresh)
+        # the trade-off curve point: prune the trained field to `level`
+        # (re-encoded internally), rebuild occupancy at the shared cutoff
+        cf = res.field.prune(sparsity=level)
+        dense = cf.decode()
+        occ = occ_lib.build_occupancy(cf, cfg)
         cubes = occ_lib.extract_cubes(occ, cfg)
-        cf = sparse.compress_field(params, cfg)
 
         t0 = time.time()
-        img_d, st_d = rt_pipe.render_rtnerf(params, cfg, cubes, cam,
-                                            chunk=8, field_mode="dense")
+        img_d, st_d = rt_pipe.render_rtnerf(dense, cfg, cubes, cam, chunk=8)
         img_d.block_until_ready()
         dt_d = time.time() - t0
         t0 = time.time()
-        img_h, st_h = rt_pipe.render_rtnerf(cf, cfg, cubes, cam,
-                                            chunk=8, field_mode="hybrid")
+        img_h, st_h = rt_pipe.render_rtnerf(cf, cfg, cubes, cam, chunk=8)
         img_h.block_until_ready()
         dt_h = time.time() - t0
 
@@ -89,14 +98,34 @@ def main():
         ratio = bytes_d / max(bytes_h, 1)
         psnr = float(rendering.psnr(jnp.clip(img_h, 0, 1),
                                     jnp.clip(img_d, 0, 1)))
-        fmts = sorted({ef.fmt for efs in cf.factors.values() for ef in efs})
+        psnr_scene = float(rendering.psnr(jnp.clip(img_h, 0, 1), gt))
+        fmts = sorted({v["format"] for v in cf.sparsity_report().values()})
         print(f"{level:.2f},{bytes_d},{bytes_h},{ratio:.2f},{psnr:.1f},"
-              f"{dt_d:.2f},{dt_h:.2f},{'|'.join(fmts)}")
+              f"{psnr_scene:.2f},{dt_d:.2f},{dt_h:.2f},{'|'.join(fmts)}")
+        rows.append({
+            "sparsity": level, "dense_bytes": bytes_d,
+            "hybrid_bytes": bytes_h, "ratio": ratio,
+            "psnr_hybrid_vs_dense": psnr, "psnr_scene": psnr_scene,
+            "dense_s": dt_d, "hybrid_s": dt_h, "formats": fmts,
+            "n_cubes": cubes.count,
+        })
         if level >= 0.9:
             if ratio < 3.0:
                 failures.append(f"ratio {ratio:.2f} < 3x at {level}")
             if psnr < 40.0:
                 failures.append(f"psnr {psnr:.1f} < 40 dB at {level}")
+
+    report = {
+        "scene": args.scene, "steps": args.steps, "res": args.res,
+        "train_field_kind": res.field.kind,
+        # the quality/size trade-off curve (ROADMAP sweep item): one row
+        # per prune level, scene PSNR against GT alongside the byte ratio
+        "sweep": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out} ({len(rows)} sweep rows)")
+
     if args.check and failures:
         print("CHECK FAILED: " + "; ".join(failures))
         sys.exit(1)

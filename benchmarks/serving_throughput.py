@@ -30,7 +30,6 @@ import numpy as np
 
 from repro.configs.rtnerf import NeRFConfig
 from repro.core import occupancy as occ_lib
-from repro.core import sparse, tensorf
 from repro.core import train as nerf_train
 from repro.data import rays as rays_lib
 from repro.serving import RenderEngine
@@ -47,8 +46,9 @@ def main():
     ap.add_argument("--res", type=int, default=56)
     ap.add_argument("--views", type=int, default=8)
     ap.add_argument("--prune", type=float, default=0.9)
-    ap.add_argument("--field-mode", choices=("dense", "hybrid"),
-                    default="hybrid")
+    ap.add_argument("--dense", action="store_true",
+                    help="serve the raw factor arrays instead of the "
+                         "hybrid encoding")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke shape: 20 steps, 32^2, 5 views")
@@ -71,12 +71,11 @@ def main():
     res = nerf_train.train_nerf(cfg, args.scene, steps=args.steps, n_views=8,
                                 image_hw=args.res, log_every=10_000,
                                 verbose=False)
-    params = tensorf.prune_to_sparsity(res.params, args.prune)
-    occ = occ_lib.build_occupancy(params, cfg,
-                                  sigma_thresh=cfg.occ_sigma_thresh)
+    field = res.field.prune(sparsity=args.prune)
+    if args.dense:
+        field = field.decode()
+    occ = occ_lib.build_occupancy(field, cfg)
     cubes = occ_lib.extract_cubes(occ, cfg)
-    field = sparse.compress_field(params, cfg) \
-        if args.field_mode == "hybrid" else params
 
     scene = rays_lib.make_scene(args.scene)
     cams = rays_lib.make_cameras(args.views, args.res, args.res)
@@ -88,15 +87,14 @@ def main():
     for cam, gt in zip(cams, gts):
         t0 = time.time()
         p, stats, _ = nerf_train.eval_view(field, cfg, cubes, cam, gt,
-                                           pipeline="rtnerf", chunk=8,
-                                           field_mode=args.field_mode)
+                                           pipeline="rtnerf", chunk=8)
         seq_lat.append(time.time() - t0)
         seq_psnr.append(p)
     seq_total = time.time() - t_seq
     seq_fps = args.views / seq_total
 
     # -- batched engine over the same resident field -----------------------
-    engine = RenderEngine(cfg, field, cubes, field_mode=args.field_mode,
+    engine = RenderEngine(cfg, field, cubes, encode=not args.dense,
                           ray_chunk=args.res * args.res,
                           max_batch_views=args.views)
     t_bat = time.time()
@@ -110,7 +108,7 @@ def main():
     speedup = bat_fps / max(seq_fps, 1e-9)
     report = {
         "scene": args.scene, "views": args.views, "res": args.res,
-        "prune": args.prune, "field_mode": args.field_mode,
+        "prune": args.prune, "field_kind": es["field_kind"],
         "factor_bytes": es["factor_bytes"],
         "factor_bytes_dense": es["factor_bytes_dense"],
         "occ_accesses_per_view": es["occ_accesses_per_view"],

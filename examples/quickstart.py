@@ -1,10 +1,13 @@
 """Quickstart: the RT-NeRF pipeline end to end in ~2 minutes on CPU.
 
-Trains a tiny TensoRF field on a procedural scene, builds the occupancy
-cube set, renders a novel view through BOTH pipelines (uniform baseline vs
-the paper's efficient pipeline), then sparsifies the field and renders it
-again straight from the hybrid bitmap/COO encoding (Sec. 4.2.2) — the
-compressed-domain path the RT-NeRF accelerator actually executes.
+Trains a tiny TensoRF field on a procedural scene (compressed-native: the
+factors stay hybrid-encoded between optimizer steps after the first
+occupancy rebuild), builds the occupancy cube set, renders a novel view
+through BOTH pipelines (uniform baseline vs the paper's efficient
+pipeline), then sparsifies the field further and renders it straight from
+the hybrid bitmap/COO encoding (Sec. 4.2.2) — the compressed-domain path
+the RT-NeRF accelerator actually executes — and finally hot-swaps the
+re-pruned field into a running serving engine (`swap_field`).
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --tiny   # CI smoke shape
@@ -14,7 +17,6 @@ import time
 
 from repro.configs.rtnerf import NeRFConfig
 from repro.core import occupancy as occ_lib
-from repro.core import sparse, tensorf
 from repro.core import train as nerf_train
 from repro.data import rays as rays_lib
 
@@ -53,7 +55,7 @@ def main():
     print("== rendering a novel view ==")
     for pipeline, kw in (("uniform", {}), ("rtnerf", {"chunk": 8})):
         t0 = time.time()
-        psnr, stats, img = nerf_train.eval_view(res.params, cfg, res.cubes,
+        psnr, stats, img = nerf_train.eval_view(res.field, cfg, res.cubes,
                                                 cam, gt, pipeline=pipeline,
                                                 **kw)
         print(f"  {pipeline:8s} psnr={psnr:5.2f}  "
@@ -65,17 +67,14 @@ def main():
 
     print(f"== compressed-field rendering (prune to {args.prune:.0%}, "
           f"hybrid bitmap/COO) ==")
-    params = tensorf.prune_to_sparsity(res.params, args.prune)
-    occ = occ_lib.build_occupancy(params, cfg,
-                                  sigma_thresh=cfg.occ_sigma_thresh)
+    cf = res.field.prune(sparsity=args.prune)    # re-encoded internally
+    occ = occ_lib.build_occupancy(cf, cfg)       # cfg.occ_sigma_thresh
     cubes = occ_lib.extract_cubes(occ, cfg)
-    cf = sparse.compress_field(params, cfg)
-    for mode, field in (("dense", params), ("hybrid", cf)):
+    for name, field in (("dense", cf.decode()), ("hybrid", cf)):
         t0 = time.time()
         psnr, stats, img = nerf_train.eval_view(field, cfg, cubes, cam, gt,
-                                                pipeline="rtnerf", chunk=8,
-                                                field_mode=mode)
-        print(f"  {mode:8s} psnr={psnr:5.2f}  "
+                                                pipeline="rtnerf", chunk=8)
+        print(f"  {name:8s} psnr={psnr:5.2f}  "
               f"factor_bytes={stats['factor_bytes']:9.0f}  "
               f"({time.time() - t0:.1f}s)")
     print(f"hybrid codec: {cf.compression_ratio():.1f}x fewer factor bytes "
@@ -86,7 +85,7 @@ def main():
     # octant-cached cube orderings: submit cameras, await futures
     from repro.serving import RenderEngine
 
-    engine = RenderEngine(cfg, cf, cubes, field_mode="hybrid",
+    engine = RenderEngine(cfg, cf, cubes,
                           ray_chunk=args.res * args.res, max_batch_views=4)
     cams = rays_lib.make_cameras(4, args.res, args.res)
     futures = [engine.submit(c, rays_lib.render_gt(scene, c)) for c in cams]
@@ -101,6 +100,17 @@ def main():
           f"{s['ordering_cache']['hits'] + s['ordering_cache']['misses']}")
     print("batched serving amortises encode + compile + ordering across "
           "the request stream (benchmarks/serving_throughput.py).")
+
+    print("== live field hot-swap (train->serve loop) ==")
+    # publish a lighter (more aggressively pruned) field to the RUNNING
+    # engine; queued requests are never dropped, the occupancy cube set is
+    # rebuilt from the new field, and the jitted step is reused
+    lighter = res.field.prune(sparsity=min(args.prune + 0.05, 0.97))
+    engine.swap_field(lighter)
+    r = engine.submit(cams[0], rays_lib.render_gt(scene, cams[0])).result()
+    s = engine.stats()
+    print(f"  swapped field: {s['compression_ratio']:.1f}x compression, "
+          f"psnr={r.psnr:5.2f}, swaps={s['field_swaps']}")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ gt = rays_lib.render_gt(scene, cam)
 for pl, kw in [("uniform", {}), ("rtnerf", {"order_mode": "octant"}),
                ("rtnerf", {"order_mode": "distance"})]:
     t0 = time.time()
-    p, stats, img = nerf_train.eval_view(res.params, cfg, res.cubes, cam, gt,
+    p, stats, img = nerf_train.eval_view(res.field, cfg, res.cubes, cam, gt,
                                          pipeline=pl, **kw)
     print(f"{pl:8s} {kw}: psnr={p:.2f} dt={time.time()-t0:.1f}s "
           f"occ_accesses={stats['occ_accesses']:.0f} "

@@ -23,7 +23,7 @@ for pl, kw in [("uniform", {}),
                ("rtnerf", {"intersect": "ball"}),
                ("rtnerf", {"intersect": "box", "chunk": 8})]:
     t0 = time.time()
-    p, stats, img = nerf_train.eval_view(res.params, cfg, res.cubes, cam, gt,
+    p, stats, img = nerf_train.eval_view(res.field, cfg, res.cubes, cam, gt,
                                          pipeline=pl, **kw)
     print(f"{pl:8s} {kw}: psnr={p:.2f} dt={time.time()-t0:.1f}s "
           f"processed={stats['processed_samples']:.0f}")

@@ -1,2 +1,3 @@
 from repro.ckpt.checkpoint import (  # noqa: F401
-    CheckpointManager, save_checkpoint, restore_checkpoint, latest_step)
+    CheckpointManager, save_checkpoint, restore_checkpoint, latest_step,
+    save_state_dict, restore_state_dict, save_field, restore_field)

@@ -34,7 +34,8 @@ def _leaf_paths(tree):
     return flat, treedef
 
 
-def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3):
+def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3,
+                    extra_meta: Optional[dict] = None):
     os.makedirs(directory, exist_ok=True)
     flat, treedef = _leaf_paths(tree)
     tmp = os.path.join(directory, f"step_{step:08d}.tmp")
@@ -42,7 +43,8 @@ def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3):
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    manifest = {"step": step, "treedef": str(treedef), "leaves": [],
+                "extra": extra_meta or {}}
     for i, leaf in enumerate(flat):
         arr = np.asarray(leaf)
         fn = os.path.join(tmp, f"leaf_{i:05d}.npy")
@@ -87,13 +89,26 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_manifest(directory: str, step: int) -> dict:
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def _load_leaf(path: str, i: int, meta: dict) -> np.ndarray:
+    arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+    crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+    if crc != meta["crc"]:
+        raise IOError(f"checkpoint corruption in leaf {i} of {path}")
+    return arr.astype(np.dtype(meta["dtype"]))
+
+
 def restore_checkpoint(directory: str, step: int, like: Any, *,
                        shardings: Any = None) -> Any:
     """Restore into the structure of `like`; optionally re-shard each leaf
     with `shardings` (a matching tree of NamedSharding) — the elastic path."""
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(directory, step)
     flat_like, treedef = jax.tree.flatten(like)
     assert len(flat_like) == len(manifest["leaves"]), \
         f"leaf count mismatch: {len(flat_like)} vs {len(manifest['leaves'])}"
@@ -102,16 +117,75 @@ def restore_checkpoint(directory: str, step: int, like: Any, *,
     out = []
     for i, (meta, ref_leaf, shard) in enumerate(
             zip(manifest["leaves"], flat_like, shard_flat)):
-        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
-        crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
-        if crc != meta["crc"]:
-            raise IOError(f"checkpoint corruption in leaf {i} of {path}")
-        arr = arr.astype(np.dtype(meta["dtype"]))
+        arr = _load_leaf(path, i, meta)
         if shard is not None:
             out.append(jax.device_put(arr, shard))
         else:
             out.append(jax.device_put(arr))
     return treedef.unflatten(out)
+
+
+# --------------------------------------------------------------------------
+# Flat state dicts + encoded radiance fields
+# --------------------------------------------------------------------------
+#
+# A CompressedField's pytree structure is data-dependent (per-factor format
+# and nnz), so "restore into the shape of `like`" cannot know the treedef up
+# front. State-dict checkpoints record the key order in the manifest and the
+# codec structure in `extra["field_spec"]` (core/field.field_state), letting
+# a restore rebuild the exact encoded representation — the field round-trips
+# without ever being decompressed.
+
+
+def save_state_dict(directory: str, step: int, state: dict, *,
+                    keep: int = 3, extra_meta: Optional[dict] = None):
+    """Save a flat {name: array} dict; names are recorded in the manifest so
+    the restore needs no `like` template."""
+    meta = dict(extra_meta or {})
+    meta["state_keys"] = sorted(state)
+    return save_checkpoint(directory, step, dict(state), keep=keep,
+                           extra_meta=meta)
+
+
+def restore_state_dict(directory: str, step: int):
+    """-> ({name: np.ndarray}, extra_meta). Inverse of save_state_dict."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    manifest = read_manifest(directory, step)
+    keys = manifest.get("extra", {}).get("state_keys")
+    if keys is None:
+        raise ValueError(f"checkpoint at {path} is not a state-dict "
+                         f"checkpoint (no state_keys in manifest)")
+    assert len(keys) == len(manifest["leaves"]), "manifest key/leaf mismatch"
+    # dict pytrees flatten in sorted-key order, so leaf i <-> sorted key i
+    arrays = {k: _load_leaf(path, i, meta)
+              for i, (k, meta) in enumerate(zip(keys, manifest["leaves"]))}
+    return arrays, manifest["extra"]
+
+
+def save_field(directory: str, step: int, field, *, keep: int = 3,
+               extra_meta: Optional[dict] = None):
+    """Checkpoint a FieldBackend in its *current* representation — an
+    encoded field's bitmap/COO streams are written as-is (no decompress)."""
+    from repro.core import field as field_lib
+
+    spec, arrays = field_lib.field_state(field)
+    meta = dict(extra_meta or {})
+    meta["field_spec"] = spec
+    return save_state_dict(directory, step, arrays, keep=keep,
+                           extra_meta=meta)
+
+
+def restore_field(directory: str, step: int, cfg):
+    """-> (FieldBackend, extra_meta). Rebuilds the exact representation
+    `save_field` wrote (formats, nnz, packed bytes all identical)."""
+    from repro.core import field as field_lib
+
+    arrays, extra = restore_state_dict(directory, step)
+    spec = extra.get("field_spec")
+    if spec is None:
+        raise ValueError(f"checkpoint at {directory} step {step} has no "
+                         f"field_spec — not a field checkpoint")
+    return field_lib.field_from_state(spec, arrays, cfg), extra
 
 
 class CheckpointManager:

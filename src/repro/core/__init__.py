@@ -1,2 +1,2 @@
 """RT-NeRF core: the paper's contribution as composable JAX modules."""
-from repro.core import occupancy, pipeline, rendering, sparse, tensorf  # noqa: F401
+from repro.core import field, occupancy, pipeline, rendering, sparse, tensorf  # noqa: F401

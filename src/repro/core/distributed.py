@@ -68,39 +68,12 @@ def stream_sharding(rules: AxisRules) -> NamedSharding:
 
 def place_field(field, rules: AxisRules):
     """device_put a resident serving field onto the mesh: every stream array
-    replicated (stream_sharding). Accepts a raw params dict or a
-    sparse.CompressedField; on a single-device mesh this is a plain
-    device placement (the serving engine's fallback path)."""
-    import dataclasses
-
-    from repro.core import sparse
-
-    sh = stream_sharding(rules)
-    if isinstance(field, dict):
-        return {k: jax.device_put(v, sh) for k, v in field.items()}
-    if isinstance(field, sparse.CompressedField):
-        def place_ef(ef):
-            rep = {}
-            if ef.dense is not None:
-                rep["dense"] = jax.device_put(ef.dense, sh)
-            if ef.bitmap is not None:
-                b = ef.bitmap
-                rep["bitmap"] = dataclasses.replace(
-                    b, words=jax.device_put(b.words, sh),
-                    rowptr=jax.device_put(b.rowptr, sh),
-                    values=jax.device_put(b.values, sh))
-            if ef.coo is not None:
-                c = ef.coo
-                rep["coo"] = dataclasses.replace(
-                    c, coords=jax.device_put(c.coords, sh),
-                    values=jax.device_put(c.values, sh))
-            return dataclasses.replace(ef, **rep)
-
-        factors = {k: tuple(place_ef(ef) for ef in efs)
-                   for k, efs in field.factors.items()}
-        extras = {k: jax.device_put(v, sh) for k, v in field.extras.items()}
-        return dataclasses.replace(field, factors=factors, extras=extras)
-    return field
+    replicated (stream_sharding). Any FieldBackend (or params dict) is a
+    registered pytree, so this is one placement call over the whole tree —
+    encoded bitmap/COO streams, integer metadata and MLP alike; on a
+    single-device mesh it is a plain device placement (the serving engine's
+    fallback path)."""
+    return jax.device_put(field, stream_sharding(rules))
 
 
 def shard_rays(rules: AxisRules, rays_o, rays_d):

@@ -1,0 +1,461 @@
+"""Unified field representation: one `FieldBackend` API over the dense and
+hybrid-compressed (bitmap/COO, paper Sec. 4.2.2) TensoRF parameter sets.
+
+Every consumer of the radiance field — the uniform baseline renderer, the
+RT-NeRF pipeline, the serving engine, the trainer, occupancy rebuilds and
+checkpoints — talks to this protocol instead of forking on a `field_mode`
+string or `isinstance` checks:
+
+  sigma(pts)          density at world points (Eq. 2)
+  app_features(pts)   appearance features (Eq. 2 + basis)
+  color(feats, dirs)  view-dependent color MLP
+  encode()            -> CompressedField (hybrid bitmap/COO per the 80% rule)
+  decode()            -> DenseField (exact inverse)
+  prune(...)          magnitude pruning (tol- or target-sparsity-based)
+  sparsity_report()   per-factor format / sparsity / bytes
+  trainable()         flat dict of float leaves (gradient targets)
+  with_trainable(t)   same structure, new float payloads
+
+`DenseField` wraps the raw params dict; `CompressedField` holds every VM
+factor in its chosen hybrid format and samples the encoded streams directly
+(core/tensorf.py gather path) — the bitmap/COO dispatch is internal to it.
+Both are registered JAX pytrees, so fields flow through jit / grad /
+device_put / checkpointing like any other parameter tree; the integer codec
+metadata (bitmap words, row pointers, COO coords) rides along as non-float
+leaves while `trainable()` exposes exactly the differentiable payload — the
+mechanism behind compressed-native training (gradients applied to nnz
+values between occupancy rebuilds, ROADMAP "compressed training").
+
+`as_backend` is the ONLY place in the codebase that inspects a field's
+concrete type; everything else dispatches through the protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import sparse, tensorf
+
+
+class FieldBackend:
+    """Protocol base. Subclasses hold a `cfg` and implement the field API;
+    the color MLP evaluation is shared (both backends keep the MLP dense —
+    it is KBs against the factors' MBs)."""
+
+    cfg: NeRFConfig
+    kind: str = "abstract"
+
+    # -- evaluation --------------------------------------------------------
+
+    def sigma(self, pts: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def app_features(self, pts: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    @property
+    def mlp_params(self) -> Dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def color(self, feats: jax.Array, dirs: jax.Array) -> jax.Array:
+        return tensorf.eval_color(self.mlp_params, self.cfg, feats, dirs)
+
+    # -- representation lifecycle -----------------------------------------
+
+    def encode(self, threshold: Optional[float] = None) -> "CompressedField":
+        raise NotImplementedError
+
+    def decode(self) -> "DenseField":
+        raise NotImplementedError
+
+    def prune(self, sparsity: Optional[float] = None,
+              tol: Optional[float] = None) -> "FieldBackend":
+        raise NotImplementedError
+
+    # -- training ----------------------------------------------------------
+
+    def trainable(self) -> Dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def with_trainable(self, t: Dict[str, jax.Array]) -> "FieldBackend":
+        raise NotImplementedError
+
+    def l1(self) -> jax.Array:
+        raise NotImplementedError
+
+    def tv(self) -> jax.Array:
+        raise NotImplementedError
+
+    # -- accounting --------------------------------------------------------
+
+    def factor_bytes(self) -> int:
+        raise NotImplementedError
+
+    def dense_factor_bytes(self) -> int:
+        raise NotImplementedError
+
+    def compression_ratio(self) -> float:
+        return self.dense_factor_bytes() / max(self.factor_bytes(), 1)
+
+    def sparsity_report(self) -> Dict[str, Dict]:
+        raise NotImplementedError
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class DenseField(FieldBackend):
+    """The raw TensoRF parameter dict behind the FieldBackend protocol."""
+
+    params: Dict[str, jax.Array]
+    cfg: NeRFConfig
+    kind = "dense"
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.params))
+        return tuple(self.params[k] for k in keys), (keys, self.cfg)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, cfg = aux
+        return cls(dict(zip(keys, children)), cfg)
+
+    # -- evaluation --------------------------------------------------------
+
+    def sigma(self, pts):
+        return tensorf.eval_sigma(self.params, self.cfg, pts)
+
+    def app_features(self, pts):
+        return tensorf.eval_app_features(self.params, self.cfg, pts)
+
+    @property
+    def mlp_params(self):
+        return self.params
+
+    # -- representation lifecycle -----------------------------------------
+
+    def encode(self, threshold: Optional[float] = None) -> "CompressedField":
+        """Hybrid-encode every VM factor (sparse.encode_factor per mode);
+        the switch point comes from `threshold` if given, else
+        cfg.sparse_threshold."""
+        if threshold is None:
+            threshold = self.cfg.sparse_threshold
+        factors: Dict[str, Tuple[sparse.EncodedFactor, ...]] = {}
+        extras = {k: v for k, v in self.params.items()
+                  if k not in sparse.FACTOR_KEYS}
+        for k in sparse.FACTOR_KEYS:
+            w = np.asarray(self.params[k])
+            efs = []
+            for m in range(3):
+                wm = w[m].reshape(w.shape[1], -1)
+                ef = sparse.encode_factor(wm, threshold)
+                efs.append(dataclasses.replace(ef, nd_shape=w[m].shape))
+            factors[k] = tuple(efs)
+        return CompressedField(factors=factors, extras=extras, cfg=self.cfg,
+                               threshold=threshold)
+
+    def decode(self) -> "DenseField":
+        return self
+
+    def prune(self, sparsity: Optional[float] = None,
+              tol: Optional[float] = None) -> "DenseField":
+        if sparsity is not None:
+            return DenseField(
+                tensorf.prune_to_sparsity(self.params, sparsity), self.cfg)
+        return DenseField(
+            tensorf.prune_factors(self.params, tol=1e-3 if tol is None
+                                  else tol), self.cfg)
+
+    # -- training ----------------------------------------------------------
+
+    def trainable(self):
+        return dict(self.params)
+
+    def with_trainable(self, t):
+        return DenseField(dict(t), self.cfg)
+
+    def l1(self):
+        return tensorf.field_l1(self.params)
+
+    def tv(self):
+        return tensorf.field_tv(self.params)
+
+    # -- accounting --------------------------------------------------------
+
+    def factor_bytes(self) -> int:
+        return sum(int(np.prod(self.params[k].shape)) * 4
+                   for k in sparse.FACTOR_KEYS)
+
+    def dense_factor_bytes(self) -> int:
+        return self.factor_bytes()
+
+    def sparsity_report(self):
+        out = {}
+        for k in sparse.FACTOR_KEYS:
+            w = np.asarray(self.params[k])
+            for m in range(3):
+                wm = w[m].reshape(w.shape[1], -1)
+                nnz = int((wm != 0).sum())
+                b = sparse.storage_bytes(wm.shape, nnz, "dense")
+                out[f"{k}[{m}]"] = {
+                    "format": "dense", "sparsity": sparse.sparsity(wm),
+                    "bytes": b, "dense_bytes": b,
+                }
+        return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class CompressedField(FieldBackend):
+    """The full TensoRF parameter set with every VM factor hybrid-encoded.
+
+    `factors[key][m]` is the sparse.EncodedFactor for mode m of factor
+    tensor `key`; `extras` carries the untouched dense params (basis +
+    color MLP). Evaluation samples factors through core/tensorf's gather
+    path without ever materialising the dense grids — the paper's
+    compressed-domain eval. Which of bitmap / COO / dense each factor uses
+    is internal: callers only see the protocol.
+    """
+
+    factors: Dict[str, Tuple[sparse.EncodedFactor, ...]]
+    extras: Dict[str, jax.Array]
+    cfg: NeRFConfig
+    threshold: float = 0.80
+    kind = "compressed"
+
+    def tree_flatten(self):
+        fkeys = tuple(sorted(self.factors))
+        ekeys = tuple(sorted(self.extras))
+        children = (tuple(self.factors[k] for k in fkeys),
+                    tuple(self.extras[k] for k in ekeys))
+        return children, (fkeys, ekeys, self.cfg, self.threshold)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fkeys, ekeys, cfg, threshold = aux
+        return cls(dict(zip(fkeys, children[0])),
+                   dict(zip(ekeys, children[1])), cfg, threshold)
+
+    # -- evaluation --------------------------------------------------------
+
+    def sigma(self, pts):
+        return tensorf.eval_sigma_hybrid(self, self.cfg, pts)
+
+    def app_features(self, pts):
+        return tensorf.eval_app_features_hybrid(self, self.cfg, pts)
+
+    @property
+    def mlp_params(self):
+        return self.extras
+
+    # -- representation lifecycle -----------------------------------------
+
+    def encode(self, threshold: Optional[float] = None) -> "CompressedField":
+        if threshold is None or threshold == self.threshold:
+            return self
+        return self.decode().encode(threshold)
+
+    def decode(self) -> DenseField:
+        """Exact inverse of DenseField.encode (reference / testing path)."""
+        params = dict(self.extras)
+        for k, efs in self.factors.items():
+            params[k] = jnp.stack([ef.decode().reshape(ef.nd_shape)
+                                   for ef in efs])
+        return DenseField(params, self.cfg)
+
+    def prune(self, sparsity: Optional[float] = None,
+              tol: Optional[float] = None) -> "CompressedField":
+        """Prune re-chooses the support, so it round-trips through the
+        dense form and re-encodes — the occupancy-rebuild-time operation,
+        never the per-step one."""
+        return self.decode().prune(sparsity, tol).encode(self.threshold)
+
+    # -- training ----------------------------------------------------------
+
+    def trainable(self):
+        """Float payloads only: packed non-zeros per factor + the dense
+        extras. The codec's integer metadata (words/rowptr/coords) is NOT
+        here — gradients land on the nnz values and the support stays fixed
+        until the next occupancy rebuild re-encodes."""
+        out = {f"extras/{k}": v for k, v in self.extras.items()}
+        for k, efs in self.factors.items():
+            for m, ef in enumerate(efs):
+                out[f"factors/{k}/{m}"] = ef.value_array
+        return out
+
+    def with_trainable(self, t):
+        extras = {k: t[f"extras/{k}"] for k in self.extras}
+        factors = {
+            k: tuple(ef.with_value_array(t[f"factors/{k}/{m}"])
+                     for m, ef in enumerate(efs))
+            for k, efs in self.factors.items()}
+        return CompressedField(factors, extras, self.cfg, self.threshold)
+
+    def l1(self):
+        """Matches tensorf.field_l1 on the decoded field: packed values hold
+        every non-zero, and zeros contribute nothing to a mean of |w|."""
+        tot = 0.0
+        for k, efs in self.factors.items():
+            num = sum(jnp.sum(jnp.abs(ef.value_array)) for ef in efs)
+            den = sum(int(np.prod(ef.shape)) for ef in efs)
+            tot = tot + num / den
+        return tot
+
+    def tv(self):
+        """Plane smoothness needs the spatial neighborhood, so TV decodes
+        the plane factors (differentiably) — loss-only; the render path
+        never materialises the grids."""
+        def planes(key):
+            return jnp.stack([ef.decode().reshape(ef.nd_shape)
+                              for ef in self.factors[key]])
+        return tensorf.field_tv({"sigma_planes": planes("sigma_planes"),
+                                 "app_planes": planes("app_planes")})
+
+    # -- accounting --------------------------------------------------------
+
+    def factor_bytes(self) -> int:
+        return sum(ef.storage() for efs in self.factors.values()
+                   for ef in efs)
+
+    def dense_factor_bytes(self) -> int:
+        return sum(ef.dense_storage() for efs in self.factors.values()
+                   for ef in efs)
+
+    def sparsity_report(self):
+        out = {}
+        for k, efs in self.factors.items():
+            for m, ef in enumerate(efs):
+                out[f"{k}[{m}]"] = {
+                    "format": ef.fmt, "sparsity": ef.sparsity,
+                    "bytes": ef.storage(),
+                    "dense_bytes": ef.dense_storage(),
+                }
+        return out
+
+
+# --------------------------------------------------------------------------
+# The single dispatch site
+# --------------------------------------------------------------------------
+
+
+def as_backend(field, cfg: Optional[NeRFConfig] = None) -> FieldBackend:
+    """Coerce whatever a caller holds into a FieldBackend.
+
+    This is the ONE place that looks at a field's concrete type: raw params
+    dicts become DenseField (cfg required), backends pass through. Every
+    renderer / trainer / server entry point funnels through here, so no
+    `field_mode` strings or isinstance checks leak into the data path.
+    """
+    if isinstance(field, FieldBackend):
+        return field
+    if isinstance(field, dict):
+        if cfg is None:
+            raise ValueError("as_backend(dict) needs the NeRFConfig")
+        return DenseField(dict(field), cfg)
+    raise TypeError(
+        f"not a field: {type(field).__name__} (expected a FieldBackend or a "
+        f"TensoRF params dict; the field_mode= kwarg was removed — encode "
+        f"explicitly with DenseField(params, cfg).encode())")
+
+
+# --------------------------------------------------------------------------
+# Serialization (ckpt/checkpoint.py round-trips encoded fields through this
+# pair without decompressing)
+# --------------------------------------------------------------------------
+
+
+def field_state(field: FieldBackend):
+    """Flatten a backend into (json-able spec, {name: array}). The arrays
+    are the pytree leaves under stable string names; the spec captures the
+    codec structure (formats, shapes, nnz) so `field_from_state` rebuilds
+    the exact encoded representation — no decode on either side."""
+    field = as_backend(field)
+    if isinstance(field, DenseField):
+        return ({"kind": "dense"},
+                {f"params/{k}": v for k, v in field.params.items()})
+    spec = {"kind": "compressed", "threshold": field.threshold,
+            "factors": {}}
+    arrays: Dict[str, jax.Array] = {
+        f"extras/{k}": v for k, v in field.extras.items()}
+    for k, efs in field.factors.items():
+        spec["factors"][k] = []
+        for m, ef in enumerate(efs):
+            spec["factors"][k].append({
+                "fmt": ef.fmt, "nd_shape": list(ef.nd_shape),
+                "shape": list(ef.shape), "nnz": ef.nnz,
+                "sparsity": ef.sparsity,
+            })
+            base = f"factors/{k}/{m}"
+            if ef.fmt == "dense":
+                arrays[f"{base}/dense"] = ef.dense
+            elif ef.fmt == "bitmap":
+                arrays[f"{base}/words"] = ef.bitmap.words
+                arrays[f"{base}/rowptr"] = ef.bitmap.rowptr
+                arrays[f"{base}/values"] = ef.bitmap.values
+            else:
+                arrays[f"{base}/coords"] = ef.coo.coords
+                arrays[f"{base}/values"] = ef.coo.values
+    return spec, arrays
+
+
+def field_from_state(spec: Dict, arrays: Dict[str, jax.Array],
+                     cfg: NeRFConfig) -> FieldBackend:
+    """Inverse of `field_state` (arrays may be numpy or jax)."""
+    A = {k: jnp.asarray(v) for k, v in arrays.items()}
+    if spec["kind"] == "dense":
+        return DenseField({k[len("params/"):]: v for k, v in A.items()
+                           if k.startswith("params/")}, cfg)
+    extras = {k[len("extras/"):]: v for k, v in A.items()
+              if k.startswith("extras/")}
+    factors: Dict[str, Tuple[sparse.EncodedFactor, ...]] = {}
+    for k, metas in spec["factors"].items():
+        efs = []
+        for m, meta in enumerate(metas):
+            base = f"factors/{k}/{m}"
+            shape = tuple(meta["shape"])
+            ef = sparse.EncodedFactor(
+                fmt=meta["fmt"], nd_shape=tuple(meta["nd_shape"]),
+                shape=shape, nnz=int(meta["nnz"]),
+                sparsity=float(meta["sparsity"]))
+            if ef.fmt == "dense":
+                ef.dense = A[f"{base}/dense"]
+            elif ef.fmt == "bitmap":
+                ef.bitmap = sparse.BitmapEncoded(
+                    shape, A[f"{base}/words"], A[f"{base}/rowptr"],
+                    A[f"{base}/values"], ef.nnz)
+            else:
+                ef.coo = sparse.CooEncoded(
+                    shape, A[f"{base}/coords"], A[f"{base}/values"], ef.nnz)
+            efs.append(ef)
+        factors[k] = tuple(efs)
+    return CompressedField(factors, extras, cfg,
+                           float(spec.get("threshold", 0.80)))
+
+
+def cfg_mismatches(field: FieldBackend, cfg: NeRFConfig) -> List[str]:
+    """Shape-compare a (possibly encoded) field against the shapes `cfg`
+    would initialise — the restore-time guard against serving a field
+    trained under a different NeRFConfig. Returns human-readable mismatch
+    descriptions (empty = compatible)."""
+    like = jax.eval_shape(lambda k: tensorf.init_field(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+    field = as_backend(field, cfg)
+    got: Dict[str, tuple] = {}
+    if isinstance(field, DenseField):
+        got = {k: tuple(v.shape) for k, v in field.params.items()}
+    else:
+        got = {k: tuple(v.shape) for k, v in field.extras.items()}
+        for k, efs in field.factors.items():
+            got[k] = (len(efs),) + tuple(efs[0].nd_shape)
+    bad = []
+    for k in like:
+        if k not in got:
+            bad.append(f"{k}: missing from field")
+        elif tuple(got[k]) != tuple(like[k].shape):
+            bad.append(f"{k}: field {tuple(got[k])} != "
+                       f"cfg {tuple(like[k].shape)}")
+    return bad

@@ -6,14 +6,14 @@ analogous to the paper's offline encoding step) and padded to a static
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.rtnerf import NeRFConfig
-from repro.core import tensorf
+from repro.core import field as field_lib
 
 
 class CubeSet(NamedTuple):
@@ -31,17 +31,26 @@ def grid_coords(cfg: NeRFConfig) -> jax.Array:
     return xs * cfg.scene_bound
 
 
-def build_occupancy(params, cfg: NeRFConfig, sigma_thresh: float = 5.0,
+def build_occupancy(field, cfg: NeRFConfig,
+                    sigma_thresh: Optional[float] = None,
                     chunk: int = 65536) -> jax.Array:
-    """Evaluate sigma on the occupancy grid -> (G,G,G) bool."""
+    """Evaluate sigma on the occupancy grid -> (G,G,G) bool.
+
+    `field` is anything `field.as_backend` accepts (params dict or backend —
+    encoded fields are sampled in place, no decode). The cutoff defaults to
+    `cfg.occ_sigma_thresh`, the ONE rebuild threshold every site shares
+    (training rebuilds, post-prune rebuilds, serving `swap_field`)."""
+    if sigma_thresh is None:
+        sigma_thresh = cfg.occ_sigma_thresh
+    f = field_lib.as_backend(field, cfg)
     g = cfg.occ_res
     xs = grid_coords(cfg)
     pts = jnp.stack(jnp.meshgrid(xs, xs, xs, indexing="ij"), axis=-1
                     ).reshape(-1, 3)
     outs = []
-    eval_j = jax.jit(lambda p, q: tensorf.eval_sigma(p, cfg, q))
+    eval_j = jax.jit(lambda fb, q: fb.sigma(q))
     for i in range(0, pts.shape[0], chunk):
-        outs.append(eval_j(params, pts[i:i + chunk]))
+        outs.append(eval_j(f, pts[i:i + chunk]))
     sig = jnp.concatenate(outs).reshape(g, g, g)
     return sig > sigma_thresh
 

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.rtnerf import NeRFConfig
-from repro.core import sparse, tensorf
+from repro.core import field as field_lib
 from repro.core.occupancy import CubeSet
 from repro.core.rendering import Camera, composite, pixel_rays, step_world
 
@@ -244,46 +244,18 @@ def _cube_samples(cfg: NeRFConfig, cam: Camera, center, tile: int,
     return pix_id, d, pts, ts, s_mask
 
 
-def field_eval_fns(params, cfg: NeRFConfig, field_mode: str):
-    """Resolve a field (params dict or CompressedField) + mode into the
-    (f_sigma, f_app, mlp_params, factor_bytes, factor_bytes_dense) the
-    renderers consume. field_mode="hybrid" samples the encoded streams in
-    place (Sec. 4.2.2); "dense" reads the raw factor arrays."""
-    if field_mode not in ("dense", "hybrid"):
-        raise ValueError(f"field_mode must be dense|hybrid, got {field_mode}")
-    if field_mode == "hybrid":
-        cf = params if isinstance(params, sparse.CompressedField) \
-            else sparse.compress_field(params, cfg)
+def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
+                      pair_budget: int = None, white_bg: bool = True):
+    """Ray-centric RT-NeRF renderer (serving path).
 
-        def f_sigma(pts):
-            return tensorf.eval_sigma_hybrid(cf, cfg, pts)
-
-        def f_app(pts):
-            return tensorf.eval_app_features_hybrid(cf, cfg, pts)
-        return (f_sigma, f_app, cf.extras, cf.factor_bytes(),
-                cf.dense_factor_bytes())
-    if isinstance(params, sparse.CompressedField):
-        params = sparse.decompress_field(params)
-
-    def f_sigma(pts):
-        return tensorf.eval_sigma(params, cfg, pts)
-
-    def f_app(pts):
-        return tensorf.eval_app_features(params, cfg, pts)
-    fb = sum(int(np.prod(params[k].shape)) * 4 for k in sparse.FACTOR_KEYS)
-    return f_sigma, f_app, params, fb, fb
-
-
-def make_ray_renderer(field, cfg: NeRFConfig, *, field_mode: str = "hybrid",
-                      chunk: int = 8, pair_budget: int = None,
-                      white_bg: bool = True):
-    """Ray-centric RT-NeRF renderer over a resident field (serving path).
-
-    Returns `render(centers, valid, rays_o, rays_d) -> (rgb (N,3), aux)`
-    where centers/valid are the *ordered* cube arrays (apply an order_cubes
-    permutation first — e.g. from an OrderingCache) and rays are an
-    arbitrary batch, so one jitted instance serves micro-batched rays from
-    many queued views at a fixed chunk shape.
+    Returns `render(field, centers, valid, rays_o, rays_d) -> (rgb, aux)`
+    where `field` is any FieldBackend (a registered pytree, so under
+    `jax.jit` a swapped-in field with the same encoded structure reuses the
+    compiled step — the serving engine's `swap_field` path), centers/valid
+    are the *ordered* cube arrays (apply an order_cubes permutation first —
+    e.g. from an OrderingCache) and rays are an arbitrary batch, so one
+    jitted instance serves micro-batched rays from many queued views at a
+    fixed chunk shape.
 
     Geometry is the pipeline's exact line-slab intersection (Step 2-1-d,
     intersect="box") per (cube, ray) instead of per (cube, tile-pixel): no
@@ -300,15 +272,16 @@ def make_ray_renderer(field, cfg: NeRFConfig, *, field_mode: str = "hybrid",
     dropped and counted in `aux["dropped_pairs"]` (0 in every measured
     scene at the default budget of chunk*N // 4).
 
-    The field is closed over (resident): trace once, serve many. `aux`
-    carries per-ray transmittance plus processed/dropped counters.
+    The field is an argument, not a closure: trace once, serve many, swap
+    freely. `aux` carries per-ray transmittance plus processed/dropped
+    counters.
     """
-    f_sigma, f_app, mlp_params, _, _ = field_eval_fns(field, cfg, field_mode)
     delta = step_world(cfg)
     ns = samples_per_segment(cfg)
     half = cfg.cube_world() / 2.0
 
-    def render(centers, valid, rays_o, rays_d):
+    def render(field, centers, valid, rays_o, rays_d):
+        f = field_lib.as_backend(field, cfg)
         n_rays = rays_o.shape[0]
         nc = centers.shape[0]
         # pad (never truncate) the cube list to a chunk multiple: a
@@ -353,12 +326,11 @@ def make_ray_renderer(field, cfg: NeRFConfig, *, field_mode: str = "hybrid",
             s_mask = sel[:, None] & (ts < t1s[:, None])   # (budget,ns)
             pts = ro_s[:, None] + rd_s[:, None] * ts[..., None]
             flat = pts.reshape(-1, 3)
-            sigma = f_sigma(flat).reshape(s_mask.shape)
+            sigma = f.sigma(flat).reshape(s_mask.shape)
             sigma = jnp.where(s_mask, sigma, 0.0)
-            feats = f_app(flat)
+            feats = f.app_features(flat)
             dirs = jnp.broadcast_to(rd_s[:, None], pts.shape).reshape(-1, 3)
-            rgb = tensorf.eval_color(mlp_params, cfg, feats, dirs).reshape(
-                *s_mask.shape, 3)
+            rgb = f.color(feats, dirs).reshape(*s_mask.shape, 3)
 
             # per-pair local compositing along the segment
             tau = sigma * delta
@@ -395,21 +367,21 @@ def make_ray_renderer(field, cfg: NeRFConfig, *, field_mode: str = "hybrid",
     return render
 
 
-def render_rtnerf(params, cfg: NeRFConfig, cubes: CubeSet, cam: Camera, *,
+def render_rtnerf(field, cfg: NeRFConfig, cubes: CubeSet, cam: Camera, *,
                   order_mode: str = "octant", chunk: int = 1,
-                  intersect: str = "box", field_mode: str = "dense",
+                  intersect: str = "box",
                   white_bg: bool = True) -> Tuple[jax.Array, Dict]:
     """Full-image render via the RT-NeRF pipeline. Returns (rgb (H*W,3), stats).
 
-    field_mode="dense"  — evaluate the raw TensoRF factor arrays (baseline).
-    field_mode="hybrid" — evaluate the hybrid bitmap/COO-encoded factors
-    (paper Sec. 4.2.2): every grid read decodes the compressed stream in
-    place, so the field's memory footprint in the hot loop is the encoded
-    bytes. `params` may be a params dict (encoded here, once) or an
-    already-built sparse.CompressedField.
+    `field` is anything `field.as_backend` accepts: a DenseField / params
+    dict evaluates the raw TensoRF factor arrays (baseline); a
+    CompressedField evaluates the hybrid bitmap/COO-encoded factors (paper
+    Sec. 4.2.2) — every grid read decodes the compressed stream in place,
+    so the field's memory footprint in the hot loop is the encoded bytes.
     """
-    f_sigma, f_app, mlp_params, factor_bytes, factor_bytes_dense = \
-        field_eval_fns(params, cfg, field_mode)
+    f = field_lib.as_backend(field, cfg)
+    factor_bytes = f.factor_bytes()
+    factor_bytes_dense = f.dense_factor_bytes()
     tile = auto_tile(cfg, cam)
     perm = order_cubes(cubes, cam.origin, order_mode)
     centers = cubes.centers[perm]
@@ -436,12 +408,11 @@ def render_rtnerf(params, cfg: NeRFConfig, cubes: CubeSet, cam: Camera, *,
         s_mask = s_mask & alive[..., None]
 
         flat = pts.reshape(-1, 3)
-        sigma = f_sigma(flat).reshape(s_mask.shape)
+        sigma = f.sigma(flat).reshape(s_mask.shape)
         sigma = jnp.where(s_mask, sigma, 0.0)
-        feats = f_app(flat)
+        feats = f.app_features(flat)
         dirs = jnp.broadcast_to(d[:, :, None], pts.shape).reshape(-1, 3)
-        rgb = tensorf.eval_color(mlp_params, cfg, feats, dirs).reshape(
-            *s_mask.shape, 3)
+        rgb = f.color(feats, dirs).reshape(*s_mask.shape, 3)
 
         # per-(cube,pixel) local compositing along the segment
         tau = sigma * delta                               # (chunk,P,ns)

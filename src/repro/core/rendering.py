@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.rtnerf import NeRFConfig
+from repro.core import field as field_lib
 from repro.core import occupancy as occ_lib
-from repro.core import tensorf
 
 
 class Camera(NamedTuple):
@@ -76,13 +76,16 @@ def composite(sigma, rgb, mask, delta, white_bg=True):
     return color, t_final, w
 
 
-def render_uniform(params, cfg: NeRFConfig, cubes: occ_lib.CubeSet,
+def render_uniform(field, cfg: NeRFConfig, cubes: occ_lib.CubeSet,
                    rays_o, rays_d, *, use_occupancy=True,
                    white_bg=True) -> Tuple[jax.Array, Dict]:
     """Baseline pipeline: uniform samples + occupancy queries + early term.
 
-    rays_o/rays_d (R,3). Returns (rgb (R,3), stats).
+    `field` is anything `field.as_backend` accepts — a params dict or a
+    FieldBackend; encoded fields are sampled through the hybrid codec in
+    place. rays_o/rays_d (R,3). Returns (rgb (R,3), stats).
     """
+    f = field_lib.as_backend(field, cfg)
     n = cfg.max_samples_per_ray
     delta = step_world(cfg)
     t = cfg.near + (jnp.arange(n) + 0.5) * delta           # (N,)
@@ -94,7 +97,7 @@ def render_uniform(params, cfg: NeRFConfig, cubes: occ_lib.CubeSet,
     else:
         occ_hit = jnp.all(jnp.abs(pts) <= cfg.scene_bound, axis=-1)
     flat = pts.reshape(-1, 3)
-    sigma = tensorf.eval_sigma(params, cfg, flat).reshape(t.shape)
+    sigma = f.sigma(flat).reshape(t.shape)
     sigma = jnp.where(occ_hit, sigma, 0.0)
 
     # early termination mask (T computed from sigma so far)
@@ -103,9 +106,9 @@ def render_uniform(params, cfg: NeRFConfig, cubes: occ_lib.CubeSet,
     t_before = jnp.exp(-(cum - tau))
     visible = occ_hit & (t_before > cfg.term_eps)
 
-    feats = tensorf.eval_app_features(params, cfg, flat)
+    feats = f.app_features(flat)
     dirs = jnp.broadcast_to(rays_d[:, None], pts.shape).reshape(-1, 3)
-    rgb = tensorf.eval_color(params, cfg, feats, dirs).reshape(*t.shape, 3)
+    rgb = f.color(feats, dirs).reshape(*t.shape, 3)
 
     color, t_final, _ = composite(sigma, rgb, visible, delta, white_bg)
     stats = {

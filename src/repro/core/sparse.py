@@ -14,10 +14,12 @@ Formats:
 exposes the size model that justifies it. Consumers: TensoRF VM factors and
 (beyond paper) MoE dispatch mode selection in models/moe.py.
 
-`CompressedField` / `compress_field` package the whole TensoRF factor set in
-encoded form so the renderer can *sample* the compressed stream directly
-(core/tensorf.py eval_sigma_hybrid / eval_app_features_hybrid) — the paper's
-actual memory-path win, not just an offline size table.
+This module is the pure codec layer. The field-level container that packages
+a whole TensoRF factor set in encoded form — and the dense/compressed
+dispatch — live in core/field.py (`FieldBackend` / `CompressedField`); the
+renderer samples the encoded streams through core/tensorf.gather_factor.
+All encoded containers are registered as JAX pytrees so fields flow through
+jit / grad / device_put / checkpointing without special cases.
 """
 from __future__ import annotations
 
@@ -29,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class BitmapEncoded:
     shape: tuple
     words: jax.Array      # (rows, ceil(cols/32)) uint32 bitmap
@@ -38,12 +40,22 @@ class BitmapEncoded:
     nnz: int
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class CooEncoded:
     shape: tuple
     coords: jax.Array     # (nnz_pad,) int32 sorted linear indices (pad = INT32_MAX)
     values: jax.Array     # (nnz_pad,)
     nnz: int
+
+
+jax.tree_util.register_pytree_node(
+    BitmapEncoded,
+    lambda e: ((e.words, e.rowptr, e.values), (e.shape, e.nnz)),
+    lambda aux, ch: BitmapEncoded(aux[0], ch[0], ch[1], ch[2], aux[1]))
+jax.tree_util.register_pytree_node(
+    CooEncoded,
+    lambda e: ((e.coords, e.values), (e.shape, e.nnz)),
+    lambda aux, ch: CooEncoded(aux[0], ch[0], ch[1], aux[1]))
 
 
 PAD_COORD = np.iinfo(np.int32).max
@@ -188,13 +200,13 @@ def encode_hybrid(w, threshold: float = 0.80):
 
 
 # --------------------------------------------------------------------------
-# Compressed TensoRF field — the renderer-facing form of the H1 codec
+# Encoded VM factor — the renderer-facing unit of the H1 codec
 # --------------------------------------------------------------------------
 
 FACTOR_KEYS = ("sigma_planes", "sigma_lines", "app_planes", "app_lines")
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class EncodedFactor:
     """One VM factor slice (mode m of a plane/line tensor) in its chosen
     format. The matrix view is (R, ncols): ncols = G*G for planes, G for
@@ -212,6 +224,28 @@ class EncodedFactor:
     def ncols(self) -> int:
         return self.shape[1]
 
+    @property
+    def value_array(self) -> jax.Array:
+        """The float payload of this factor — the packed non-zeros for
+        bitmap/COO, the raw matrix for dense. This is the *trainable* leaf:
+        gradients applied here update the encoded field in place (the
+        bitmap/coords structure stays fixed between occupancy rebuilds)."""
+        if self.fmt == "dense":
+            return self.dense
+        if self.fmt == "bitmap":
+            return self.bitmap.values
+        return self.coo.values
+
+    def with_value_array(self, v: jax.Array) -> "EncodedFactor":
+        """Same structure, new float payload (optimizer-step update)."""
+        if self.fmt == "dense":
+            return dataclasses.replace(self, dense=v)
+        if self.fmt == "bitmap":
+            return dataclasses.replace(
+                self, bitmap=dataclasses.replace(self.bitmap, values=v))
+        return dataclasses.replace(
+            self, coo=dataclasses.replace(self.coo, values=v))
+
     def storage(self) -> int:
         return storage_bytes(self.shape, self.nnz, self.fmt)
 
@@ -227,91 +261,35 @@ class EncodedFactor:
         return decode_coo(self.coo)
 
 
-@dataclasses.dataclass
-class CompressedField:
-    """The full TensoRF parameter set with every VM factor hybrid-encoded.
-
-    `factors[key][m]` is the EncodedFactor for mode m of factor tensor `key`;
-    `extras` carries the untouched dense params (basis + color MLP). The
-    renderer samples factors through core/tensorf.gather_factor without ever
-    materialising the dense grids — the paper's compressed-domain eval.
-    """
-    factors: Dict[str, tuple]
-    extras: Dict[str, jax.Array]
-    threshold: float
-
-    def factor_bytes(self) -> int:
-        return sum(ef.storage() for efs in self.factors.values()
-                   for ef in efs)
-
-    def dense_factor_bytes(self) -> int:
-        return sum(ef.dense_storage() for efs in self.factors.values()
-                   for ef in efs)
-
-    def compression_ratio(self) -> float:
-        return self.dense_factor_bytes() / max(self.factor_bytes(), 1)
-
-    def report(self) -> Dict[str, Dict]:
-        out = {}
-        for k, efs in self.factors.items():
-            for m, ef in enumerate(efs):
-                out[f"{k}[{m}]"] = {
-                    "format": ef.fmt, "sparsity": ef.sparsity,
-                    "bytes": ef.storage(),
-                    "dense_bytes": ef.dense_storage(),
-                }
-        return out
+jax.tree_util.register_pytree_node(
+    EncodedFactor,
+    lambda e: ((e.dense, e.bitmap, e.coo),
+               (e.fmt, e.nd_shape, e.shape, e.nnz, e.sparsity)),
+    lambda aux, ch: EncodedFactor(aux[0], aux[1], aux[2], aux[3], aux[4],
+                                  ch[0], ch[1], ch[2]))
 
 
-def compress_field(params, cfg=None, threshold: Optional[float] = None
-                   ) -> CompressedField:
-    """Encode each TensoRF VM factor per the 80% rule.
-
-    A factor whose encoded form would not beat its dense bytes stays dense
-    (don't pessimize nearly-dense fields); otherwise bitmap below the
-    sparsity threshold, COO at/above it. The switch point comes from
-    `threshold` if given, else cfg.sparse_threshold, else the paper's 0.80.
-    """
-    if threshold is None:
-        threshold = getattr(cfg, "sparse_threshold", 0.80) \
-            if cfg is not None else 0.80
-    factors: Dict[str, tuple] = {}
-    extras: Dict[str, jax.Array] = {}
-    for k, v in params.items():
-        if k not in FACTOR_KEYS:
-            extras[k] = v
-    for k in FACTOR_KEYS:
-        w = np.asarray(params[k])
-        efs = []
-        for m in range(3):
-            wm = w[m].reshape(w.shape[1], -1)
-            s = sparsity(wm)
-            nnz = int((wm != 0).sum())
-            fmt = choose_format(s, threshold)
-            if storage_bytes(wm.shape, nnz, fmt) >= \
-                    storage_bytes(wm.shape, nnz, "dense"):
-                fmt = "dense"
-            ef = EncodedFactor(fmt=fmt, nd_shape=w[m].shape, shape=wm.shape,
-                               nnz=nnz, sparsity=s)
-            if fmt == "dense":
-                ef.dense = jnp.asarray(wm)
-            elif fmt == "bitmap":
-                ef.bitmap = encode_bitmap(wm)
-            else:
-                ef.coo = encode_coo(wm)
-            efs.append(ef)
-        factors[k] = tuple(efs)
-    return CompressedField(factors=factors, extras=extras,
-                           threshold=threshold)
-
-
-def decompress_field(cf: CompressedField) -> Dict:
-    """Exact inverse of compress_field (reference / testing path)."""
-    params = dict(cf.extras)
-    for k, efs in cf.factors.items():
-        params[k] = jnp.stack([ef.decode().reshape(ef.nd_shape)
-                               for ef in efs])
-    return params
+def encode_factor(wm, threshold: float = 0.80) -> EncodedFactor:
+    """Encode one (R, ncols) factor matrix per the 80% rule. A factor whose
+    encoded form would not beat its dense bytes stays dense (don't pessimize
+    nearly-dense fields); otherwise bitmap below the sparsity threshold, COO
+    at/above it. `nd_shape` is attached by the caller (core/field.py)."""
+    wm = np.asarray(wm)
+    s = sparsity(wm)
+    nnz = int((wm != 0).sum())
+    fmt = choose_format(s, threshold)
+    if storage_bytes(wm.shape, nnz, fmt) >= \
+            storage_bytes(wm.shape, nnz, "dense"):
+        fmt = "dense"
+    ef = EncodedFactor(fmt=fmt, nd_shape=wm.shape, shape=wm.shape,
+                       nnz=nnz, sparsity=s)
+    if fmt == "dense":
+        ef.dense = jnp.asarray(wm)
+    elif fmt == "bitmap":
+        ef.bitmap = encode_bitmap(wm)
+    else:
+        ef.coo = encode_coo(wm)
+    return ef
 
 
 def factor_report(params) -> Dict[str, Dict]:

@@ -201,10 +201,11 @@ def vm_components_hybrid(plane_efs, line_efs, pts_g, force=None) -> jax.Array:
     return jnp.stack(outs)
 
 
-def eval_sigma_hybrid(cf: "sparse.CompressedField", cfg: NeRFConfig,
+def eval_sigma_hybrid(cf, cfg: NeRFConfig,
                       pts: jax.Array, force=None) -> jax.Array:
-    """eval_sigma over a CompressedField — bit-identical math to the dense
-    path, but every factor read goes through the hybrid codec."""
+    """eval_sigma over an encoded field (anything with `.factors` /
+    `.extras`, i.e. core/field.CompressedField) — bit-identical math to the
+    dense path, but every factor read goes through the hybrid codec."""
     pts_g = to_grid(cfg, pts)
     comp = vm_components_hybrid(cf.factors["sigma_planes"],
                                 cf.factors["sigma_lines"], pts_g, force)
@@ -212,7 +213,7 @@ def eval_sigma_hybrid(cf: "sparse.CompressedField", cfg: NeRFConfig,
     return jax.nn.softplus(raw)
 
 
-def eval_app_features_hybrid(cf: "sparse.CompressedField", cfg: NeRFConfig,
+def eval_app_features_hybrid(cf, cfg: NeRFConfig,
                              pts: jax.Array, force=None) -> jax.Array:
     pts_g = to_grid(cfg, pts)
     comp = vm_components_hybrid(cf.factors["app_planes"],

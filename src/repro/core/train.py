@@ -1,8 +1,20 @@
 """NeRF training loop: photometric MSE + L1 sparsity + TV, periodic
-occupancy rebuild, optional pruning pass that realises factor sparsity.
+occupancy rebuild, compressed-native optimisation.
 
 Training renders use the differentiable uniform pipeline (as in TensoRF);
 the RT-NeRF pipeline is the inference path it is benchmarked against.
+
+Compressed-native training (ROADMAP "compressed training"): after a dense
+warmup, the field is pruned and hybrid-encoded (core/field.py), and every
+optimizer step from then on applies gradients to the *encoded* field's nnz
+values (`FieldBackend.trainable()` — packed non-zeros + MLP/basis). The
+bitmap/COO support is fixed between re-encode boundaries (every
+`occ_every` steps the field is re-pruned and re-encoded, so the support
+tracks the emerging sparsity). Training renders are occupancy-free (as in
+TensoRF); the occupancy grid is built once from the final field, at the
+one shared cutoff `cfg.occ_sigma_thresh`. The factors stay encoded between
+steps — what the trainer holds is what the checkpoint stores and the
+serving engine publishes (`swap_field`), with no encode-at-serve-time step.
 """
 from __future__ import annotations
 
@@ -13,87 +25,122 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.rtnerf import NeRFConfig
+from repro.core import field as field_lib
 from repro.core import occupancy as occ_lib
-from repro.core import pipeline as rt_pipe
-from repro.core import rendering, sparse, tensorf
+from repro.core import rendering
+from repro.core import tensorf
 from repro.data import rays as rays_lib
 from repro.optim import adamw
 
 
 @dataclasses.dataclass
 class TrainResult:
-    params: Dict
+    field: field_lib.FieldBackend
     cubes: occ_lib.CubeSet
     history: list
 
 
-def nerf_loss(params, cfg: NeRFConfig, rays_o, rays_d, target, cubes=None):
+def nerf_loss(field, cfg: NeRFConfig, rays_o, rays_d, target, cubes=None):
+    f = field_lib.as_backend(field, cfg)
     rgb, _ = rendering.render_uniform(
-        params, cfg, cubes, rays_o, rays_d,
+        f, cfg, cubes, rays_o, rays_d,
         use_occupancy=cubes is not None)
     mse = jnp.mean(jnp.square(rgb - target))
-    loss = mse + cfg.sigma_sparsity_l1 * tensorf.field_l1(params) \
-        + cfg.tv_weight * tensorf.field_tv(params)
+    loss = mse + cfg.sigma_sparsity_l1 * f.l1() + cfg.tv_weight * f.tv()
     return loss, mse
 
 
 def train_nerf(cfg: NeRFConfig, scene_name: str, *, steps: int = 400,
                n_views: int = 12, image_hw: int = 64,
-               occ_every: int = 200, sigma_thresh: float = 2.0,
-               prune_tol: float = 1e-3, seed: int = 0,
-               log_every: int = 100, verbose: bool = True) -> TrainResult:
+               occ_every: int = 200, prune_tol: float = 1e-3,
+               seed: int = 0, log_every: int = 100, verbose: bool = True,
+               compressed: bool = True) -> TrainResult:
+    """Train a TensoRF field; return the final (encoded) FieldBackend +
+    occupancy cubes.
+
+    compressed=True (default): at every `occ_every` boundary the field is
+    pruned (`prune_tol`), hybrid-encoded, and the optimizer continues on the
+    encoded representation's nnz values — the field is never densified
+    again. compressed=False keeps the legacy dense loop end to end (the
+    baseline the compressed-parity test measures against). The occupancy
+    grid is built once, from the final field, at `cfg.occ_sigma_thresh`
+    (training renders don't consume occupancy).
+    """
     scene = rays_lib.make_scene(scene_name)
     ds = rays_lib.build_dataset(scene, n_views, image_hw, image_hw)
-    params = tensorf.init_field(cfg, jax.random.PRNGKey(seed))
+    field = field_lib.DenseField(
+        tensorf.init_field(cfg, jax.random.PRNGKey(seed)), cfg)
     opt = adamw(lr=cfg.lr_grid, b2=0.99)
-    opt_state = opt.init(params)
 
-    @jax.jit
-    def step_fn(params, opt_state, ro, rd, tgt):
-        (loss, mse), grads = jax.value_and_grad(
-            lambda p: nerf_loss(p, cfg, ro, rd, tgt), has_aux=True)(params)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, loss, mse
+    def make_step(template):
+        """One jitted step over the template's trainable leaves. The encoded
+        structure (bitmap words / rowptr / COO coords) rides in the closure;
+        only the float payloads flow through grad/update."""
+        @jax.jit
+        def step_fn(tvals, opt_state, ro, rd, tgt):
+            def loss_fn(v):
+                return nerf_loss(template.with_trainable(v), cfg, ro, rd,
+                                 tgt)
+            (loss, mse), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(tvals)
+            tvals2, opt_state2 = opt.update(grads, opt_state, tvals)
+            return tvals2, opt_state2, loss, mse
+        return step_fn
+
+    tvals = field.trainable()
+    opt_state = opt.init(tvals)
+    step_fn = make_step(field)
 
     history = []
     it = ds.batches(cfg.train_rays, seed=seed)
     for i in range(steps):
+        if compressed and i > 0 and i % occ_every == 0:
+            # re-encode boundary: re-prune + re-encode; the support (and
+            # with it the trainable leaf shapes) changes, so the optimizer
+            # state and the jitted step are rebuilt
+            field = field.with_trainable(tvals).prune(tol=prune_tol).encode()
+            tvals = field.trainable()
+            opt_state = opt.init(tvals)
+            step_fn = make_step(field)
+            if verbose:
+                print(f"  [{scene_name}] step {i:5d} re-encoded field "
+                      f"({field.compression_ratio():.2f}x factor bytes)",
+                      flush=True)
         ro, rd, tgt = next(it)
-        params, opt_state, loss, mse = step_fn(params, opt_state, ro, rd, tgt)
-        if verbose and (i % log_every == 0 or i == steps - 1):
+        tvals, opt_state, loss, mse = step_fn(tvals, opt_state, ro, rd, tgt)
+        if i % log_every == 0 or i == steps - 1:
             p = float(-10 * jnp.log10(jnp.maximum(mse, 1e-10)))
             history.append({"step": i, "loss": float(loss), "psnr": p})
-            print(f"  [{scene_name}] step {i:5d} loss {float(loss):.5f} "
-                  f"train-psnr {p:.2f}", flush=True)
+            if verbose:
+                print(f"  [{scene_name}] step {i:5d} loss {float(loss):.5f} "
+                      f"train-psnr {p:.2f}", flush=True)
 
-    params = tensorf.prune_factors(params, tol=prune_tol)
-    occ = occ_lib.build_occupancy(params, cfg, sigma_thresh=sigma_thresh)
+    field = field.with_trainable(tvals).prune(tol=prune_tol)
+    if compressed:
+        field = field.encode()
+    occ = occ_lib.build_occupancy(field, cfg)        # cfg.occ_sigma_thresh
     cubes = occ_lib.extract_cubes(occ, cfg)
-    return TrainResult(params=params, cubes=cubes, history=history)
+    return TrainResult(field=field, cubes=cubes, history=history)
 
 
-def eval_view(params, cfg: NeRFConfig, cubes, cam, gt, *,
+def eval_view(field, cfg: NeRFConfig, cubes, cam, gt, *,
               pipeline: str = "rtnerf", order_mode: str = "octant",
-              chunk: int = 1, intersect: str = "box",
-              field_mode: str = "dense"):
+              chunk: int = 1, intersect: str = "box"):
     """Render one view with either pipeline; return (psnr, stats, img).
 
-    field_mode="hybrid" (rtnerf pipeline only) evaluates the field from its
-    hybrid bitmap/COO encoding; `params` may be a sparse.CompressedField to
-    amortise the encoding across views.
+    `field` is anything `field.as_backend` accepts; an encoded field is
+    sampled from its hybrid bitmap/COO streams on BOTH pipelines (the
+    uniform baseline no longer needs a decompressed copy).
     """
+    from repro.core import pipeline as rt_pipe
+
+    f = field_lib.as_backend(field, cfg)
     if pipeline == "rtnerf":
-        img, stats = rt_pipe.render_rtnerf(params, cfg, cubes, cam,
+        img, stats = rt_pipe.render_rtnerf(f, cfg, cubes, cam,
                                            order_mode=order_mode, chunk=chunk,
-                                           intersect=intersect,
-                                           field_mode=field_mode)
+                                           intersect=intersect)
     else:
-        if field_mode != "dense":
-            raise ValueError("field_mode='hybrid' requires pipeline='rtnerf' "
-                             "(the uniform baseline has no compressed path)")
-        if isinstance(params, sparse.CompressedField):
-            params = sparse.decompress_field(params)
         o, d = rendering.camera_rays(cam)
-        img, stats = rendering.render_uniform(params, cfg, cubes, o, d)
+        img, stats = rendering.render_uniform(f, cfg, cubes, o, d)
     p = float(rendering.psnr(jnp.clip(img, 0, 1), gt))
     return p, {k: float(v) for k, v in stats.items()}, img

@@ -5,7 +5,7 @@ novel-view rendering (rtnerf).
         --reduced --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --arch rtnerf \
         --scene lego --views 2 --res 64 \
-        --field-mode hybrid --prune-sparsity 0.9 --ckpt-dir /tmp/lego-ckpt
+        --prune-sparsity 0.9 --ckpt-dir /tmp/lego-ckpt
 """
 from __future__ import annotations
 
@@ -77,10 +77,11 @@ def serve_nerf(args):
     """Streaming multi-view serving from one resident compressed field.
 
     The field is restored from --ckpt-dir when a checkpoint exists (trained
-    once and saved there otherwise), encoded once, and every queued view is
-    rendered by the engine's single jitted micro-batched step — the
-    serving.RenderEngine subsystem, not a per-view train/encode/compile
-    loop.
+    once — compressed-native — and saved there in encoded form otherwise),
+    and every queued view is rendered by the engine's single jitted
+    micro-batched step — the serving.RenderEngine subsystem, not a per-view
+    train/encode/compile loop. --deadline fails stale requests instead of
+    rendering them late.
     """
     from repro.configs.rtnerf import NeRFConfig
     from repro.data import rays as rays_lib
@@ -92,10 +93,10 @@ def serve_nerf(args):
     engine = RenderEngine.from_scene(
         cfg, args.scene, ckpt_dir=args.ckpt_dir,
         train_steps=args.train_steps, n_views=8, image_hw=args.res,
-        prune_sparsity=args.prune_sparsity, field_mode=args.field_mode,
+        prune_sparsity=args.prune_sparsity, encode=not args.dense,
         ray_chunk=args.res * args.res, max_batch_views=args.views)
-    if args.field_mode == "hybrid":
-        s = engine.stats()
+    s = engine.stats()
+    if s["field_kind"] == "compressed":
         print(f"compressed field: {s['factor_bytes']:.0f} B factors "
               f"(dense {s['factor_bytes_dense']:.0f} B, "
               f"{s['compression_ratio']:.2f}x)")
@@ -103,9 +104,13 @@ def serve_nerf(args):
     scene = rays_lib.make_scene(args.scene)
     cams = rays_lib.make_cameras(args.views, args.res, args.res)
     gts = [rays_lib.render_gt(scene, cam) for cam in cams]
-    futures = [engine.submit(cam, gt) for cam, gt in zip(cams, gts)]
+    futures = [engine.submit(cam, gt, deadline_s=args.deadline)
+               for cam, gt in zip(cams, gts)]
     for i, fut in enumerate(futures):
         r = fut.result()
+        if r.timed_out:
+            print(f"view {i}: TIMED OUT after {r.latency_s:.2f}s")
+            continue
         print(f"view {i}: psnr={r.psnr:.2f} latency={r.latency_s:.2f}s "
               f"occ_accesses={r.stats['occ_accesses']:.0f} "
               f"factor_bytes={r.stats['factor_bytes']:.0f}")
@@ -113,7 +118,7 @@ def serve_nerf(args):
     print(f"served {s['views_served']} views, {s['fps']:.3f} FPS (CPU), "
           f"p50={s['latency_p50_s']:.2f}s p95={s['latency_p95_s']:.2f}s, "
           f"ordering-cache hits={s['ordering_cache']['hits']}, "
-          f"field_mode={args.field_mode}")
+          f"timeouts={s['timeouts']}, field={s['field_kind']}")
 
 
 def main():
@@ -128,10 +133,14 @@ def main():
     ap.add_argument("--views", type=int, default=2)
     ap.add_argument("--res", type=int, default=64)
     ap.add_argument("--train-steps", type=int, default=200)
-    ap.add_argument("--field-mode", choices=("dense", "hybrid"),
-                    default="dense",
-                    help="rtnerf only: evaluate raw factors or the hybrid "
-                         "bitmap/COO compressed stream (Sec. 4.2.2)")
+    ap.add_argument("--dense", action="store_true",
+                    help="rtnerf only: serve the raw factor arrays instead "
+                         "of the hybrid bitmap/COO compressed stream "
+                         "(Sec. 4.2.2; replaces the removed --field-mode)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="rtnerf only: per-request deadline in seconds; "
+                         "stale requests fail with a timeout result "
+                         "instead of rendering late")
     ap.add_argument("--prune-sparsity", type=float, default=0.0,
                     help="rtnerf only: magnitude-prune factors to this "
                          "sparsity before serving (0 = training prune only)")

@@ -1,17 +1,20 @@
 """Streaming multi-view serving engine over a resident compressed field.
 
 The RT-NeRF serving story (ROADMAP: "streaming / multi-view compressed
-serving"): load — or train once and checkpoint — a scene, encode the TensoRF
-factors into ONE resident `sparse.CompressedField`, and serve a stream of
-novel-view requests from it. Costs the per-view loop pays on every request
-are paid once per engine instead:
+serving"): load — or train once and checkpoint — a scene, encode the field
+into ONE resident `field.CompressedField`, and serve a stream of novel-view
+requests from it. Costs the per-view loop pays on every request are paid
+once per engine instead:
 
   * encode        — the hybrid bitmap/COO encoding is built at engine
-                    construction and stays resident,
+                    construction (or arrives pre-encoded from compressed-
+                    native training) and stays resident,
   * compilation   — one jitted ray-render step (`pipeline.make_ray_renderer`)
-                    at a fixed chunk shape; queued views are micro-batched
-                    into those chunks (`serving.batching`) so new cameras and
-                    mixed resolutions never retrace,
+                    at a fixed chunk shape, taking the field as a pytree
+                    argument; queued views are micro-batched into those
+                    chunks (`serving.batching`) so new cameras, mixed
+                    resolutions — and hot-swapped fields with the same
+                    encoded structure — never retrace,
   * ordering      — per-view `order_cubes` schedules are cached by octant
                     ranking (`pipeline.OrderingCache`, the paper's coarse
                     view-dependent ordering) and reused bit-exactly across
@@ -20,14 +23,21 @@ are paid once per engine instead:
                     sharded across the mesh (`core.distributed.place_field`
                     / `shard_rays`), with a single-device fallback.
 
-API: `submit(cam) -> ViewFuture` queues a request; `flush()` renders the
-queue; `stats()` reports FPS, latency percentiles, occupancy accesses,
-factor bytes, and ordering-cache hit rates. `benchmarks/serving_throughput.py`
-measures this engine against the sequential per-view loop.
+API: `submit(cam, deadline_s=...) -> ViewFuture` queues a request (past-
+deadline requests resolve with a timeout result instead of rendering late);
+`flush()` renders the queue; `swap_field(field)` atomically publishes a
+newly trained / re-encoded field to the running engine without dropping
+queued requests — the train->serve loop for online fine-tuning; `stats()`
+reports FPS, latency percentiles, occupancy accesses, factor bytes,
+timeouts, swaps, and ordering-cache hit rates. All entry points are
+thread-safe (one engine lock), so producer threads can submit while another
+thread swaps or flushes. `benchmarks/serving_throughput.py` measures this
+engine against the sequential per-view loop.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Optional
 
@@ -37,8 +47,9 @@ import numpy as np
 from repro.ckpt import checkpoint as ckpt_lib
 from repro.configs.rtnerf import NeRFConfig
 from repro.core import distributed, occupancy as occ_lib
+from repro.core import field as field_lib
 from repro.core import pipeline as rt_pipe
-from repro.core import rendering, sparse, tensorf
+from repro.core import rendering, tensorf
 from repro.core.occupancy import CubeSet
 from repro.core.rendering import Camera
 from repro.models.sharding import make_rules
@@ -48,10 +59,11 @@ from repro.serving.batching import plan_microbatches
 @dataclasses.dataclass
 class ViewResult:
     view_id: int
-    img: np.ndarray                 # (H*W, 3)
+    img: Optional[np.ndarray]       # (H*W, 3); None when timed_out
     psnr: Optional[float]           # vs the submitted gt, if any
     latency_s: float                # submit -> resolve (queueing + render)
     stats: Dict[str, float]
+    timed_out: bool = False         # deadline passed before render started
 
 
 class ViewFuture:
@@ -81,6 +93,7 @@ class _Request:
     gt: Optional[np.ndarray]
     future: ViewFuture
     t_submit: float
+    deadline: Optional[float] = None     # absolute perf_counter time
 
 
 FIELD_META = "field_meta.json"
@@ -88,16 +101,17 @@ FIELD_META = "field_meta.json"
 
 def prepare_field(cfg: NeRFConfig, scene: str, *, ckpt_dir: Optional[str],
                   train_steps: int = 200, n_views: int = 8,
-                  image_hw: int = 64, seed: int = 0, verbose: bool = True):
-    """Load the trained TensoRF params from `ckpt_dir`, or train once and
-    checkpoint there (ckpt/checkpoint.py). The *pre-prune* params are
-    stored, so one checkpoint serves every prune level. A restore validates
-    the checkpoint against the requested scene and cfg shapes (a mismatch
-    would otherwise render silently wrong images). Returns params."""
+                  image_hw: int = 64, seed: int = 0, verbose: bool = True
+                  ) -> field_lib.FieldBackend:
+    """Load the trained field from `ckpt_dir`, or train once (compressed-
+    native) and checkpoint there. The field is stored in its *encoded*
+    representation (`ckpt.save_field` — bitmap/COO streams as-is, no
+    decompress); serve-time pruning stacks on top via `FieldBackend.prune`.
+    A restore validates the checkpoint against the requested scene and cfg
+    shapes (a mismatch would otherwise render silently wrong images).
+    Returns a FieldBackend."""
     import json
     import os
-
-    import jax
 
     from repro.core import train as nerf_train
 
@@ -117,27 +131,35 @@ def prepare_field(cfg: NeRFConfig, scene: str, *, ckpt_dir: Optional[str],
                     f"checkpoint at {ckpt_dir} holds scene "
                     f"'{meta.get('scene')}', not '{scene}' — use a "
                     f"different --ckpt-dir per scene")
-            like = jax.eval_shape(
-                lambda k: tensorf.init_field(cfg, k),
-                jax.ShapeDtypeStruct((2,), jnp.uint32))
             if verbose:
                 # recorded steps/seed are reuse-by-design (one checkpoint,
                 # many serves) but must be visible, not silent
                 print(f"[engine] restoring scene '{scene}' from {ckpt_dir} "
                       f"(trained {meta.get('steps')} steps, "
                       f"seed {meta.get('seed')})")
-            params = ckpt_lib.restore_checkpoint(ckpt_dir, step, like)
-            # every NeRFConfig yields the same 11 leaves, so the restore's
-            # leaf-count check cannot catch a cfg mismatch — compare shapes
-            bad = [f"{k}: ckpt {tuple(params[k].shape)} != "
-                   f"cfg {tuple(like[k].shape)}"
-                   for k in like
-                   if tuple(params[k].shape) != tuple(like[k].shape)]
+            try:
+                restored, _ = ckpt_lib.restore_field(ckpt_dir, step, cfg)
+            except ValueError:
+                # legacy checkpoint (pre-FieldBackend: raw params dict saved
+                # without state_keys/field_spec) — restore through the old
+                # like-template path and serve it as a DenseField
+                import jax
+
+                like = jax.eval_shape(
+                    lambda k: tensorf.init_field(cfg, k),
+                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+                params = ckpt_lib.restore_checkpoint(ckpt_dir, step, like)
+                restored = field_lib.DenseField(params, cfg)
+                if verbose:
+                    print(f"[engine] {ckpt_dir} holds a legacy params-dict "
+                          f"checkpoint; restored dense (re-save with "
+                          f"ckpt.save_field to keep it encoded)")
+            bad = field_lib.cfg_mismatches(restored, cfg)
             if bad:
                 raise ValueError(
                     f"checkpoint at {ckpt_dir} was trained with a different "
                     f"NeRFConfig: {'; '.join(bad)}")
-            return params
+            return restored
     res = nerf_train.train_nerf(cfg, scene, steps=train_steps,
                                 n_views=n_views, image_hw=image_hw,
                                 log_every=max(train_steps // 2, 1),
@@ -149,24 +171,24 @@ def prepare_field(cfg: NeRFConfig, scene: str, *, ckpt_dir: Optional[str],
         with open(os.path.join(ckpt_dir, FIELD_META), "w") as f:
             json.dump({"scene": scene, "steps": train_steps, "seed": seed,
                        "grid_res": cfg.grid_res}, f)
-        path = ckpt_lib.save_checkpoint(ckpt_dir, train_steps, res.params)
+        path = ckpt_lib.save_field(ckpt_dir, train_steps, res.field)
         if verbose:
             print(f"[engine] checkpointed field to {path}")
-    return res.params
+    return res.field
 
 
 class RenderEngine:
     """Batched novel-view serving from one resident (compressed) field."""
 
     def __init__(self, cfg: NeRFConfig, field, cubes: CubeSet, *,
-                 field_mode: str = "hybrid", ray_chunk: int = 4096,
+                 encode: bool = True, ray_chunk: int = 4096,
                  cube_chunk: int = 8, pair_budget: int = None,
                  order_mode: str = "octant", max_batch_views: int = 8,
                  mesh=None):
         import jax
 
         self.cfg = cfg
-        self.field_mode = field_mode
+        self.encode_fields = bool(encode)
         self.ray_chunk = int(ray_chunk)
         self.cube_chunk = int(cube_chunk)
         self.max_batch_views = int(max_batch_views)
@@ -177,20 +199,15 @@ class RenderEngine:
         self.rules = make_rules(mesh)
         self.n_devices = int(np.prod(list(mesh.shape.values())))
 
-        if field_mode == "hybrid" and not isinstance(
-                field, sparse.CompressedField):
-            field = sparse.compress_field(field, cfg)
-        # byte accounting shared with the renderers (pipeline.field_eval_fns)
-        _, _, _, self.factor_bytes, self.factor_bytes_dense = \
-            rt_pipe.field_eval_fns(field, cfg, field_mode)
-        # resident placement: streams replicated, rays are the sharded axis
-        self.field = distributed.place_field(field, self.rules)
-        self.cubes = cubes
-        self.ordering = rt_pipe.OrderingCache(cubes, order_mode)
-
+        # ONE jitted step; the field is a pytree argument, so a hot-swapped
+        # field with the same encoded structure hits the compiled cache
         self._render = jax.jit(rt_pipe.make_ray_renderer(
-            self.field, cfg, field_mode=field_mode, chunk=self.cube_chunk,
-            pair_budget=pair_budget))
+            cfg, chunk=self.cube_chunk, pair_budget=pair_budget))
+
+        self._lock = threading.RLock()
+        self.ordering: Optional[rt_pipe.OrderingCache] = None
+        self._order_mode = order_mode
+        self._install_field(field, cubes)
 
         self._queue: List[_Request] = []
         self._next_id = 0
@@ -199,8 +216,33 @@ class RenderEngine:
         self._views_served = 0
         self._flushes = 0
         self._dropped_pairs = 0
+        self._timeouts = 0
+        self._field_swaps = 0
 
     # -- field lifecycle ---------------------------------------------------
+
+    def _install_field(self, field, cubes: Optional[CubeSet]):
+        """Coerce -> normalise representation -> place on the mesh ->
+        publish. encode=True serves the hybrid streams (no-op when the
+        field arrives pre-encoded, e.g. from compressed-native training);
+        encode=False serves the dense factor arrays — it *decodes* an
+        encoded field, so the flag is a real dense/compressed toggle (the
+        benchmark baseline path). Callers hold the engine lock (or are the
+        constructor)."""
+        field = field_lib.as_backend(field, self.cfg)
+        field = field.encode() if self.encode_fields else field.decode()
+        field = distributed.place_field(field, self.rules)
+        if cubes is None:
+            occ = occ_lib.build_occupancy(field, self.cfg)
+            cubes = occ_lib.extract_cubes(occ, self.cfg)
+        self.field = field
+        self.factor_bytes = field.factor_bytes()
+        self.factor_bytes_dense = field.dense_factor_bytes()
+        self.cubes = cubes
+        if self.ordering is None:
+            self.ordering = rt_pipe.OrderingCache(cubes, self._order_mode)
+        else:
+            self.ordering.invalidate(cubes)
 
     @classmethod
     def from_scene(cls, cfg: NeRFConfig, scene: str, *,
@@ -209,32 +251,51 @@ class RenderEngine:
                    prune_sparsity: float = 0.0, seed: int = 0,
                    verbose: bool = True, **kw) -> "RenderEngine":
         """Train-once-or-restore, prune, rebuild occupancy, go resident."""
-        params = prepare_field(cfg, scene, ckpt_dir=ckpt_dir,
-                               train_steps=train_steps, n_views=n_views,
-                               image_hw=image_hw, seed=seed, verbose=verbose)
+        field = prepare_field(cfg, scene, ckpt_dir=ckpt_dir,
+                              train_steps=train_steps, n_views=n_views,
+                              image_hw=image_hw, seed=seed, verbose=verbose)
         if prune_sparsity > 0.0:
-            params = tensorf.prune_to_sparsity(params, prune_sparsity)
-        occ = occ_lib.build_occupancy(params, cfg,
-                                      sigma_thresh=cfg.occ_sigma_thresh)
+            field = field.prune(sparsity=prune_sparsity)
+        occ = occ_lib.build_occupancy(field, cfg)
         cubes = occ_lib.extract_cubes(occ, cfg)
-        return cls(cfg, params, cubes, **kw)
+        return cls(cfg, field, cubes, **kw)
+
+    def swap_field(self, field, cubes: Optional[CubeSet] = None):
+        """Atomically publish a newly trained / re-encoded field to the
+        running engine (the train->serve loop). Queued requests are NOT
+        dropped: they stay queued and render from the new field at the next
+        flush, and requests racing in from other threads land before or
+        after the swap, never astride it. When `cubes` is None the
+        occupancy cube set is rebuilt from the new field at
+        cfg.occ_sigma_thresh; cached orderings are invalidated either way."""
+        with self._lock:
+            self._install_field(field, cubes)
+            self._field_swaps += 1
 
     def update_cubes(self, cubes: CubeSet):
         """Occupancy rebuilt (e.g. the field was re-pruned): swap the cube
         set and drop every cached ordering."""
-        self.cubes = cubes
-        self.ordering.invalidate(cubes)
+        with self._lock:
+            self.cubes = cubes
+            self.ordering.invalidate(cubes)
 
     # -- request/response --------------------------------------------------
 
-    def submit(self, cam: Camera, gt=None) -> ViewFuture:
+    def submit(self, cam: Camera, gt=None, *,
+               deadline_s: Optional[float] = None) -> ViewFuture:
         """Queue one novel-view request; returns a future. The queue is
-        flushed when it reaches `max_batch_views` (or on flush()/result())."""
-        fut = ViewFuture(self, self._next_id)
-        self._queue.append(_Request(cam, gt, fut, time.perf_counter()))
-        self._next_id += 1
-        if len(self._queue) >= self.max_batch_views:
-            self.flush()
+        flushed when it reaches `max_batch_views` (or on flush()/result()).
+        `deadline_s` (seconds from now): if the deadline passes before the
+        render starts, the request resolves with a timed-out ViewResult
+        instead of being rendered late (AR/VR frames are useless stale)."""
+        with self._lock:
+            fut = ViewFuture(self, self._next_id)
+            now = time.perf_counter()
+            deadline = None if deadline_s is None else now + deadline_s
+            self._queue.append(_Request(cam, gt, fut, now, deadline))
+            self._next_id += 1
+            if len(self._queue) >= self.max_batch_views:
+                self.flush()
         return fut
 
     def flush(self) -> List[ViewResult]:
@@ -242,24 +303,42 @@ class RenderEngine:
         each group's rays into fixed chunks, run the single jitted step.
         If a render fails, unresolved requests go back on the queue before
         the error propagates."""
-        if not self._queue:
-            return []
-        reqs, self._queue = self._queue, []
-        try:
-            return self._flush(reqs)
-        except BaseException:
-            self._queue = [r for r in reqs
-                           if r.future._result is None] + self._queue
-            raise
+        with self._lock:
+            if not self._queue:
+                return []
+            reqs, self._queue = self._queue, []
+            try:
+                return self._flush(reqs)
+            except BaseException:
+                self._queue = [r for r in reqs
+                               if r.future._result is None] + self._queue
+                raise
 
     def _flush(self, reqs: List[_Request]) -> List[ViewResult]:
         t0 = time.perf_counter()
-        groups: Dict[tuple, List[_Request]] = {}
+        results: List[ViewResult] = []
+
+        # deadline pass: fail expired requests now, render the rest
+        live: List[_Request] = []
         for r in reqs:
+            if r.deadline is not None and t0 > r.deadline:
+                res = ViewResult(view_id=r.future._view_id, img=None,
+                                 psnr=None, latency_s=t0 - r.t_submit,
+                                 stats={}, timed_out=True)
+                r.future._set(res)
+                results.append(res)
+                self._timeouts += 1
+            else:
+                live.append(r)
+        if not live:
+            return results
+
+        groups: Dict[tuple, List[_Request]] = {}
+        for r in live:
             groups.setdefault(self.ordering.key_for(r.cam.origin),
                               []).append(r)
 
-        results: List[ViewResult] = []
+        n_before = len(results)
         try:
             self._flush_groups(groups, results)
         finally:
@@ -267,7 +346,7 @@ class RenderEngine:
             # later group's render raised, so stats() stays consistent
             # with the latencies recorded for the resolved views
             self._render_s_total += time.perf_counter() - t0
-            self._views_served += len(results)
+            self._views_served += len(results) - n_before
             self._flushes += 1
         return results
 
@@ -286,7 +365,7 @@ class RenderEngine:
                 ro, rd = distributed.shard_rays(
                     self.rules, jnp.asarray(plan.rays_o[i]),
                     jnp.asarray(plan.rays_d[i]))
-                rgb, aux = self._render(centers, valid, ro, rd)
+                rgb, aux = self._render(self.field, centers, valid, ro, rd)
                 outs.append(np.asarray(rgb))
                 self._dropped_pairs += int(aux["dropped_pairs"])
             imgs = plan.scatter(outs)
@@ -317,25 +396,30 @@ class RenderEngine:
     # -- telemetry ---------------------------------------------------------
 
     def stats(self) -> Dict:
-        lat = np.asarray(self._latencies, np.float64)
-        return {
-            "views_served": self._views_served,
-            "flushes": self._flushes,
-            "fps": (self._views_served / self._render_s_total
-                    if self._render_s_total > 0 else 0.0),
-            "render_s_total": self._render_s_total,
-            "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
-            "latency_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
-            "latency_mean_s": float(lat.mean()) if lat.size else 0.0,
-            "occ_accesses_per_view": float(self.cubes.count),
-            "factor_bytes": float(self.factor_bytes),
-            "factor_bytes_dense": float(self.factor_bytes_dense),
-            "compression_ratio": (self.factor_bytes_dense
-                                  / max(self.factor_bytes, 1)),
-            "dropped_pairs": self._dropped_pairs,
-            "ordering_cache": self.ordering.stats(),
-            "field_mode": self.field_mode,
-            "ray_chunk": self.ray_chunk,
-            "cube_chunk": self.cube_chunk,
-            "n_devices": self.n_devices,
-        }
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
+            return {
+                "views_served": self._views_served,
+                "flushes": self._flushes,
+                "fps": (self._views_served / self._render_s_total
+                        if self._render_s_total > 0 else 0.0),
+                "render_s_total": self._render_s_total,
+                "latency_p50_s": (float(np.percentile(lat, 50))
+                                  if lat.size else 0.0),
+                "latency_p95_s": (float(np.percentile(lat, 95))
+                                  if lat.size else 0.0),
+                "latency_mean_s": float(lat.mean()) if lat.size else 0.0,
+                "occ_accesses_per_view": float(self.cubes.count),
+                "factor_bytes": float(self.factor_bytes),
+                "factor_bytes_dense": float(self.factor_bytes_dense),
+                "compression_ratio": (self.factor_bytes_dense
+                                      / max(self.factor_bytes, 1)),
+                "dropped_pairs": self._dropped_pairs,
+                "timeouts": self._timeouts,
+                "field_swaps": self._field_swaps,
+                "ordering_cache": self.ordering.stats(),
+                "field_kind": self.field.kind,
+                "ray_chunk": self.ray_chunk,
+                "cube_chunk": self.cube_chunk,
+                "n_devices": self.n_devices,
+            }

@@ -1,11 +1,13 @@
 """Compressed-field (hybrid bitmap/COO) rendering path: codec boundary,
-dense/hybrid eval parity, and end-to-end render parity (paper Sec. 4.2.2)."""
+dense/hybrid eval parity, and end-to-end render parity (paper Sec. 4.2.2),
+all through the unified FieldBackend API (core/field.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.rtnerf import NeRFConfig
+from repro.core import field as field_lib
 from repro.core import occupancy as occ_lib
 from repro.core import pipeline as rt_pipe
 from repro.core import rendering, sparse, tensorf
@@ -16,94 +18,95 @@ CFG = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=256,
                  max_samples_per_ray=64, train_rays=256)
 
 
-def _pruned_field(target=0.9, seed=0):
+def _pruned_field(target=0.9, seed=0) -> field_lib.DenseField:
     params = tensorf.init_field(CFG, jax.random.PRNGKey(seed))
-    return tensorf.prune_to_sparsity(params, target)
+    return field_lib.DenseField(params, CFG).prune(sparsity=target)
 
 
 def test_prune_to_sparsity_hits_target():
-    params = _pruned_field(0.9)
-    for k, s in tensorf.factor_sparsity(params).items():
+    """prune(sparsity=t) targets t over each full factor tensor; per-mode
+    slices may sit slightly below while the tensor-level fraction holds."""
+    f = _pruned_field(0.9)
+    sp = tensorf.factor_sparsity(f.params)
+    for k, s in sp.items():
         assert s >= 0.89, (k, s)
+    for k, v in f.sparsity_report().items():
+        assert v["sparsity"] >= 0.85, (k, v)
 
 
-def test_compress_field_roundtrip_exact():
-    params = _pruned_field(0.9)
-    cf = sparse.compress_field(params, CFG)
-    rec = sparse.decompress_field(cf)
+def test_encode_decode_roundtrip_exact():
+    f = _pruned_field(0.9)
+    cf = f.encode()
+    rec = cf.decode().params
     for k in sparse.FACTOR_KEYS:
         np.testing.assert_array_equal(np.asarray(rec[k]),
-                                      np.asarray(params[k]))
+                                      np.asarray(f.params[k]))
     # extras pass through untouched
     assert "basis" in cf.extras and "mlp_w1" in cf.extras
 
 
-def test_compress_field_dense_factors_stay_dense():
+def test_encode_dense_factors_stay_dense():
     """Don't pessimize: an unpruned (fully dense) field must not be encoded
     into a format larger than its raw bytes."""
     params = tensorf.init_field(CFG, jax.random.PRNGKey(1))
-    cf = sparse.compress_field(params, CFG)
-    for efs in cf.factors.values():
-        for ef in efs:
-            assert ef.fmt == "dense"
-            assert ef.storage() <= ef.dense_storage()
+    cf = field_lib.DenseField(params, CFG).encode()
+    for v in cf.sparsity_report().values():
+        assert v["format"] == "dense"
+        assert v["bytes"] <= v["dense_bytes"]
     assert cf.factor_bytes() == cf.dense_factor_bytes()
 
 
-def test_compress_field_bytes_ratio_at_90pct():
-    cf = sparse.compress_field(_pruned_field(0.9), CFG)
+def test_encode_bytes_ratio_at_90pct():
+    cf = _pruned_field(0.9).encode()
     assert cf.compression_ratio() >= 3.0
-    for efs in cf.factors.values():
-        for ef in efs:
-            assert ef.fmt == "coo"          # 0.9 >= 0.8 threshold
-            assert ef.storage() < ef.dense_storage()
+    for v in cf.sparsity_report().values():
+        assert v["format"] == "coo"          # 0.9 >= 0.8 threshold
+        assert v["bytes"] < v["dense_bytes"]
 
 
-def test_compress_field_respects_threshold():
+def test_encode_respects_threshold():
     """Between the storage break-even and the 0.80 switch, factors encode
     as bitmap; at/above the switch, COO."""
-    params = _pruned_field(0.6)
-    cf = sparse.compress_field(params, CFG, threshold=0.80)
-    fmts = {ef.fmt for efs in cf.factors.values() for ef in efs}
+    f = _pruned_field(0.6)
+    fmts = {v["format"] for v in f.encode(threshold=0.80)
+            .sparsity_report().values()}
     assert "coo" not in fmts                # 0.6 sparsity < threshold
-    cf2 = sparse.compress_field(params, CFG, threshold=0.55)
-    fmts2 = {ef.fmt for efs in cf2.factors.values() for ef in efs}
+    fmts2 = {v["format"] for v in f.encode(threshold=0.55)
+             .sparsity_report().values()}
     assert "coo" in fmts2
 
 
 @pytest.mark.parametrize("target", [0.6, 0.9])
-def test_eval_sigma_hybrid_matches_dense(target):
-    params = _pruned_field(target)
-    cf = sparse.compress_field(params, CFG)
+def test_sigma_hybrid_matches_dense(target):
+    f = _pruned_field(target)
+    cf = f.encode()
     pts = jax.random.uniform(jax.random.PRNGKey(2), (513, 3),
                              minval=-1.4, maxval=1.4)
-    sd = np.asarray(tensorf.eval_sigma(params, CFG, pts))
-    sh = np.asarray(tensorf.eval_sigma_hybrid(cf, CFG, pts))
-    np.testing.assert_allclose(sh, sd, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cf.sigma(pts)),
+                               np.asarray(f.sigma(pts)),
+                               rtol=1e-6, atol=1e-6)
 
 
-def test_eval_app_features_hybrid_matches_dense():
-    params = _pruned_field(0.9)
-    cf = sparse.compress_field(params, CFG)
+def test_app_features_hybrid_matches_dense():
+    f = _pruned_field(0.9)
+    cf = f.encode()
     pts = jax.random.uniform(jax.random.PRNGKey(3), (257, 3),
                              minval=-1.4, maxval=1.4)
-    fd = np.asarray(tensorf.eval_app_features(params, CFG, pts))
-    fh = np.asarray(tensorf.eval_app_features_hybrid(cf, CFG, pts))
-    np.testing.assert_allclose(fh, fd, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cf.app_features(pts)),
+                               np.asarray(f.app_features(pts)),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_hybrid_render_psnr_vs_dense():
     """End-to-end: the RT-NeRF pipeline rendered from the compressed stream
     must match the dense-factor render (>= 40 dB on a pruned toy field)."""
-    params = _pruned_field(0.9)
-    occ = occ_lib.build_occupancy(params, CFG, sigma_thresh=0.01)
+    f = _pruned_field(0.9)
+    occ = occ_lib.build_occupancy(f, CFG, sigma_thresh=0.01)
     cubes = occ_lib.extract_cubes(occ, CFG)
     assert cubes.count > 0
     cam = rays_lib.make_cameras(3, 32, 32)[0]
-    img_d, st_d = rt_pipe.render_rtnerf(params, CFG, cubes, cam, chunk=8,
-                                        field_mode="dense")
-    img_h, st_h = rt_pipe.render_rtnerf(params, CFG, cubes, cam, chunk=8,
-                                        field_mode="hybrid")
+    img_d, st_d = rt_pipe.render_rtnerf(f, CFG, cubes, cam, chunk=8)
+    img_h, st_h = rt_pipe.render_rtnerf(f.encode(), CFG, cubes, cam, chunk=8)
     psnr = float(rendering.psnr(jnp.clip(img_h, 0, 1),
                                 jnp.clip(img_d, 0, 1)))
     assert psnr >= 40.0, psnr
@@ -111,50 +114,42 @@ def test_hybrid_render_psnr_vs_dense():
     assert float(st_h["factor_bytes_dense"]) == float(st_d["factor_bytes"])
 
 
-def test_render_accepts_prebuilt_compressed_field():
-    params = _pruned_field(0.9)
-    occ = occ_lib.build_occupancy(params, CFG, sigma_thresh=0.01)
+def test_render_accepts_dict_and_backend():
+    """as_backend: render_rtnerf takes raw params dicts and backends alike,
+    and the encoded/dense results agree."""
+    f = _pruned_field(0.9)
+    occ = occ_lib.build_occupancy(f, CFG, sigma_thresh=0.01)
     cubes = occ_lib.extract_cubes(occ, CFG)
     cam = rays_lib.make_cameras(3, 24, 24)[0]
-    cf = sparse.compress_field(params, CFG)
-    img_cf, _ = rt_pipe.render_rtnerf(cf, CFG, cubes, cam, chunk=8,
-                                      field_mode="hybrid")
-    img_p, _ = rt_pipe.render_rtnerf(params, CFG, cubes, cam, chunk=8,
-                                     field_mode="hybrid")
-    np.testing.assert_allclose(np.asarray(img_cf), np.asarray(img_p),
+    img_dict, _ = rt_pipe.render_rtnerf(f.params, CFG, cubes, cam, chunk=8)
+    img_back, _ = rt_pipe.render_rtnerf(f, CFG, cubes, cam, chunk=8)
+    np.testing.assert_allclose(np.asarray(img_dict), np.asarray(img_back),
                                rtol=1e-6, atol=1e-6)
-    # dense mode decompresses a CompressedField rather than failing
-    img_dd, _ = rt_pipe.render_rtnerf(cf, CFG, cubes, cam, chunk=8,
-                                      field_mode="dense")
-    assert np.isfinite(np.asarray(img_dd)).all()
 
 
-def test_eval_view_rejects_hybrid_on_uniform_pipeline():
+def test_uniform_pipeline_samples_encoded_field():
+    """The uniform baseline renders straight from the encoded streams too —
+    no decompressed copy, same image as the dense field."""
     from repro.core import train as nerf_train
-    from repro.data import rays as rays_lib
 
-    params = _pruned_field(0.9)
-    occ = occ_lib.build_occupancy(params, CFG, sigma_thresh=0.01)
+    f = _pruned_field(0.9)
+    occ = occ_lib.build_occupancy(f, CFG, sigma_thresh=0.01)
     cubes = occ_lib.extract_cubes(occ, CFG)
     cam = rays_lib.make_cameras(3, 16, 16)[0]
     gt = jnp.zeros((16 * 16, 3))
-    with pytest.raises(ValueError, match="uniform"):
-        nerf_train.eval_view(params, CFG, cubes, cam, gt,
-                             pipeline="uniform", field_mode="hybrid")
-    # a CompressedField on the uniform pipeline decompresses, not crashes
-    cf = sparse.compress_field(params, CFG)
-    p, stats, img = nerf_train.eval_view(cf, CFG, cubes, cam, gt,
+    p_d, _, img_d = nerf_train.eval_view(f, CFG, cubes, cam, gt,
                                          pipeline="uniform")
-    assert np.isfinite(np.asarray(img)).all()
+    p_h, _, img_h = nerf_train.eval_view(f.encode(), CFG, cubes, cam, gt,
+                                         pipeline="uniform")
+    np.testing.assert_allclose(np.asarray(img_h), np.asarray(img_d),
+                               rtol=1e-5, atol=1e-5)
 
 
-def test_render_rejects_unknown_field_mode():
-    params = _pruned_field(0.9)
-    occ = occ_lib.build_occupancy(params, CFG, sigma_thresh=0.01)
-    cubes = occ_lib.extract_cubes(occ, CFG)
-    cam = rays_lib.make_cameras(3, 16, 16)[0]
-    with pytest.raises(ValueError):
-        rt_pipe.render_rtnerf(params, CFG, cubes, cam, field_mode="sparse")
+def test_as_backend_rejects_non_fields():
+    with pytest.raises(TypeError, match="field_mode"):
+        field_lib.as_backend("hybrid")
+    with pytest.raises(ValueError, match="NeRFConfig"):
+        field_lib.as_backend({"sigma_planes": jnp.zeros((3, 4, 8, 8))})
 
 
 def test_gather_factor_all_formats_agree():

@@ -90,11 +90,19 @@ def test_order_cubes_front_to_back(field):
 
 
 def _trained_setup():
-    """Small trained field shared by the pipeline-equivalence tests."""
+    """Small trained field shared by the pipeline-equivalence tests.
+
+    occ_sigma_thresh=2.0: these tests probe pipeline equivalence (ordering
+    invariance, chunking) on a compact cube set; the low serving default
+    (0.5) floods a 120-step field with near-empty cubes, which inflates the
+    documented chunk>1 overlap approximation rather than testing it. The
+    trainer reads whatever the config says — this is the config saying it.
+    """
     from repro.core import train as nerf_train
     cfg = NeRFConfig(grid_res=32, occ_res=32, cube_size=4, max_cubes=512,
                      r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
-                     max_samples_per_ray=96, train_rays=512)
+                     max_samples_per_ray=96, train_rays=512,
+                     occ_sigma_thresh=2.0)
     res = nerf_train.train_nerf(cfg, "mic", steps=120, n_views=6,
                                 image_hw=48, log_every=1000, verbose=False)
     scene = rays_lib.make_scene("mic")
@@ -111,9 +119,9 @@ def trained():
 def test_pipeline_matches_uniform_psnr(trained):
     cfg, res, cam, gt = trained
     from repro.core import train as nerf_train
-    p_uni, s_uni, _ = nerf_train.eval_view(res.params, cfg, res.cubes, cam,
+    p_uni, s_uni, _ = nerf_train.eval_view(res.field, cfg, res.cubes, cam,
                                            gt, pipeline="uniform")
-    p_rt, s_rt, _ = nerf_train.eval_view(res.params, cfg, res.cubes, cam, gt,
+    p_rt, s_rt, _ = nerf_train.eval_view(res.field, cfg, res.cubes, cam, gt,
                                          pipeline="rtnerf")
     assert p_rt > p_uni - 1.5                   # quality parity (box clip)
     # A1 claim: occupancy accesses reduced by orders of magnitude
@@ -126,9 +134,9 @@ def test_ordering_modes_agree(trained):
     as long as both orders are front-to-back per ray ... up to early-term
     boundary effects, so compare loosely)."""
     cfg, res, cam, gt = trained
-    img_o, _ = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam,
+    img_o, _ = rt_pipe.render_rtnerf(res.field, cfg, res.cubes, cam,
                                      order_mode="octant")
-    img_d, _ = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam,
+    img_d, _ = rt_pipe.render_rtnerf(res.field, cfg, res.cubes, cam,
                                      order_mode="distance")
     diff = np.abs(np.asarray(img_o) - np.asarray(img_d)).mean()
     assert diff < 5e-3
@@ -136,8 +144,8 @@ def test_ordering_modes_agree(trained):
 
 def test_chunked_matches_sequential(trained):
     cfg, res, cam, gt = trained
-    img_1, _ = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam, chunk=1)
-    img_8, _ = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam, chunk=8)
+    img_1, _ = rt_pipe.render_rtnerf(res.field, cfg, res.cubes, cam, chunk=1)
+    img_8, _ = rt_pipe.render_rtnerf(res.field, cfg, res.cubes, cam, chunk=8)
     diff = np.abs(np.asarray(img_1) - np.asarray(img_8)).mean()
     assert diff < 5e-3
 
@@ -146,8 +154,8 @@ def test_early_termination_reduces_work(trained):
     cfg, res, cam, gt = trained
     import dataclasses
     cfg_no_term = dataclasses.replace(cfg, term_eps=0.0)
-    _, s_term = rt_pipe.render_rtnerf(res.params, cfg, res.cubes, cam)
-    _, s_all = rt_pipe.render_rtnerf(res.params, cfg_no_term, res.cubes, cam)
+    _, s_term = rt_pipe.render_rtnerf(res.field, cfg, res.cubes, cam)
+    _, s_all = rt_pipe.render_rtnerf(res.field, cfg_no_term, res.cubes, cam)
     assert float(s_term["processed_samples"]) <= float(s_all["processed_samples"])
 
 

@@ -14,11 +14,11 @@ def trained_scene():
     cfg = NeRFConfig(grid_res=32, occ_res=32, cube_size=4, max_cubes=512,
                      r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
                      max_samples_per_ray=96, train_rays=512)
+    # the occupancy rebuild reads cfg.occ_sigma_thresh (0.5 — the low
+    # cutoff thin scenes need); no per-call-site threshold anymore
     res = nerf_train.train_nerf(cfg, "materials", steps=150, n_views=6,
-                                image_hw=48, log_every=1000, verbose=False,
-                                sigma_thresh=0.5)   # thin scene needs a low
-    return cfg, res                                 # cube threshold (see
-                                                    # benchmarks/common.py)
+                                image_hw=48, log_every=1000, verbose=False)
+    return cfg, res
 
 
 def test_nerf_training_learns(trained_scene):
@@ -27,7 +27,7 @@ def test_nerf_training_learns(trained_scene):
     scene = rays_lib.make_scene("materials")
     cam = rays_lib.make_cameras(5, 48, 48)[2]
     gt = rays_lib.render_gt(scene, cam)
-    p, stats, img = nerf_train.eval_view(res.params, cfg, res.cubes, cam, gt,
+    p, stats, img = nerf_train.eval_view(res.field, cfg, res.cubes, cam, gt,
                                          pipeline="uniform")
     assert p > 14.0, f"PSNR too low: {p}"       # white bg baseline ~8-10
 
@@ -40,9 +40,9 @@ def test_rtnerf_pipeline_end_to_end(trained_scene):
     scene = rays_lib.make_scene("materials")
     cam = rays_lib.make_cameras(5, 48, 48)[2]
     gt = rays_lib.render_gt(scene, cam)
-    p_u, s_u, _ = nerf_train.eval_view(res.params, cfg, res.cubes, cam, gt,
+    p_u, s_u, _ = nerf_train.eval_view(res.field, cfg, res.cubes, cam, gt,
                                        pipeline="uniform")
-    p_r, s_r, _ = nerf_train.eval_view(res.params, cfg, res.cubes, cam, gt,
+    p_r, s_r, _ = nerf_train.eval_view(res.field, cfg, res.cubes, cam, gt,
                                        pipeline="rtnerf")
     assert p_r > p_u - 1.5
     assert s_r["occ_accesses"] * 50 < s_u["occ_accesses"]
