@@ -1,0 +1,118 @@
+"""Online fine-tuning while serving: the train->serve loop, live.
+
+A RenderEngine goes resident with a deliberately under-trained field, its
+background flush thread serves a concurrent stream of view requests, and a
+serving.FineTuneLoop fine-tunes the scene on a trainer thread — publishing
+the refreshed hybrid-encoded field into the RUNNING engine via
+`swap_field` every `--publish-every` steps. Watch served-view PSNR climb
+across swaps while the request stream never stalls: zero dropped or
+timed-out futures, and no retracing (the jitted step takes the field as a
+pytree argument).
+
+    PYTHONPATH=src python examples/finetune_serve.py
+    PYTHONPATH=src python examples/finetune_serve.py --tiny   # CI smoke
+
+Expected output shape (full run; numbers vary slightly):
+
+    == serving from an under-trained field while fine-tuning ==
+    view  12: psnr=13.87 swaps_seen=0 ...
+    ...
+    view 119: psnr=26.41 swaps_seen=5 ...
+    == fine-tune/serve summary ==
+    served 120 views, 0 timeouts, 6 live swaps (max swap 4.1ms)
+    psnr before first swap 13.9 dB -> after last swap 26.2 dB
+"""
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.configs.rtnerf import demo_config
+from repro.core import train as nerf_train
+from repro.data import rays as rays_lib
+from repro.serving import FineTuneLoop, RenderEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scene", default="lego")
+    ap.add_argument("--res", type=int, default=48)
+    ap.add_argument("--warmup-steps", type=int, default=5,
+                    help="steps for the (bad) starting field")
+    ap.add_argument("--finetune-steps", type=int, default=240)
+    ap.add_argument("--publish-every", type=int, default=40)
+    ap.add_argument("--flush-interval", type=float, default=0.25,
+                    help="engine background flush interval (s)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape: small field, 60 steps, 24^2")
+    args = ap.parse_args()
+
+    if args.tiny:
+        args.res = min(args.res, 24)
+        args.finetune_steps, args.publish_every = 60, 15
+    cfg = demo_config(tiny=args.tiny)
+
+    # an under-trained starting field: the fine-tuner has room to climb
+    res = nerf_train.train_nerf(cfg, args.scene, steps=args.warmup_steps,
+                                n_views=8, image_hw=args.res, verbose=False)
+    engine = RenderEngine(cfg, res.field, res.cubes,
+                          ray_chunk=args.res * args.res, max_batch_views=4,
+                          auto_flush_interval=args.flush_interval)
+
+    scene = rays_lib.make_scene(args.scene)
+    cams = rays_lib.make_cameras(6, args.res, args.res)
+    gts = [rays_lib.render_gt(scene, c) for c in cams]
+
+    print("== serving from an under-trained field while fine-tuning ==")
+    loop = FineTuneLoop(engine, args.scene, steps=args.finetune_steps,
+                        publish_every=args.publish_every, n_views=8,
+                        image_hw=args.res).start()
+
+    records = []                                  # (psnr, swaps_seen)
+    stream_errs = []
+
+    def stream():
+        try:
+            i = 0
+            while loop.running():
+                fut = engine.submit(cams[i % len(cams)], gts[i % len(cams)])
+                r = fut.result(timeout=600)
+                swaps = engine.stats()["field_swaps"]
+                records.append((r.psnr, swaps, r.timed_out))
+                if i % 4 == 0:
+                    print(f"view {i:4d}: psnr={r.psnr:5.2f} "
+                          f"swaps_seen={swaps} "
+                          f"latency={r.latency_s:.2f}s", flush=True)
+                i += 1
+        except BaseException as e:       # a dead stream must fail the demo
+            stream_errs.append(e)
+
+    t = threading.Thread(target=stream)
+    t.start()
+    loop.join()
+    t.join()
+    engine.close()
+    if stream_errs:
+        raise stream_errs[0]
+
+    s = engine.stats()
+    first = [p for p, sw, _ in records if sw == 0] or [records[0][0]]
+    last_epoch = max(sw for _, sw, _ in records)
+    last = [p for p, sw, _ in records if sw == last_epoch]
+    timeouts = sum(1 for _, _, to in records if to)
+    print("== fine-tune/serve summary ==")
+    print(f"served {len(records)} views, {timeouts} timeouts, "
+          f"{s['field_swaps']} live swaps "
+          f"(max swap {s['swap_latency_s_max'] * 1e3:.1f}ms)")
+    print(f"psnr before first swap {np.mean(first):.1f} dB -> "
+          f"after last swap {np.mean(last):.1f} dB")
+    assert s["field_swaps"] >= 2, "expected at least two live swaps"
+    assert timeouts == 0 and s["timeouts"] == 0, "futures were dropped"
+    assert np.mean(last) > np.mean(first), "fine-tuning did not improve PSNR"
+    print("online fine-tuning refreshed the served field with zero dropped "
+          "requests (serving/finetune.py).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Check that internal links in the repo's markdown docs resolve.
+
+Validates, for each given markdown file (default: README.md and
+docs/*.md):
+  * relative links point at files/directories that exist in the repo;
+  * #fragment links (same-file or cross-file) match a real heading,
+    using GitHub's anchor slug rules.
+External (scheme://) links are skipped — CI must not depend on the
+network. Exit non-zero listing every broken link.
+
+    python scripts/check_doc_links.py [files...]
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+
+
+def strip_fences(text: str) -> str:
+    """Drop fenced code blocks: '#'-prefixed shell comments inside them are
+    not headings (fake anchors would mask broken links), and their brackets
+    are not rendered links."""
+    return FENCE_RE.sub("", text)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's markdown anchor rule: lowercase, drop punctuation,
+    spaces -> dashes (backticks and markdown emphasis stripped first)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {slugify(m.group(1))
+                for m in HEADING_RE.finditer(strip_fences(f.read()))}
+
+
+def check(path: str, root: str) -> list:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = strip_fences(f.read())
+    for m in LINK_RE.finditer(text):
+        target = m.group(0 + 1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        file_part, _, frag = target.partition("#")
+        if file_part:
+            dest = os.path.normpath(
+                os.path.join(os.path.dirname(path), file_part))
+            if not os.path.exists(dest):
+                errors.append(f"{path}: broken link {target!r} "
+                              f"({dest} does not exist)")
+                continue
+        else:
+            dest = path
+        if frag and dest.endswith(".md"):
+            if slugify(frag) not in anchors_of(dest):
+                errors.append(f"{path}: broken anchor {target!r} "
+                              f"(no heading #{frag} in {dest})")
+    return errors
+
+
+def main(argv) -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = argv[1:] or ["README.md"] + sorted(
+        glob.glob(os.path.join(root, "docs", "*.md")))
+    errors = []
+    for f in files:
+        path = f if os.path.isabs(f) else os.path.join(root, f)
+        if not os.path.exists(path):
+            errors.append(f"{f}: file not found")
+            continue
+        errors.extend(check(path, root))
+    for e in errors:
+        print(f"BROKEN: {e}")
+    if not errors:
+        print(f"doc links OK ({len(files)} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

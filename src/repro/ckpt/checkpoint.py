@@ -1,5 +1,16 @@
 """Fault-tolerant checkpointing (no orbax in this container).
 
+API: `save_checkpoint`/`restore_checkpoint` round-trip any pytree through
+`step_XXXX/` directories (restore needs a `like` template);
+`save_state_dict`/`restore_state_dict` round-trip flat {name: array} dicts
+with the key order in the manifest (no template needed);
+`save_field`/`restore_field` checkpoint a `core.field.FieldBackend` in its
+*current* representation — an encoded field's bitmap/COO streams are
+written and rebuilt bit-for-bit, never decompressed (ROADMAP "compressed
+training": what the trainer holds is what the checkpoint stores and the
+serving engine restores). `CheckpointManager` adds async save + retention
+for the elastic training loop.
+
 Guarantees used by launch/elastic.py:
   * atomicity     — write to `step_XXXX.tmp/`, fsync, rename; a crash never
                     leaves a readable-but-partial checkpoint.

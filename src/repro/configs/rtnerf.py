@@ -69,6 +69,20 @@ class NeRFConfig:
 CONFIG = NeRFConfig()
 
 
+def demo_config(tiny: bool = False) -> NeRFConfig:
+    """The shared example/benchmark field shapes — ONE definition of the
+    "tiny CI smoke" and "full demo" configs, so examples/ and benchmarks/
+    exercising the same workload can't drift apart silently."""
+    if tiny:
+        return NeRFConfig(grid_res=24, occ_res=24, cube_size=4,
+                          max_cubes=256, r_sigma=4, r_color=8, app_dim=8,
+                          mlp_hidden=16, max_samples_per_ray=64,
+                          train_rays=256)
+    return NeRFConfig(grid_res=40, occ_res=40, cube_size=4, max_cubes=768,
+                      r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                      max_samples_per_ray=112, train_rays=1024)
+
+
 @dataclasses.dataclass(frozen=True)
 class NeRFShape:
     name: str

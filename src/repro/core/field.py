@@ -12,6 +12,8 @@ string or `isinstance` checks:
   encode()            -> CompressedField (hybrid bitmap/COO per the 80% rule)
   decode()            -> DenseField (exact inverse)
   prune(...)          magnitude pruning (tol- or target-sparsity-based)
+  revive(grads, ...)  dense-side support regrowth at re-encode boundaries
+                      (ROADMAP "support revival"; RigL-style top-|grad|)
   sparsity_report()   per-factor format / sparsity / bytes
   trainable()         flat dict of float leaves (gradient targets)
   with_trainable(t)   same structure, new float payloads
@@ -177,6 +179,38 @@ class DenseField(FieldBackend):
 
     def with_trainable(self, t):
         return DenseField(dict(t), self.cfg)
+
+    def revive(self, grads: Dict[str, jax.Array], *, frac: float,
+               eps: float) -> "DenseField":
+        """Support revival (ROADMAP "support revival in compressed
+        training"): re-admit pruned factor entries at a re-encode boundary.
+
+        Entries pruned to exact zero receive no gradient between encode
+        boundaries (`trainable()` exposes only the packed non-zeros), so a
+        frozen support can never regrow. RigL-style regrowth fixes that: per
+        VM factor, the top `frac` (of total entries) currently-zero entries
+        by |dense loss gradient| are seeded with a one-step move against the
+        gradient, magnitude `eps`. Choose `eps` above the prune tolerance so
+        the next prune+encode keeps the revived entries in the support,
+        where ordinary optimizer steps can grow them. MLP/basis extras are
+        untouched (never pruned)."""
+        if frac <= 0.0:
+            return self
+        out = dict(self.params)
+        for k in sparse.FACTOR_KEYS:
+            w = np.asarray(self.params[k])
+            g = np.asarray(grads[k])
+            zero = w == 0
+            score = np.where(zero, np.abs(g), -1.0).reshape(-1)
+            k_top = min(int(frac * score.size), int(zero.sum()))
+            if k_top <= 0:
+                continue
+            top = np.argpartition(-score, k_top - 1)[:k_top]
+            top = top[score[top] > 0.0]        # never revive grad-free zeros
+            seed = np.zeros(score.size, w.dtype)
+            seed[top] = -eps * np.sign(g.reshape(-1)[top])
+            out[k] = jnp.asarray(w.reshape(-1) + seed).reshape(w.shape)
+        return DenseField(out, self.cfg)
 
     def l1(self):
         return tensorf.field_l1(self.params)

@@ -1,6 +1,14 @@
 """RT-NeRF's efficient rendering pipeline (paper Sec. 3.1) and the
 coarse-grained view-dependent rendering ordering (Sec. 3.2).
 
+API: `render_rtnerf(field, cfg, cubes, cam)` renders one view image-space;
+`make_ray_renderer(cfg, chunk=...)` builds the jit-able fixed-shape ray
+step the serving engine compiles once; `order_cubes` / `octant_rank` /
+`ordering_key` implement the Sec. 3.2 ordering and its exact reuse key;
+`OrderingCache` memoises per-view schedules across a request stream
+(ROADMAP "streaming / multi-view compressed serving"). `field` is anything
+`field.as_backend` accepts — encoded fields are sampled in place.
+
 Instead of uniformly sampling N points along each of H*W rays and querying
 the occupancy grid H*W*N times, we loop over the *non-zero cubes* of the
 occupancy grid (CubeSet, computed at occupancy-update time):

@@ -10,9 +10,14 @@ Formats:
   coo     — sorted linearised coordinates (int32) + values, decoded by
             branchless binary search (the ASIC's search tree, data-parallel).
 
-`choose_format` applies the paper's 80% sparsity switch; `storage_bytes`
-exposes the size model that justifies it. Consumers: TensoRF VM factors and
-(beyond paper) MoE dispatch mode selection in models/moe.py.
+API: `encode_factor(w, threshold) -> EncodedFactor` picks a format per the
+paper's 80% sparsity switch (`choose_format`) and packs the stream;
+`EncodedFactor.decode()` is the exact inverse; `.with_value_array(v)`
+swaps float payloads without touching the integer support (the hook
+compressed-native training optimises through); `storage_bytes` exposes the
+size model that justifies the switch (ROADMAP "hybrid bitmap/COO
+encoding"). Consumers: TensoRF VM factors via core/field.py and (beyond
+paper) MoE dispatch mode selection in models/moe.py.
 
 This module is the pure codec layer. The field-level container that packages
 a whole TensoRF factor set in encoded form — and the dense/compressed

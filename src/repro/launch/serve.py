@@ -6,6 +6,8 @@ novel-view rendering (rtnerf).
     PYTHONPATH=src python -m repro.launch.serve --arch rtnerf \
         --scene lego --views 2 --res 64 \
         --prune-sparsity 0.9 --ckpt-dir /tmp/lego-ckpt
+    PYTHONPATH=src python -m repro.launch.serve --arch rtnerf \
+        --scene lego --finetune-steps 200 --finetune-every 50
 """
 from __future__ import annotations
 
@@ -81,11 +83,14 @@ def serve_nerf(args):
     and every queued view is rendered by the engine's single jitted
     micro-batched step — the serving.RenderEngine subsystem, not a per-view
     train/encode/compile loop. --deadline fails stale requests instead of
-    rendering them late.
+    rendering them late. --finetune-steps starts the online fine-tuning
+    service (serving.FineTuneLoop): a background trainer refreshes the
+    resident field via swap_field every --finetune-every steps while the
+    request stream keeps rendering.
     """
     from repro.configs.rtnerf import NeRFConfig
     from repro.data import rays as rays_lib
-    from repro.serving import RenderEngine
+    from repro.serving import FineTuneLoop, RenderEngine
 
     cfg = NeRFConfig(grid_res=48, occ_res=48, cube_size=4, max_cubes=1024,
                      r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
@@ -94,31 +99,47 @@ def serve_nerf(args):
         cfg, args.scene, ckpt_dir=args.ckpt_dir,
         train_steps=args.train_steps, n_views=8, image_hw=args.res,
         prune_sparsity=args.prune_sparsity, encode=not args.dense,
-        ray_chunk=args.res * args.res, max_batch_views=args.views)
+        ray_chunk=args.res * args.res, max_batch_views=args.views,
+        auto_flush_interval=(0.25 if args.finetune_steps else None))
     s = engine.stats()
     if s["field_kind"] == "compressed":
         print(f"compressed field: {s['factor_bytes']:.0f} B factors "
               f"(dense {s['factor_bytes_dense']:.0f} B, "
               f"{s['compression_ratio']:.2f}x)")
 
+    loop = None
+    if args.finetune_steps:
+        loop = FineTuneLoop(engine, args.scene, steps=args.finetune_steps,
+                            publish_every=args.finetune_every, n_views=8,
+                            image_hw=args.res, verbose=True).start()
+
     scene = rays_lib.make_scene(args.scene)
     cams = rays_lib.make_cameras(args.views, args.res, args.res)
     gts = [rays_lib.render_gt(scene, cam) for cam in cams]
-    futures = [engine.submit(cam, gt, deadline_s=args.deadline)
-               for cam, gt in zip(cams, gts)]
-    for i, fut in enumerate(futures):
-        r = fut.result()
-        if r.timed_out:
-            print(f"view {i}: TIMED OUT after {r.latency_s:.2f}s")
-            continue
-        print(f"view {i}: psnr={r.psnr:.2f} latency={r.latency_s:.2f}s "
-              f"occ_accesses={r.stats['occ_accesses']:.0f} "
-              f"factor_bytes={r.stats['factor_bytes']:.0f}")
+    rounds = 1 if loop is None else max(args.finetune_rounds, 1)
+    for rnd in range(rounds):
+        futures = [engine.submit(cam, gt, deadline_s=args.deadline)
+                   for cam, gt in zip(cams, gts)]
+        for i, fut in enumerate(futures):
+            r = fut.result()
+            if r.timed_out:
+                print(f"view {i}: TIMED OUT after {r.latency_s:.2f}s")
+                continue
+            print(f"view {i}: psnr={r.psnr:.2f} latency={r.latency_s:.2f}s "
+                  f"occ_accesses={r.stats['occ_accesses']:.0f} "
+                  f"factor_bytes={r.stats['factor_bytes']:.0f}")
+    if loop is not None:
+        loop.join()
+        engine.close()
+        print(f"fine-tuned {loop.trainer.step_count} steps, "
+              f"{len(loop.swaps)} live swaps "
+              f"(max swap {engine.stats()['swap_latency_s_max'] * 1e3:.1f}ms)")
     s = engine.stats()
     print(f"served {s['views_served']} views, {s['fps']:.3f} FPS (CPU), "
           f"p50={s['latency_p50_s']:.2f}s p95={s['latency_p95_s']:.2f}s, "
           f"ordering-cache hits={s['ordering_cache']['hits']}, "
-          f"timeouts={s['timeouts']}, field={s['field_kind']}")
+          f"timeouts={s['timeouts']}, swaps={s['field_swaps']}, "
+          f"field={s['field_kind']}")
 
 
 def main():
@@ -141,6 +162,17 @@ def main():
                     help="rtnerf only: per-request deadline in seconds; "
                          "stale requests fail with a timeout result "
                          "instead of rendering late")
+    ap.add_argument("--finetune-steps", type=int, default=0,
+                    help="rtnerf only: run the online fine-tuning service "
+                         "for this many background training steps while "
+                         "serving (0 = off); refreshed fields are published "
+                         "live via swap_field")
+    ap.add_argument("--finetune-every", type=int, default=50,
+                    help="rtnerf only: publish the refreshed field to the "
+                         "running engine every N fine-tune steps")
+    ap.add_argument("--finetune-rounds", type=int, default=3,
+                    help="rtnerf only: how many passes over the view set "
+                         "to stream while the fine-tuner runs")
     ap.add_argument("--prune-sparsity", type=float, default=0.0,
                     help="rtnerf only: magnitude-prune factors to this "
                          "sparsity before serving (0 = training prune only)")

@@ -2,3 +2,4 @@ from repro.serving.engine import (  # noqa: F401
     RenderEngine, ViewFuture, ViewResult, prepare_field)
 from repro.serving.batching import (  # noqa: F401
     MicroBatchPlan, ViewSlice, plan_microbatches)
+from repro.serving.finetune import FineTuneLoop  # noqa: F401

@@ -1,10 +1,17 @@
 """Micro-batching of per-view ray batches into fixed-size chunks.
 
-The serving engine renders through ONE jitted step whose ray shape is a
-static `chunk`; queued views of any resolution are concatenated, padded to
-a chunk multiple, and cut into (n_chunks, chunk) — so compilation cost is
-paid once per engine, never per view or per resolution mix. `scatter`
-inverts the packing, handing each view back its contiguous pixel block.
+API: `plan_microbatches(ray_batches, chunk) -> MicroBatchPlan` packs the
+queued views' (rays_o, rays_d) into (n_chunks, chunk, 3) arrays;
+`MicroBatchPlan.scatter(outs)` inverts the packing, handing each view back
+its contiguous pixel block (pad outputs dropped).
+
+This is the compile-once half of the serving engine's amortisation story
+(ROADMAP "streaming / multi-view compressed serving"; the paper's
+sustained AR/VR scenario): the engine renders through ONE jitted step
+whose ray shape is a static `chunk`; queued views of any resolution are
+concatenated, padded to a chunk multiple, and cut into (n_chunks, chunk) —
+so compilation cost is paid once per engine, never per view, per
+resolution mix, or per `swap_field` refresh.
 """
 from __future__ import annotations
 

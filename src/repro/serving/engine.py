@@ -27,12 +27,18 @@ API: `submit(cam, deadline_s=...) -> ViewFuture` queues a request (past-
 deadline requests resolve with a timeout result instead of rendering late);
 `flush()` renders the queue; `swap_field(field)` atomically publishes a
 newly trained / re-encoded field to the running engine without dropping
-queued requests — the train->serve loop for online fine-tuning; `stats()`
-reports FPS, latency percentiles, occupancy accesses, factor bytes,
-timeouts, swaps, and ordering-cache hit rates. All entry points are
-thread-safe (one engine lock), so producer threads can submit while another
-thread swaps or flushes. `benchmarks/serving_throughput.py` measures this
-engine against the sequential per-view loop.
+queued requests — the train->serve loop that `serving.finetune.FineTuneLoop`
+closes; `stats()` reports FPS, latency percentiles, occupancy accesses,
+factor bytes, timeouts, swap counts/latencies, and ordering-cache hit
+rates. All entry points are thread-safe, and renders run OUTSIDE the engine
+lock against a consistent (field, cubes, ordering) snapshot — so producers
+submit, and the trainer swaps, while a flush is mid-render. With
+`auto_flush_interval` set (or `start_auto_flush`), a background flush
+thread renders on queue-full or interval expiry and producers never block
+on flush() at all; `close()` (or the context manager) joins it cleanly.
+`benchmarks/serving_throughput.py` measures this engine against the
+sequential per-view loop; `benchmarks/finetune_serving.py` measures it
+under concurrent fine-tuning.
 """
 from __future__ import annotations
 
@@ -67,28 +73,49 @@ class ViewResult:
 
 
 class ViewFuture:
-    """Handle for one queued view; `result()` flushes the engine if needed."""
+    """Handle for one queued view.
+
+    `result()` resolves the future: with the engine's background flush
+    thread running it just waits (the flusher renders); without it, the
+    caller's thread flushes the engine — and if a concurrent flush already
+    claimed this request, waits for that render to land."""
 
     def __init__(self, engine: "RenderEngine", view_id: int):
         self._engine = engine
         self._view_id = view_id
         self._result: Optional[ViewResult] = None
+        self._event = threading.Event()
 
     def done(self) -> bool:
         return self._result is not None
 
-    def result(self) -> ViewResult:
-        if self._result is None:
-            self._engine.flush()
-        assert self._result is not None, "flush did not resolve this future"
+    def result(self, timeout: Optional[float] = None) -> ViewResult:
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        while self._result is None:
+            if not self._engine._auto_flush_on():
+                self._engine.flush()         # propagates render errors
+                if self._result is not None:
+                    break
+            # flusher active, or a concurrent flush claimed this request:
+            # wait for the render (short slices so errors surface)
+            wait = 0.1
+            if deadline is not None:
+                wait = min(wait, deadline - time.perf_counter())
+                if wait <= 0:
+                    raise TimeoutError(
+                        f"view {self._view_id} unresolved after {timeout}s")
+            self._event.wait(max(wait, 1e-3))
+            self._engine._raise_flush_error()
         return self._result
 
     def _set(self, res: ViewResult):
         self._result = res
+        self._event.set()
 
 
-@dataclasses.dataclass
-class _Request:
+@dataclasses.dataclass(eq=False)       # identity only: fields hold jax
+class _Request:                        # arrays, value-eq is ill-defined
     cam: Camera
     gt: Optional[np.ndarray]
     future: ViewFuture
@@ -184,6 +211,7 @@ class RenderEngine:
                  encode: bool = True, ray_chunk: int = 4096,
                  cube_chunk: int = 8, pair_budget: int = None,
                  order_mode: str = "octant", max_batch_views: int = 8,
+                 auto_flush_interval: Optional[float] = None,
                  mesh=None):
         import jax
 
@@ -204,7 +232,12 @@ class RenderEngine:
         self._render = jax.jit(rt_pipe.make_ray_renderer(
             cfg, chunk=self.cube_chunk, pair_budget=pair_budget))
 
+        # _lock guards queue / stats / published field; renders run OUTSIDE
+        # it (serialized by _render_lock) so producers and swap_field never
+        # wait a full render behind flush()
         self._lock = threading.RLock()
+        self._render_lock = threading.Lock()
+        self._flush_cv = threading.Condition(self._lock)
         self.ordering: Optional[rt_pipe.OrderingCache] = None
         self._order_mode = order_mode
         self._install_field(field, cubes)
@@ -218,6 +251,80 @@ class RenderEngine:
         self._dropped_pairs = 0
         self._timeouts = 0
         self._field_swaps = 0
+        self._swap_latencies: List[float] = []
+
+        self._flusher: Optional[threading.Thread] = None
+        self._flusher_stop = threading.Event()
+        self._flush_error: Optional[BaseException] = None
+        self.auto_flush_interval: Optional[float] = None
+        if auto_flush_interval is not None:
+            self.start_auto_flush(auto_flush_interval)
+
+    # -- background flush thread -------------------------------------------
+
+    def _auto_flush_on(self) -> bool:
+        t = self._flusher
+        return t is not None and t.is_alive()
+
+    def _raise_flush_error(self):
+        err, self._flush_error = self._flush_error, None
+        if err is not None:
+            raise err
+
+    def start_auto_flush(self, interval_s: float):
+        """Start the background flush thread: producers only ever enqueue
+        (submit never renders inline); the flusher renders when the queue
+        reaches `max_batch_views` or every `interval_s` seconds, whichever
+        comes first. Pair with `close()` (or use the engine as a context
+        manager) — the thread is non-daemon so leaks are loud."""
+        with self._lock:
+            if self._flusher is not None:
+                raise RuntimeError("auto-flush thread already running")
+            self.auto_flush_interval = float(interval_s)
+            self._flusher_stop.clear()
+            self._flusher = threading.Thread(
+                target=self._flush_loop, name="engine-auto-flush")
+            self._flusher.start()
+
+    def _flush_loop(self):
+        while True:
+            with self._flush_cv:
+                # a pending error means the last flush failed and requeued
+                # its batch: always wait out the interval then (backoff)
+                # instead of spinning on a queue that stays >= max
+                if not self._flusher_stop.is_set() and \
+                        (self._flush_error is not None or
+                         len(self._queue) < self.max_batch_views):
+                    self._flush_cv.wait(self.auto_flush_interval)
+                if self._flusher_stop.is_set():
+                    break
+            try:
+                self.flush()
+            except BaseException as e:   # surfaced via result()/close()
+                self._flush_error = e
+        try:
+            self.flush()                 # drain so close() strands nothing
+        except BaseException as e:
+            self._flush_error = e
+
+    def close(self):
+        """Stop the background flush thread (joining it — no daemon-thread
+        leaks), drain the queue, and surface any deferred flush error."""
+        with self._lock:
+            t, self._flusher = self._flusher, None
+            self._flusher_stop.set()
+            self._flush_cv.notify_all()
+        if t is not None:
+            t.join()
+        self.flush()
+        self._raise_flush_error()
+
+    def __enter__(self) -> "RenderEngine":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     # -- field lifecycle ---------------------------------------------------
 
@@ -239,10 +346,13 @@ class RenderEngine:
         self.factor_bytes = field.factor_bytes()
         self.factor_bytes_dense = field.dense_factor_bytes()
         self.cubes = cubes
-        if self.ordering is None:
-            self.ordering = rt_pipe.OrderingCache(cubes, self._order_mode)
-        else:
-            self.ordering.invalidate(cubes)
+        # a NEW cache, not invalidate-in-place: an in-flight flush rendering
+        # outside the lock keeps its snapshot's (field, cubes, ordering)
+        # consistent while the engine moves on (counters carry over)
+        prev = self.ordering
+        self.ordering = rt_pipe.OrderingCache(cubes, self._order_mode)
+        if prev is not None:
+            self.ordering.hits, self.ordering.misses = prev.hits, prev.misses
 
     @classmethod
     def from_scene(cls, cfg: NeRFConfig, scene: str, *,
@@ -264,20 +374,27 @@ class RenderEngine:
         """Atomically publish a newly trained / re-encoded field to the
         running engine (the train->serve loop). Queued requests are NOT
         dropped: they stay queued and render from the new field at the next
-        flush, and requests racing in from other threads land before or
-        after the swap, never astride it. When `cubes` is None the
-        occupancy cube set is rebuilt from the new field at
-        cfg.occ_sigma_thresh; cached orderings are invalidated either way."""
+        flush; requests racing in from other threads land before or after
+        the swap, never astride it; a render already in flight finishes
+        from its own consistent (field, cubes, ordering) snapshot. When
+        `cubes` is None the occupancy cube set is rebuilt from the new
+        field at cfg.occ_sigma_thresh — pass precomputed cubes (as
+        FineTuneLoop does) to keep the engine-lock hold time, and with it
+        the producer-visible swap latency, to the pointer switch."""
+        t0 = time.perf_counter()
         with self._lock:
             self._install_field(field, cubes)
             self._field_swaps += 1
+            self._swap_latencies.append(time.perf_counter() - t0)
 
     def update_cubes(self, cubes: CubeSet):
         """Occupancy rebuilt (e.g. the field was re-pruned): swap the cube
-        set and drop every cached ordering."""
+        set and start from an empty ordering cache."""
         with self._lock:
             self.cubes = cubes
-            self.ordering.invalidate(cubes)
+            prev = self.ordering
+            self.ordering = rt_pipe.OrderingCache(cubes, self._order_mode)
+            self.ordering.hits, self.ordering.misses = prev.hits, prev.misses
 
     # -- request/response --------------------------------------------------
 
@@ -287,47 +404,67 @@ class RenderEngine:
         flushed when it reaches `max_batch_views` (or on flush()/result()).
         `deadline_s` (seconds from now): if the deadline passes before the
         render starts, the request resolves with a timed-out ViewResult
-        instead of being rendered late (AR/VR frames are useless stale)."""
+        instead of being rendered late (AR/VR frames are useless stale).
+
+        With the background flush thread running, submit only enqueues and
+        notifies — the producer never renders (and never waits behind a
+        render: flush holds the engine lock only to take the queue and to
+        record stats, not for the render itself)."""
         with self._lock:
             fut = ViewFuture(self, self._next_id)
             now = time.perf_counter()
             deadline = None if deadline_s is None else now + deadline_s
             self._queue.append(_Request(cam, gt, fut, now, deadline))
             self._next_id += 1
-            if len(self._queue) >= self.max_batch_views:
-                self.flush()
+            full = len(self._queue) >= self.max_batch_views
+            if full and self._auto_flush_on():
+                self._flush_cv.notify()
+                full = False
+        if full:
+            self.flush()
         return fut
 
     def flush(self) -> List[ViewResult]:
         """Render every queued view: group by ordering octant, micro-batch
         each group's rays into fixed chunks, run the single jitted step.
+        Renders are serialized on `_render_lock` but run OUTSIDE the engine
+        lock, against a consistent (field, cubes, ordering) snapshot taken
+        with the queue — submit/swap_field proceed while a flush renders.
         If a render fails, unresolved requests go back on the queue before
         the error propagates."""
-        with self._lock:
-            if not self._queue:
-                return []
-            reqs, self._queue = self._queue, []
+        with self._render_lock:
+            with self._lock:
+                if not self._queue:
+                    return []
+                reqs, self._queue = self._queue, []
+                snap = (self.field, self.cubes, self.ordering,
+                        self.factor_bytes, self.factor_bytes_dense)
             try:
-                return self._flush(reqs)
+                return self._flush(reqs, snap)
             except BaseException:
-                self._queue = [r for r in reqs
-                               if r.future._result is None] + self._queue
+                with self._lock:
+                    self._queue = [r for r in reqs
+                                   if r.future._result is None] + self._queue
                 raise
 
-    def _flush(self, reqs: List[_Request]) -> List[ViewResult]:
+    def _flush(self, reqs: List[_Request], snap) -> List[ViewResult]:
         t0 = time.perf_counter()
         results: List[ViewResult] = []
+        ordering = snap[2]
 
-        # deadline pass: fail expired requests now, render the rest
+        # deadline pass: fail expired requests now, render the rest.
+        # Stats commit BEFORE each future's event fires, so a waiter that
+        # wakes on resolution always sees them reflected in stats().
         live: List[_Request] = []
         for r in reqs:
             if r.deadline is not None and t0 > r.deadline:
                 res = ViewResult(view_id=r.future._view_id, img=None,
                                  psnr=None, latency_s=t0 - r.t_submit,
                                  stats={}, timed_out=True)
+                with self._lock:
+                    self._timeouts += 1
                 r.future._set(res)
                 results.append(res)
-                self._timeouts += 1
             else:
                 live.append(r)
         if not live:
@@ -335,56 +472,64 @@ class RenderEngine:
 
         groups: Dict[tuple, List[_Request]] = {}
         for r in live:
-            groups.setdefault(self.ordering.key_for(r.cam.origin),
-                              []).append(r)
+            groups.setdefault(ordering.key_for(r.cam.origin), []).append(r)
 
-        n_before = len(results)
         try:
-            self._flush_groups(groups, results)
+            self._flush_groups(groups, results, snap)
         finally:
-            # count whatever resolved (and the time spent) even when a
-            # later group's render raised, so stats() stays consistent
-            # with the latencies recorded for the resolved views
-            self._render_s_total += time.perf_counter() - t0
-            self._views_served += len(results) - n_before
-            self._flushes += 1
+            # time spent counts even when a later group's render raised
+            with self._lock:
+                self._render_s_total += time.perf_counter() - t0
+                self._flushes += 1
         return results
 
     def _flush_groups(self, groups: Dict[tuple, List[_Request]],
-                      results: List[ViewResult]):
+                      results: List[ViewResult], snap):
+        field, cubes, ordering, fbytes, fbytes_dense = snap
         for reqs_g in groups.values():
             for r in reqs_g:                      # one cache access per view
-                centers, valid = self.ordering.get_ordered(r.cam.origin)
+                centers, valid = ordering.get_ordered(r.cam.origin)
             batches = []
             for r in reqs_g:
                 o, d = rendering.camera_rays(r.cam)
                 batches.append((np.asarray(o), np.asarray(d)))
             plan = plan_microbatches(batches, self.ray_chunk)
             outs = []
+            group_dropped = 0
             for i in range(plan.n_chunks):
                 ro, rd = distributed.shard_rays(
                     self.rules, jnp.asarray(plan.rays_o[i]),
                     jnp.asarray(plan.rays_d[i]))
-                rgb, aux = self._render(self.field, centers, valid, ro, rd)
+                rgb, aux = self._render(field, centers, valid, ro, rd)
                 outs.append(np.asarray(rgb))
-                self._dropped_pairs += int(aux["dropped_pairs"])
+                group_dropped += int(aux["dropped_pairs"])
             imgs = plan.scatter(outs)
             t_done = time.perf_counter()
+            group: List[tuple] = []
             for r, img in zip(reqs_g, imgs):
                 psnr = None
                 if r.gt is not None:
                     psnr = float(rendering.psnr(
                         jnp.clip(jnp.asarray(img), 0, 1), jnp.asarray(r.gt)))
                 lat = t_done - r.t_submit
-                self._latencies.append(lat)
-                results.append(ViewResult(
+                group.append((r, ViewResult(
                     view_id=r.future._view_id, img=img, psnr=psnr,
                     latency_s=lat, stats={
-                        "occ_accesses": float(self.cubes.count),
-                        "factor_bytes": float(self.factor_bytes),
-                        "factor_bytes_dense": float(self.factor_bytes_dense),
-                    }))
-                r.future._set(results[-1])
+                        "occ_accesses": float(cubes.count),
+                        "factor_bytes": float(fbytes),
+                        "factor_bytes_dense": float(fbytes_dense),
+                    })))
+            # commit the whole group's stats, THEN resolve its futures —
+            # a render failure in a later group leaves this group counted
+            # and resolved, unrendered groups uncounted (they requeue)
+            with self._lock:
+                self._dropped_pairs += group_dropped
+                for _, res in group:
+                    self._latencies.append(res.latency_s)
+                    self._views_served += 1
+            for r, res in group:
+                results.append(res)
+                r.future._set(res)
 
     def render_views(self, cams, gts=None) -> List[ViewResult]:
         """Convenience: submit a batch of cameras and flush."""
@@ -417,6 +562,12 @@ class RenderEngine:
                 "dropped_pairs": self._dropped_pairs,
                 "timeouts": self._timeouts,
                 "field_swaps": self._field_swaps,
+                "swap_latency_s_last": (self._swap_latencies[-1]
+                                        if self._swap_latencies else 0.0),
+                "swap_latency_s_max": (max(self._swap_latencies)
+                                       if self._swap_latencies else 0.0),
+                "auto_flush_interval": self.auto_flush_interval,
+                "auto_flush_running": self._auto_flush_on(),
                 "ordering_cache": self.ordering.stats(),
                 "field_kind": self.field.kind,
                 "ray_chunk": self.ray_chunk,

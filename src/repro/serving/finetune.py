@@ -1,0 +1,151 @@
+"""Online fine-tuning service: background trainer -> live `swap_field` loop.
+
+Closes the ROADMAP's "wire the train->serve loop end to end" item: a
+`FineTuneLoop` owns a `core.train.NerfTrainer` (compressed-native — the
+factors stay hybrid-encoded between steps, with support revival at every
+`occ_every` boundary) and runs it on a background thread while a
+`RenderEngine` keeps serving. Every `publish_every` steps it snapshots the
+trainer's field, rebuilds the occupancy cube set *on the trainer thread*
+(so the engine lock is held only for the pointer switch), and publishes
+through `RenderEngine.swap_field` — zero dropped or retraced requests:
+the jitted render step takes the field as a pytree argument, so a
+refreshed field with the same encoded structure hits the compiled cache,
+and queued futures survive the swap by construction (engine contract,
+tested in tests/test_serving.py / tests/test_finetune.py).
+
+This is the paper's serving story made live: RT-NeRF's hybrid bitmap/COO
+encoding and view-dependent ordering (Sec. 3/4) assume a resident field
+that tracks the scene; Re-ReND (arXiv:2303.08717) makes the same point for
+cross-device real-time rendering — the served representation must stay
+current without recompilation stalls.
+
+API:
+    loop = FineTuneLoop(engine, "lego", steps=400, publish_every=100)
+    loop.start()            # background thread; engine keeps serving
+    ...                     # submit() from any thread meanwhile
+    loop.join()             # waits, re-raises trainer errors
+    loop.swaps              # [{step, train_psnr, swap_s, t_wall}, ...]
+
+`launch/serve.py --finetune-steps/--finetune-every` wires this into the
+serving CLI; `examples/finetune_serve.py` demonstrates PSNR climbing while
+views stream; `benchmarks/finetune_serving.py` measures swap latency, FPS
+during training, and PSNR-vs-wall-clock (BENCH_finetune.json).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core import occupancy as occ_lib
+from repro.core import train as train_lib
+
+
+class FineTuneLoop:
+    """Background compressed-native fine-tuning published into a live
+    engine via `swap_field`.
+
+    The trainer starts from `start_field` when given, else from the
+    engine's currently-resident field (true *fine*-tuning of the scene
+    being served); `start_field="init"` trains from a fresh initialisation.
+    One publication is always made for the final step, so `steps >=
+    publish_every` guarantees at least one swap and `steps >= 2 *
+    publish_every` at least two.
+    """
+
+    def __init__(self, engine, scene_name: str, *, steps: int = 400,
+                 publish_every: int = 100, occ_every: Optional[int] = None,
+                 n_views: int = 8, image_hw: int = 64,
+                 prune_tol: float = 1e-3, revive_frac: float = 0.05,
+                 seed: int = 0, start_field=None, verbose: bool = False):
+        self.engine = engine
+        self.steps = int(steps)
+        self.publish_every = max(int(publish_every), 1)
+        self.verbose = bool(verbose)
+        if start_field is None:
+            start_field = engine.field
+        elif start_field == "init":
+            start_field = None
+        self.trainer = train_lib.NerfTrainer(
+            engine.cfg, scene_name, field=start_field, n_views=n_views,
+            image_hw=image_hw,
+            occ_every=(self.publish_every if occ_every is None
+                       else int(occ_every)),
+            prune_tol=prune_tol, revive_frac=revive_frac, seed=seed,
+            verbose=verbose)
+        self.history: List[Dict[str, float]] = []
+        self.swaps: List[Dict[str, float]] = []
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._t0 = 0.0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "FineTuneLoop":
+        if self._thread is not None:
+            raise RuntimeError("fine-tune loop already started")
+        self._t0 = time.perf_counter()
+        self._thread = threading.Thread(target=self._run,
+                                        name="finetune-trainer")
+        self._thread.start()
+        return self
+
+    def stop(self):
+        """Request an early exit (the current step finishes first)."""
+        self._stop.set()
+
+    def join(self, timeout: Optional[float] = None):
+        """Wait for the trainer thread; re-raise any trainer error."""
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                raise TimeoutError("fine-tune loop still running")
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def running(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def __enter__(self) -> "FineTuneLoop":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+        self.join()
+        return False
+
+    # -- trainer thread ----------------------------------------------------
+
+    def _run(self):
+        try:
+            for i in range(self.steps):
+                if self._stop.is_set():
+                    break
+                rec = self.trainer.step()
+                rec["t_wall"] = time.perf_counter() - self._t0
+                self.history.append(rec)
+                if (i + 1) % self.publish_every == 0 or i == self.steps - 1:
+                    self._publish(rec)
+        except BaseException as e:                # re-raised by join()
+            self._error = e
+
+    def _publish(self, rec: Dict[str, float]):
+        """Snapshot -> occupancy rebuild (this thread) -> swap_field.
+        Everything expensive happens off the serving path; the engine lock
+        is held only for the pointer switch inside swap_field."""
+        field = self.trainer.snapshot()
+        occ = occ_lib.build_occupancy(field, self.engine.cfg)
+        cubes = occ_lib.extract_cubes(occ, self.engine.cfg)
+        t0 = time.perf_counter()
+        self.engine.swap_field(field, cubes)
+        swap_s = time.perf_counter() - t0
+        self.swaps.append({"step": rec["step"], "train_psnr": rec["psnr"],
+                           "swap_s": swap_s,
+                           "t_wall": time.perf_counter() - self._t0})
+        if self.verbose:
+            print(f"  [finetune] step {rec['step']:5d} published field "
+                  f"(train-psnr {rec['psnr']:.2f}, swap {swap_s * 1e3:.1f}ms)",
+                  flush=True)

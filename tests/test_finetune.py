@@ -1,0 +1,284 @@
+"""Online fine-tuning service: background trainer -> live swap_field loop,
+support revival at re-encode boundaries, and the engine's async background
+flush thread (clean shutdown, producers never render inline)."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import field as field_lib
+from repro.core import occupancy as occ_lib
+from repro.core import sparse, tensorf
+from repro.core import train as nerf_train
+from repro.data import rays as rays_lib
+from repro.serving import FineTuneLoop, RenderEngine
+
+CFG = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=256,
+                 r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                 max_samples_per_ray=64, train_rays=256)
+
+
+def _field_and_cubes(target=0.9, seed=0):
+    params = tensorf.init_field(CFG, jax.random.PRNGKey(seed))
+    field = field_lib.DenseField(params, CFG).prune(sparsity=target)
+    occ = occ_lib.build_occupancy(field, CFG, sigma_thresh=0.01)
+    cubes = occ_lib.extract_cubes(occ, CFG)
+    assert cubes.count > 0
+    return field, cubes
+
+
+# -- support revival -------------------------------------------------------
+
+
+def test_revive_seeds_top_grad_zeros_within_support():
+    """revive() re-admits exactly the top-|grad| zero entries, at magnitude
+    eps against the gradient sign, and never touches live entries or the
+    MLP/basis extras."""
+    field, _ = _field_and_cubes()
+    grads = {k: np.zeros_like(np.asarray(v))
+             for k, v in field.params.items()}
+    w = np.asarray(field.params["sigma_planes"])
+    zeros = np.argwhere(w == 0)
+    hot = tuple(zeros[0])                         # one zero gets a big grad
+    grads["sigma_planes"][hot] = 7.0
+    out = field.revive(grads, frac=1.0 / w.size, eps=2e-3)
+    got = np.asarray(out.params["sigma_planes"])
+    assert got[hot] == pytest.approx(-2e-3)       # step against the grad
+    # only grad-carrying zeros revive; everything else is bit-identical
+    changed = np.argwhere(got != w)
+    assert [tuple(c) for c in changed] == [hot]
+    for k in field.params:
+        if k not in sparse.FACTOR_KEYS:
+            np.testing.assert_array_equal(np.asarray(out.params[k]),
+                                          np.asarray(field.params[k]))
+    # the revived entry survives a tol-prune + encode: it is IN the support
+    kept = out.prune(tol=1e-3).encode().decode()
+    assert np.asarray(kept.params["sigma_planes"])[hot] != 0.0
+
+
+def test_revive_zero_frac_is_identity():
+    field, _ = _field_and_cubes()
+    grads = {k: np.ones_like(np.asarray(v)) for k, v in field.params.items()}
+    assert field.revive(grads, frac=0.0, eps=1e-3) is field
+
+
+def test_trainer_revives_zeroed_entries_across_boundary():
+    """Acceptance (support revival): an entry pruned to zero before an
+    encode regrows after the next occ_every rebuild boundary — the support
+    is no longer frozen between rebuilds. The trainer starts from an
+    ENCODED pruned field, so the zeroed entries are genuinely out of the
+    trainable support (dense training would regrow them trivially)."""
+    start, _ = _field_and_cubes(target=0.9)
+    trainer = nerf_train.NerfTrainer(CFG, "lego", field=start.encode(),
+                                     n_views=2, image_hw=16,
+                                     occ_every=4, revive_frac=0.2)
+    for _ in range(4):
+        trainer.step()
+    before = trainer.snapshot().decode()
+    zero_before = {k: np.asarray(before.params[k]) == 0
+                   for k in sparse.FACTOR_KEYS}
+    assert any(m.any() for m in zero_before.values())  # something to revive
+    trainer.step()                                # crosses the boundary
+    after = trainer.snapshot().decode()
+    regrown = sum(int((zero_before[k]
+                       & (np.asarray(after.params[k]) != 0)).sum())
+                  for k in sparse.FACTOR_KEYS)
+    assert regrown > 0, "no pruned entry regrew across the rebuild boundary"
+
+
+def test_trainer_snapshot_matches_train_nerf():
+    """NerfTrainer driven manually == train_nerf (same cfg/seed/steps):
+    the refactor kept the training loop bit-compatible."""
+    res = nerf_train.train_nerf(CFG, "lego", steps=6, n_views=2,
+                                image_hw=16, verbose=False)
+    trainer = nerf_train.NerfTrainer(CFG, "lego", n_views=2, image_hw=16)
+    for _ in range(6):
+        trainer.step()
+    final = trainer.final()
+    p1 = res.field.decode().params
+    p2 = final.field.decode().params
+    for k in p1:
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+
+# -- async background flush ------------------------------------------------
+
+
+def test_auto_flush_resolves_without_caller_flush():
+    """With the background flush thread on, futures resolve by waiting
+    alone — no caller ever invokes flush()."""
+    field, cubes = _field_and_cubes()
+    with RenderEngine(CFG, field, cubes, ray_chunk=16 * 16,
+                      max_batch_views=2,
+                      auto_flush_interval=0.05) as engine:
+        cams = rays_lib.make_cameras(3, 16, 16)
+        futs = [engine.submit(c) for c in cams]
+        for f in futs:
+            r = f.result(timeout=300)
+            assert np.isfinite(r.img).all()
+        assert engine.stats()["views_served"] == 3
+        assert engine.stats()["auto_flush_running"]
+
+
+def test_auto_flush_shutdown_is_clean():
+    """close() joins the (non-daemon) flusher: no thread leaks, queued
+    work drained, close is idempotent."""
+    field, cubes = _field_and_cubes()
+    engine = RenderEngine(CFG, field, cubes, ray_chunk=16 * 16,
+                          auto_flush_interval=30.0)   # won't tick on its own
+    flusher = engine._flusher
+    assert flusher is not None and flusher.is_alive()
+    assert not flusher.daemon
+    fut = engine.submit(rays_lib.make_cameras(3, 16, 16)[0])
+    engine.close()                            # drains the queue
+    assert fut.done() and np.isfinite(fut.result().img).all()
+    assert not flusher.is_alive()
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("engine-auto-flush") and t.is_alive()]
+    assert not leaked, f"leaked flusher threads: {leaked}"
+    engine.close()                            # idempotent
+    assert engine.stats()["auto_flush_running"] is False
+
+
+def test_auto_flush_submit_never_renders_inline(monkeypatch):
+    """Producers only enqueue: even a queue-full submit returns before any
+    render happens (the flusher thread does the rendering)."""
+    field, cubes = _field_and_cubes()
+    with RenderEngine(CFG, field, cubes, ray_chunk=16 * 16,
+                      max_batch_views=1,
+                      auto_flush_interval=60.0) as engine:
+        render_thread = []
+        real = engine._render
+
+        def spy(*a):
+            render_thread.append(threading.current_thread().name)
+            return real(*a)
+
+        monkeypatch.setattr(engine, "_render", spy)
+        fut = engine.submit(rays_lib.make_cameras(3, 16, 16)[0])
+        fut.result(timeout=300)
+    assert render_thread and all(n == "engine-auto-flush"
+                                 for n in render_thread)
+
+
+def test_deadline_expiry_behind_live_request():
+    """Regression: an expired request queued AFTER a live one must time out
+    cleanly (the deadline pass once compared _Request dataclasses by value,
+    which choked on the jax arrays inside Camera)."""
+    field, cubes = _field_and_cubes()
+    engine = RenderEngine(CFG, field, cubes, ray_chunk=16 * 16,
+                          max_batch_views=16)
+    cams = rays_lib.make_cameras(3, 16, 16)
+    live = engine.submit(cams[0])                      # no deadline, first
+    stale = engine.submit(cams[1], deadline_s=-1.0)    # expired, second
+    engine.flush()
+    assert stale.result().timed_out
+    assert not live.result().timed_out
+    assert np.isfinite(live.result().img).all()
+    assert engine.stats()["timeouts"] == 1
+    assert engine.stats()["views_served"] == 1
+
+
+# -- the fine-tune loop ----------------------------------------------------
+
+
+def test_finetune_psnr_improves_across_swaps_concurrent_submits():
+    """Acceptance: concurrent submit threads stream views while the
+    fine-tuner publishes >= 2 refreshed fields — every future resolves
+    (zero drops/timeouts) and served PSNR improves monotonically across
+    swap epochs from first to last."""
+    res = nerf_train.train_nerf(CFG, "lego", steps=3, n_views=4,
+                                image_hw=24, verbose=False)
+    scene = rays_lib.make_scene("lego")
+    cams = rays_lib.make_cameras(4, 24, 24)
+    gts = [rays_lib.render_gt(scene, c) for c in cams]
+    with RenderEngine(CFG, res.field, res.cubes, ray_chunk=24 * 24,
+                      max_batch_views=2,
+                      auto_flush_interval=0.05) as engine:
+        loop = FineTuneLoop(engine, "lego", steps=40, publish_every=10,
+                            n_views=4, image_hw=24).start()
+        records, errs = [], []
+
+        def producer(tid):
+            try:
+                i = tid
+                while loop.running():
+                    r = engine.submit(cams[i % len(cams)],
+                                      gts[i % len(cams)]).result(timeout=600)
+                    records.append(
+                        (r.psnr, engine.stats()["field_swaps"], r.timed_out))
+                    i += 1
+            except BaseException as e:            # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=producer, args=(t,))
+                   for t in range(2)]
+        for t in threads:
+            t.start()
+        loop.join()
+        for t in threads:
+            t.join()
+        stats = engine.stats()
+    assert not errs
+    assert stats["field_swaps"] >= 2
+    assert stats["timeouts"] == 0
+    assert not any(to for _, _, to in records)
+    assert len(records) == stats["views_served"]  # every future resolved
+    by_epoch = {}
+    for p, sw, _ in records:
+        by_epoch.setdefault(sw, []).append(p)
+    epochs = sorted(by_epoch)
+    assert len(epochs) >= 2
+    first = float(np.mean(by_epoch[epochs[0]]))
+    last = float(np.mean(by_epoch[epochs[-1]]))
+    assert last > first, (first, last, {e: np.mean(v)
+                                        for e, v in by_epoch.items()})
+
+
+def test_finetune_swap_latency_below_flush_interval():
+    """The publication stall a producer could observe (engine-lock hold in
+    swap_field, cubes precomputed on the trainer thread) hides inside one
+    flush interval."""
+    res = nerf_train.train_nerf(CFG, "lego", steps=3, n_views=2,
+                                image_hw=16, verbose=False)
+    interval = 0.25
+    with RenderEngine(CFG, res.field, res.cubes, ray_chunk=16 * 16,
+                      auto_flush_interval=interval) as engine:
+        loop = FineTuneLoop(engine, "lego", steps=10, publish_every=5,
+                            n_views=2, image_hw=16).start()
+        loop.join()
+        s = engine.stats()
+    assert len(loop.swaps) >= 2
+    assert s["swap_latency_s_max"] < interval, s["swap_latency_s_max"]
+    assert all(sw["swap_s"] < interval for sw in loop.swaps)
+
+
+def test_finetune_stop_is_prompt_and_clean():
+    res = nerf_train.train_nerf(CFG, "lego", steps=3, n_views=2,
+                                image_hw=16, verbose=False)
+    engine = RenderEngine(CFG, res.field, res.cubes, ray_chunk=16 * 16)
+    loop = FineTuneLoop(engine, "lego", steps=10_000, publish_every=50,
+                        n_views=2, image_hw=16).start()
+    time.sleep(0.2)
+    loop.stop()
+    loop.join(timeout=300)
+    assert not loop.running()
+    assert loop.trainer.step_count < 10_000
+
+
+def test_finetune_loop_propagates_trainer_errors():
+    res = nerf_train.train_nerf(CFG, "lego", steps=3, n_views=2,
+                                image_hw=16, verbose=False)
+    engine = RenderEngine(CFG, res.field, res.cubes, ray_chunk=16 * 16)
+    loop = FineTuneLoop(engine, "lego", steps=5, publish_every=2,
+                        n_views=2, image_hw=16)
+    def boom():
+        raise RuntimeError("boom")
+
+    loop.trainer.step = boom
+    loop.start()
+    with pytest.raises(RuntimeError, match="boom"):
+        loop.join()
