@@ -1,17 +1,20 @@
 """Dense vs hybrid (bitmap/COO) compressed-field rendering (paper Sec. 4.2.2)
-plus the prune-level vs scene-PSNR trade-off sweep (ROADMAP quality/size
-curve).
+plus the prune-level vs scene-PSNR trade-off sweep across ALL scenes
+(ROADMAP quality/size curve, aggregated — not one scene per run).
 
-Trains a small TensoRF field (compressed-native, core/train.py), magnitude-
-prunes it to several sparsity levels, and for each level renders the same
-novel view through the RT-NeRF pipeline twice — once from the raw factor
-arrays (`FieldBackend.decode()`), once straight from the hybrid encoding —
+For every scene in `benchmarks.common.ALL_SCENES` (or --scenes): train a
+small TensoRF field (compressed-native, core/train.py), magnitude-prune it
+to several sparsity levels, and for each level render the same novel view
+through the RT-NeRF pipeline twice — once from the raw factor arrays
+(`FieldBackend.decode()`), once straight from the hybrid encoding —
 reporting the factor bytes the hot loop reads (sparse.storage_bytes size
 model), wall-clock, hybrid-vs-dense parity PSNR, AND the scene PSNR against
-ground truth per prune level (the quality/size trade-off curve). The whole
-sweep is written to BENCH_compressed.json for the cross-PR trajectory.
+ground truth per prune level. BENCH_compressed.json gets the per-scene
+sweep tables plus the cross-scene aggregate (mean/min scene PSNR and mean
+byte ratio per prune level) for the cross-PR trajectory.
 
-    PYTHONPATH=src python benchmarks/compressed_render.py
+    PYTHONPATH=src python benchmarks/compressed_render.py             # all scenes
+    PYTHONPATH=src python benchmarks/compressed_render.py --scenes lego,mic
     PYTHONPATH=src python benchmarks/compressed_render.py --tiny --check  # CI
 
 CPU wall-clock is a relative signal only (TPU is the compile target; the
@@ -22,64 +25,38 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 import jax.numpy as jnp
 
-from repro.configs.rtnerf import NeRFConfig
-from repro.core import occupancy as occ_lib
-from repro.core import pipeline as rt_pipe
-from repro.core import rendering
-from repro.core import train as nerf_train
-from repro.data import rays as rays_lib
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import ALL_SCENES  # noqa: E402
+
+from repro.configs.rtnerf import NeRFConfig  # noqa: E402
+from repro.core import occupancy as occ_lib  # noqa: E402
+from repro.core import pipeline as rt_pipe  # noqa: E402
+from repro.core import rendering  # noqa: E402
+from repro.core import train as nerf_train  # noqa: E402
+from repro.data import rays as rays_lib  # noqa: E402
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scene", default="lego")
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--res", type=int, default=56)
-    ap.add_argument("--levels", default="0.5,0.8,0.9,0.95")
-    ap.add_argument("--out", default="BENCH_compressed.json")
-    ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke shape: 20 steps, 32^2 render, one level")
-    ap.add_argument("--check", action="store_true",
-                    help="exit non-zero unless the paper-claim row holds "
-                         "(>=3x bytes at 0.9 sparsity, PSNR >= 40 dB)")
-    args = ap.parse_args()
-    if args.tiny:
-        args.steps, args.res, args.levels = 20, 32, "0.9"
-    levels = [float(x) for x in args.levels.split(",")]
-
-    if args.tiny:
-        cfg = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=320,
-                         r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
-                         max_samples_per_ray=64, train_rays=512)
-    else:
-        cfg = NeRFConfig(grid_res=40, occ_res=40, cube_size=4, max_cubes=768,
-                         r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
-                         max_samples_per_ray=112, train_rays=1024)
-    res = nerf_train.train_nerf(cfg, args.scene, steps=args.steps, n_views=8,
-                                image_hw=args.res, log_every=10_000,
-                                verbose=False)
-    scene = rays_lib.make_scene(args.scene)
-    cam = rays_lib.make_cameras(7, args.res, args.res)[2]
+def sweep_scene(cfg: NeRFConfig, scene_name: str, levels, steps: int,
+                res: int, check: bool):
+    """One scene's prune-level curve -> (rows, failures)."""
+    tr = nerf_train.train_nerf(cfg, scene_name, steps=steps, n_views=8,
+                               image_hw=res, log_every=10_000,
+                               verbose=False)
+    scene = rays_lib.make_scene(scene_name)
+    cam = rays_lib.make_cameras(7, res, res)[2]
     gt = rays_lib.render_gt(scene, cam)
 
-    if args.check and not any(lv >= 0.9 for lv in levels):
-        print("CHECK FAILED: --check needs at least one level >= 0.9 "
-              f"(got {args.levels})")
-        sys.exit(2)
-
-    print("sparsity,dense_bytes,hybrid_bytes,ratio,psnr_hybrid_vs_dense,"
-          "psnr_scene,dense_s,hybrid_s,formats")
-    failures = []
-    rows = []
+    rows, failures = [], []
     for level in levels:
         # the trade-off curve point: prune the trained field to `level`
         # (re-encoded internally), rebuild occupancy at the shared cutoff
-        cf = res.field.prune(sparsity=level)
+        cf = tr.field.prune(sparsity=level)
         dense = cf.decode()
         occ = occ_lib.build_occupancy(cf, cfg)
         cubes = occ_lib.extract_cubes(occ, cfg)
@@ -100,8 +77,9 @@ def main():
                                     jnp.clip(img_d, 0, 1)))
         psnr_scene = float(rendering.psnr(jnp.clip(img_h, 0, 1), gt))
         fmts = sorted({v["format"] for v in cf.sparsity_report().values()})
-        print(f"{level:.2f},{bytes_d},{bytes_h},{ratio:.2f},{psnr:.1f},"
-              f"{psnr_scene:.2f},{dt_d:.2f},{dt_h:.2f},{'|'.join(fmts)}")
+        print(f"{scene_name},{level:.2f},{bytes_d},{bytes_h},{ratio:.2f},"
+              f"{psnr:.1f},{psnr_scene:.2f},{dt_d:.2f},{dt_h:.2f},"
+              f"{'|'.join(fmts)}", flush=True)
         rows.append({
             "sparsity": level, "dense_bytes": bytes_d,
             "hybrid_bytes": bytes_h, "ratio": ratio,
@@ -109,29 +87,106 @@ def main():
             "dense_s": dt_d, "hybrid_s": dt_h, "formats": fmts,
             "n_cubes": cubes.count,
         })
-        if level >= 0.9:
+        if check and level >= 0.9:
             if ratio < 3.0:
-                failures.append(f"ratio {ratio:.2f} < 3x at {level}")
+                failures.append(
+                    f"{scene_name}: ratio {ratio:.2f} < 3x at {level}")
             if psnr < 40.0:
-                failures.append(f"psnr {psnr:.1f} < 40 dB at {level}")
+                failures.append(
+                    f"{scene_name}: psnr {psnr:.1f} < 40 dB at {level}")
+    return rows, failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenes", default="all",
+                    help="comma-separated scene list, or 'all' for the "
+                         "shared ALL_SCENES set")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--res", type=int, default=56)
+    ap.add_argument("--levels", default="0.5,0.8,0.9,0.95")
+    ap.add_argument("--out", default="BENCH_compressed.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape: 20 steps, 32^2 render, one "
+                         "level, two scenes")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the paper-claim row holds "
+                         "for EVERY swept scene (>=3x bytes at 0.9 "
+                         "sparsity, PSNR >= 40 dB)")
+    args = ap.parse_args()
+    if args.tiny:
+        args.steps, args.res, args.levels = 20, 32, "0.9"
+        if args.scenes == "all":
+            args.scenes = "lego,mic"
+    scenes = ALL_SCENES if args.scenes == "all" \
+        else tuple(s for s in args.scenes.split(",") if s)
+    levels = [float(x) for x in args.levels.split(",")]
+
+    if args.tiny:
+        cfg = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=320,
+                         r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                         max_samples_per_ray=64, train_rays=512)
+    else:
+        cfg = NeRFConfig(grid_res=40, occ_res=40, cube_size=4, max_cubes=768,
+                         r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                         max_samples_per_ray=112, train_rays=1024)
+
+    if args.check and not any(lv >= 0.9 for lv in levels):
+        print("CHECK FAILED: --check needs at least one level >= 0.9 "
+              f"(got {args.levels})")
+        sys.exit(2)
+
+    print("scene,sparsity,dense_bytes,hybrid_bytes,ratio,"
+          "psnr_hybrid_vs_dense,psnr_scene,dense_s,hybrid_s,formats")
+    failures = []
+    per_scene = {}
+    for name in scenes:
+        rows, fails = sweep_scene(cfg, name, levels, args.steps, args.res,
+                                  args.check)
+        per_scene[name] = rows
+        failures.extend(fails)
+
+    # cross-scene aggregate: one row per prune level (ROADMAP "aggregate
+    # across ALL_SCENES" — min PSNR names the worst scene, the one a
+    # quality budget must be set against)
+    aggregate = []
+    for i, level in enumerate(levels):
+        at = {name: per_scene[name][i] for name in scenes}
+        worst = min(at, key=lambda n: at[n]["psnr_scene"])
+        aggregate.append({
+            "sparsity": level,
+            "psnr_scene_mean": sum(r["psnr_scene"] for r in at.values())
+            / len(at),
+            "psnr_scene_min": at[worst]["psnr_scene"],
+            "psnr_scene_min_scene": worst,
+            "psnr_hybrid_vs_dense_mean": sum(
+                r["psnr_hybrid_vs_dense"] for r in at.values()) / len(at),
+            "ratio_mean": sum(r["ratio"] for r in at.values()) / len(at),
+        })
+    print("level,psnr_scene_mean,psnr_scene_min(worst),ratio_mean")
+    for a in aggregate:
+        print(f"{a['sparsity']:.2f},{a['psnr_scene_mean']:.2f},"
+              f"{a['psnr_scene_min']:.2f}({a['psnr_scene_min_scene']}),"
+              f"{a['ratio_mean']:.2f}")
 
     report = {
-        "scene": args.scene, "steps": args.steps, "res": args.res,
-        "train_field_kind": res.field.kind,
-        # the quality/size trade-off curve (ROADMAP sweep item): one row
-        # per prune level, scene PSNR against GT alongside the byte ratio
-        "sweep": rows,
+        "scenes": list(scenes), "steps": args.steps, "res": args.res,
+        "levels": levels,
+        # per-scene quality/size trade-off curves + the cross-scene
+        # aggregate table (one row per prune level)
+        "sweep": per_scene,
+        "aggregate": aggregate,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    print(f"wrote {args.out} ({len(rows)} sweep rows)")
+    print(f"wrote {args.out} ({len(scenes)} scenes x {len(levels)} levels)")
 
     if args.check and failures:
         print("CHECK FAILED: " + "; ".join(failures))
         sys.exit(1)
     if args.check:
-        print("CHECK OK: >=3x factor-byte reduction at >=0.9 sparsity, "
-              "hybrid-vs-dense PSNR >= 40 dB")
+        print(f"CHECK OK across {len(scenes)} scenes: >=3x factor-byte "
+              "reduction at >=0.9 sparsity, hybrid-vs-dense PSNR >= 40 dB")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
 """Batched multi-view serving (serving.RenderEngine) vs the sequential
-per-view loop it replaced, from the same resident compressed field.
+per-view loop it replaced — plus the multi-scene case: per-scene FPS when
+several scenes are resident in one SceneStore and flush in the same
+cycles.
 
 Sequential = the pre-engine `serve --arch rtnerf` path: one
 `eval_view`/`render_rtnerf` call per camera (re-traced per view, every
@@ -8,12 +10,26 @@ micro-batched ray step with active-pair compaction, octant-cached cube
 orderings, and the encoded streams resident. Both render the same cameras
 against sphere-traced ground truth, so the FPS ratio is at equal PSNR.
 
+With `--scenes a,b` the same engine then serves an interleaved stream
+across all scenes from one store, and the claim under test becomes the
+multi-scene acceptance bar: every scene's per-scene FPS — its render-rate
+FPS, views over the time spent rendering that scene's flush groups — must
+stay >= 0.7x the single-scene batched baseline measured in the same run
+(scene routing, per-scene snapshots, and cross-scene flush grouping must
+not eat the engine's amortisation wins; wall-clock per-scene FPS is
+reported too, but with N scenes fairly sharing one engine it sits near
+baseline/N by construction).
+
     PYTHONPATH=src python benchmarks/serving_throughput.py
     PYTHONPATH=src python benchmarks/serving_throughput.py --tiny --check
+    PYTHONPATH=src python benchmarks/serving_throughput.py \
+        --tiny --check --scenes lego,chair          # nightly 2-scene gate
 
-Emits BENCH_serving.json (FPS, p50/p95 latency, factor bytes) so the perf
-trajectory is tracked across PRs. --check exits non-zero unless batched
-FPS >= 1.5x sequential at PSNR parity (within 0.5 dB).
+Emits BENCH_serving.json (FPS, p50/p95 latency, factor bytes, per-scene
+multi-scene table) so the perf trajectory is tracked across PRs. --check
+exits non-zero unless batched FPS >= 1.5x sequential at PSNR parity
+(within 0.5 dB) — and, when >1 scene is served, unless every scene's FPS
+>= 0.7x the single-scene baseline.
 
 CPU wall-clock is a relative signal (TPU is the compile target), but the
 batched/sequential *ratio* is the claim under test: what the engine
@@ -23,28 +39,49 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 import numpy as np
 
-from repro.configs.rtnerf import NeRFConfig
-from repro.core import occupancy as occ_lib
-from repro.core import train as nerf_train
-from repro.data import rays as rays_lib
-from repro.serving import RenderEngine
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.configs.rtnerf import NeRFConfig  # noqa: E402
+from repro.core import occupancy as occ_lib  # noqa: E402
+from repro.core import train as nerf_train  # noqa: E402
+from repro.data import rays as rays_lib  # noqa: E402
+from repro.serving import RenderEngine  # noqa: E402
 
 
 def pctl(xs, q):
     return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
 
 
+def trained_field(cfg, scene, steps, res, prune, dense):
+    res_t = nerf_train.train_nerf(cfg, scene, steps=steps, n_views=8,
+                                  image_hw=res, log_every=10_000,
+                                  verbose=False)
+    field = res_t.field.prune(sparsity=prune)
+    if dense:
+        field = field.decode()
+    occ = occ_lib.build_occupancy(field, cfg)
+    cubes = occ_lib.extract_cubes(occ, cfg)
+    return field, cubes
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scene", default="lego")
+    ap.add_argument("--scenes", default=None,
+                    help="comma-separated list for the multi-scene case "
+                         "(e.g. lego,chair); the first is also the "
+                         "single-scene baseline")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--res", type=int, default=56)
     ap.add_argument("--views", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="multi-scene: passes over the interleaved stream")
     ap.add_argument("--prune", type=float, default=0.9)
     ap.add_argument("--dense", action="store_true",
                     help="serve the raw factor arrays instead of the "
@@ -54,10 +91,16 @@ def main():
                     help="CI smoke shape: 20 steps, 32^2, 5 views")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero unless batched FPS >= 1.5x the "
-                         "sequential loop at PSNR parity (0.5 dB)")
+                         "sequential loop at PSNR parity (0.5 dB), and — "
+                         "multi-scene — per-scene render-rate FPS >= 0.7x "
+                         "the single-scene baseline")
     args = ap.parse_args()
     if args.tiny:
         args.steps, args.res, args.views = 20, 32, 5
+
+    scene_names = ([s for s in args.scenes.split(",") if s]
+                   if args.scenes else [args.scene])
+    base_scene = scene_names[0]
 
     if args.tiny:
         cfg = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=320,
@@ -68,23 +111,19 @@ def main():
                          r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
                          max_samples_per_ray=112, train_rays=1024)
 
-    res = nerf_train.train_nerf(cfg, args.scene, steps=args.steps, n_views=8,
-                                image_hw=args.res, log_every=10_000,
-                                verbose=False)
-    field = res.field.prune(sparsity=args.prune)
-    if args.dense:
-        field = field.decode()
-    occ = occ_lib.build_occupancy(field, cfg)
-    cubes = occ_lib.extract_cubes(occ, cfg)
+    fields = {n: trained_field(cfg, n, args.steps, args.res, args.prune,
+                               args.dense) for n in scene_names}
+    field, cubes = fields[base_scene]
 
-    scene = rays_lib.make_scene(args.scene)
     cams = rays_lib.make_cameras(args.views, args.res, args.res)
-    gts = [rays_lib.render_gt(scene, cam) for cam in cams]
+    gt_scenes = {n: rays_lib.make_scene(n) for n in scene_names}
+    gts = {n: [rays_lib.render_gt(gt_scenes[n], cam) for cam in cams]
+           for n in scene_names}
 
     # -- sequential per-view loop (the replaced serve path) ----------------
     seq_lat, seq_psnr = [], []
     t_seq = time.time()
-    for cam, gt in zip(cams, gts):
+    for cam, gt in zip(cams, gts[base_scene]):
         t0 = time.time()
         p, stats, _ = nerf_train.eval_view(field, cfg, cubes, cam, gt,
                                            pipeline="rtnerf", chunk=8)
@@ -94,11 +133,12 @@ def main():
     seq_fps = args.views / seq_total
 
     # -- batched engine over the same resident field -----------------------
-    engine = RenderEngine(cfg, field, cubes, encode=not args.dense,
+    engine = RenderEngine(cfg, field, cubes, scene_name=base_scene,
+                          encode=not args.dense,
                           ray_chunk=args.res * args.res,
                           max_batch_views=args.views)
     t_bat = time.time()
-    results = engine.render_views(cams, gts)
+    results = engine.render_views(cams, gts[base_scene])
     bat_total = time.time() - t_bat
     bat_fps = args.views / bat_total
     bat_psnr = [r.psnr for r in results]
@@ -107,12 +147,15 @@ def main():
 
     speedup = bat_fps / max(seq_fps, 1e-9)
     report = {
-        "scene": args.scene, "views": args.views, "res": args.res,
+        "scene": base_scene, "views": args.views, "res": args.res,
         "prune": args.prune, "field_kind": es["field_kind"],
         "factor_bytes": es["factor_bytes"],
         "factor_bytes_dense": es["factor_bytes_dense"],
         "occ_accesses_per_view": es["occ_accesses_per_view"],
         "dropped_pairs": es["dropped_pairs"],
+        "pair_budget": es["pair_budget"],
+        "pair_budget_initial": es["pair_budget_initial"],
+        "pair_budget_resizes": es["pair_budget_resizes"],
         "ordering_cache": es["ordering_cache"],
         "sequential": {
             "fps": seq_fps, "total_s": seq_total,
@@ -128,6 +171,67 @@ def main():
         },
         "speedup": speedup,
     }
+
+    # -- multi-scene: interleaved stream over N resident scenes ------------
+    multi = None
+    if len(scene_names) > 1:
+        for n in scene_names[1:]:
+            engine.register_scene(n, *fields[n])
+        # warm every scene's compiled variant + ordering caches so the
+        # measured ratio is steady-state routing cost, not first-touch
+        for n in scene_names:
+            engine.render_views(cams[:1], gts[n][:1], scene=n)
+        # per-scene telemetry is cumulative since engine construction —
+        # snapshot it here so the ratio below covers ONLY the multi-scene
+        # window (the baseline + warmup renders would dilute it)
+        pre = {n: engine.stats(scene=n) for n in scene_names}
+        t0 = time.time()
+        futs = [(n, engine.submit(cam, gt, scene=n))
+                for _ in range(args.rounds)
+                for n in scene_names
+                for cam, gt in zip(cams, gts[n])]
+        engine.flush()
+        per_scene_psnr = {n: [] for n in scene_names}
+        for n, f in futs:
+            per_scene_psnr[n].append(f.result().psnr)
+        multi_total = time.time() - t0
+        n_served = len(futs)
+        ms = engine.stats()
+        per_scene = {}
+        for n in scene_names:
+            sc = ms["scenes"][n]
+            # fps_render: views over render time attributed to this scene
+            # WITHIN the multi-scene window (delta of the cumulative
+            # per-scene counters taken across it); fps_wall: the scene's
+            # share of the interleaved stream over shared wall-clock
+            d_views = sc["views_served"] - pre[n]["views_served"]
+            d_render = sc["render_s"] - pre[n]["render_s"]
+            per_scene[n] = {
+                "views": len(per_scene_psnr[n]),
+                "fps_wall": len(per_scene_psnr[n]) / multi_total,
+                "fps_render": d_views / max(d_render, 1e-9),
+                "psnr_mean": float(np.mean(per_scene_psnr[n])),
+                "latency_p50_s": sc["latency_p50_s"],
+                "latency_p95_s": sc["latency_p95_s"],
+            }
+        # the acceptance ratio: a scene's render-rate FPS (views / time
+        # spent rendering THAT scene's flush groups) vs the single-scene
+        # batched baseline — scene routing, per-scene snapshots, and
+        # cross-scene flush grouping must not slow the renders themselves.
+        # fps_wall is reported alongside: with N scenes fairly sharing
+        # one engine it sits near baseline/N by construction.
+        ratios = {n: per_scene[n]["fps_render"] / max(bat_fps, 1e-9)
+                  for n in scene_names}
+        multi = {
+            "scenes": scene_names, "rounds": args.rounds,
+            "views_total": n_served, "total_s": multi_total,
+            "fps_total": n_served / multi_total,
+            "per_scene": per_scene,
+            "fps_render_per_scene_vs_single_ratio": ratios,
+            "evictions": ms["evictions"], "revivals": ms["revivals"],
+        }
+        report["multi_scene"] = multi
+
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(json.dumps(report, indent=2))
@@ -141,15 +245,29 @@ def main():
             failures.append(f"batched psnr {np.mean(bat_psnr):.2f} more "
                             f"than 0.5 dB below sequential "
                             f"{np.mean(seq_psnr):.2f}")
-        if es["dropped_pairs"] > 0:
+        if es["dropped_pairs"] > 0 and es["pair_budget_resizes"] == 0:
             failures.append(f"{es['dropped_pairs']} ray-cube pairs dropped "
-                            "(pair budget too small)")
+                            "and the adaptive budget never grew")
+        if multi is not None:
+            for n, ratio in \
+                    multi["fps_render_per_scene_vs_single_ratio"].items():
+                if ratio < 0.7:
+                    failures.append(
+                        f"scene '{n}' per-scene render-rate FPS ratio "
+                        f"{ratio:.2f} < 0.7x the single-scene baseline")
         if failures:
             print("CHECK FAILED: " + "; ".join(failures))
             sys.exit(1)
-        print(f"CHECK OK: {speedup:.2f}x FPS over the sequential loop at "
-              f"PSNR parity ({np.mean(bat_psnr):.2f} vs "
-              f"{np.mean(seq_psnr):.2f} dB)")
+        msg = (f"CHECK OK: {speedup:.2f}x FPS over the sequential loop at "
+               f"PSNR parity ({np.mean(bat_psnr):.2f} vs "
+               f"{np.mean(seq_psnr):.2f} dB)")
+        if multi is not None:
+            worst = min(
+                multi["fps_render_per_scene_vs_single_ratio"].values())
+            msg += (f"; {len(scene_names)} resident scenes at >= "
+                    f"{worst:.2f}x per-scene render-rate FPS vs "
+                    f"single-scene")
+        print(msg)
 
 
 if __name__ == "__main__":

@@ -199,6 +199,25 @@ def restore_field(directory: str, step: int, cfg):
     return field_lib.field_from_state(spec, arrays, cfg), extra
 
 
+SPILL_STEP = 0
+
+
+def spill_field(directory: str, field, *, extra_meta: Optional[dict] = None):
+    """Demote a resident field to disk (the serving SceneStore's eviction
+    path): one `save_field` checkpoint at a fixed step with keep=1, so a
+    scene's spill directory always holds exactly its latest encoded streams
+    — bit-for-bit what `unspill_field` revives."""
+    return save_field(directory, SPILL_STEP, field, keep=1,
+                      extra_meta=extra_meta)
+
+
+def unspill_field(directory: str, cfg):
+    """-> (FieldBackend, extra_meta). Inverse of `spill_field`: rebuild the
+    exact representation that was evicted (formats, nnz, packed bytes all
+    identical), so a revived scene renders bit-identically."""
+    return restore_field(directory, SPILL_STEP, cfg)
+
+
 class CheckpointManager:
     """Async save + restore-latest + retention. Thread-safe single writer."""
 

@@ -13,6 +13,15 @@ def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def mib_to_bytes(mb: Optional[float]) -> Optional[int]:
+    """CLI-facing memory budgets (`--max-resident-mb` style knobs) -> byte
+    counts for config fields like `NeRFConfig.max_resident_bytes`.
+    None/0/negative mean "unlimited" and map to None."""
+    if not mb or mb <= 0:
+        return None
+    return int(mb * 1024 * 1024)
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str

@@ -7,6 +7,7 @@ on Synthetic-NeRF-like scenes, plus the ray-batch training shape.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +45,16 @@ class NeRFConfig:
     # --- sparse encoding (H1) ---
     sparse_threshold: float = 0.80   # bitmap (<) vs COO (>=) switch
     dtype: str = "float32"
+    # --- multi-scene serving (SceneStore) ---
+    max_resident_bytes: Optional[int] = None
+                                     # device-memory budget for resident
+                                     # encoded factor streams across ALL
+                                     # scenes in a serving.SceneStore; cold
+                                     # scenes are LRU-evicted to encoded
+                                     # checkpoints and revived on demand.
+                                     # None/0 = unlimited (single-scene
+                                     # behaviour). CLI: --max-resident-mb
+                                     # via configs.base.mib_to_bytes.
 
     @property
     def cube_grid_res(self) -> int:

@@ -34,7 +34,7 @@ disjoint so this is exact unless two same-chunk cubes overlap the same pixel
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -99,18 +99,34 @@ class OrderingCache:
     `max_entries` bounds the resident set LRU-style: octant mode has
     finitely many keys anyway, but distance mode keys on the full origin
     and would otherwise grow without bound under a free camera stream.
+
+    `scene` is an optional label (the serving SceneStore keys one cache per
+    resident scene); `with_cubes(cubes)` is the rebuild path — a NEW cache
+    over the new cube set that carries the hit/miss counters forward, so an
+    in-flight render keeps its old cache consistent while telemetry stays
+    cumulative across occupancy rebuilds and field swaps.
     """
 
     def __init__(self, cubes: CubeSet, mode: str = "octant",
-                 max_entries: int = 64):
+                 max_entries: int = 64, scene: Optional[str] = None):
         import collections
 
         self.cubes = cubes
         self.mode = mode
+        self.scene = scene
         self.max_entries = int(max_entries)
         self._entries = collections.OrderedDict()  # key -> (perm, ctr, vld)
         self.hits = 0
         self.misses = 0
+
+    def with_cubes(self, cubes: CubeSet) -> "OrderingCache":
+        """Fresh (empty) cache over `cubes`, counters carried over — the
+        cube-set-changed path (occupancy rebuild / field swap). A new object
+        rather than invalidate-in-place so a snapshot taken before the swap
+        keeps rendering from a consistent (cubes, ordering) pair."""
+        nxt = OrderingCache(cubes, self.mode, self.max_entries, self.scene)
+        nxt.hits, nxt.misses = self.hits, self.misses
+        return nxt
 
     def key_for(self, origin) -> tuple:
         return ordering_key(origin, self.mode)
@@ -278,7 +294,10 @@ def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
     Typical scenes hit a few % of pairs, so this is the serving path's main
     algorithmic win over the per-view loop. Pairs beyond the budget are
     dropped and counted in `aux["dropped_pairs"]` (0 in every measured
-    scene at the default budget of chunk*N // 4).
+    scene at the default budget of chunk*N // 4); `aux["active_pairs_max"]`
+    is the max hitting-pair count over the scan steps — the occupancy
+    signal the serving engine's adaptive pair-budget loop reads to size the
+    budget to the scene instead of the static default.
 
     The field is an argument, not a closure: trace once, serve many, swap
     freely. `aux` carries per-ray transmittance plus processed/dropped
@@ -304,7 +323,7 @@ def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
         budget = min(pair_budget or max(n_pairs // 4, 128), n_pairs)
 
         def body(carry, xs):
-            log_t, color, processed, dropped = carry
+            log_t, color, processed, dropped, pairs_max = carry
             ctr, vld = xs                                 # (chunk,3),(chunk,)
 
             # Step 2-1-d: line-slab intersection of every ray with each cube
@@ -356,21 +375,24 @@ def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
             color = color.at[ray_i].add(contrib)
             log_t = log_t.at[ray_i].add(-seg_tau)
             processed = processed + jnp.sum(s_mask.astype(jnp.float32))
-            dropped = dropped + jnp.maximum(
-                jnp.sum(flat_hit.astype(jnp.int32)) - budget, 0)
-            return (log_t, color, processed, dropped), None
+            n_hit = jnp.sum(flat_hit.astype(jnp.int32))
+            dropped = dropped + jnp.maximum(n_hit - budget, 0)
+            pairs_max = jnp.maximum(pairs_max, n_hit)
+            return (log_t, color, processed, dropped, pairs_max), None
 
         xs = (centers.reshape(n_chunks, chunk, 3),
               valid.reshape(n_chunks, chunk))
         init = (jnp.zeros((n_rays,), jnp.float32),
                 jnp.zeros((n_rays, 3), jnp.float32), jnp.float32(0),
-                jnp.int32(0))
-        (log_t, color, processed, dropped), _ = jax.lax.scan(body, init, xs)
+                jnp.int32(0), jnp.int32(0))
+        (log_t, color, processed, dropped, pairs_max), _ = jax.lax.scan(
+            body, init, xs)
         t_final = jnp.exp(log_t)
         if white_bg:
             color = color + t_final[:, None]
         return color, {"t_final": t_final, "processed_samples": processed,
-                       "dropped_pairs": dropped}
+                       "dropped_pairs": dropped,
+                       "active_pairs_max": pairs_max}
 
     return render
 

@@ -8,6 +8,8 @@ novel-view rendering (rtnerf).
         --prune-sparsity 0.9 --ckpt-dir /tmp/lego-ckpt
     PYTHONPATH=src python -m repro.launch.serve --arch rtnerf \
         --scene lego --finetune-steps 200 --finetune-every 50
+    PYTHONPATH=src python -m repro.launch.serve --arch rtnerf \
+        --scenes lego,chair,mic --max-resident-mb 2 --finetune-steps 100
 """
 from __future__ import annotations
 
@@ -76,70 +78,99 @@ def serve_lm(args):
 
 
 def serve_nerf(args):
-    """Streaming multi-view serving from one resident compressed field.
+    """Streaming multi-view serving from a store of resident compressed
+    fields.
 
-    The field is restored from --ckpt-dir when a checkpoint exists (trained
-    once — compressed-native — and saved there in encoded form otherwise),
-    and every queued view is rendered by the engine's single jitted
-    micro-batched step — the serving.RenderEngine subsystem, not a per-view
-    train/encode/compile loop. --deadline fails stale requests instead of
-    rendering them late. --finetune-steps starts the online fine-tuning
-    service (serving.FineTuneLoop): a background trainer refreshes the
-    resident field via swap_field every --finetune-every steps while the
-    request stream keeps rendering.
+    --scenes a,b,c serves several named scenes from ONE process: each is
+    restored from its per-scene subdirectory of --ckpt-dir when a
+    checkpoint exists (trained once — compressed-native — and saved there
+    in encoded form otherwise), registered in the engine's SceneStore, and
+    every queued view is rendered by the engine's single jitted
+    micro-batched step, grouped per scene at flush time. --max-resident-mb
+    bounds the encoded bytes resident at once: cold scenes are LRU-evicted
+    to encoded checkpoints and revived transparently when their next
+    request arrives. --deadline fails stale requests instead of rendering
+    them late. --finetune-steps starts the online fine-tuning service
+    (serving.FineTuneLoop): one background trainer PER RESIDENT SCENE
+    refreshes its field through the store every --finetune-every steps
+    while the request streams keep rendering.
     """
+    from repro.configs.base import mib_to_bytes
     from repro.configs.rtnerf import NeRFConfig
     from repro.data import rays as rays_lib
     from repro.serving import FineTuneLoop, RenderEngine
 
+    scenes = [s for s in args.scenes.split(",") if s] if args.scenes \
+        else [args.scene]
     cfg = NeRFConfig(grid_res=48, occ_res=48, cube_size=4, max_cubes=1024,
                      r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
-                     max_samples_per_ray=128, train_rays=1024)
-    engine = RenderEngine.from_scene(
-        cfg, args.scene, ckpt_dir=args.ckpt_dir,
+                     max_samples_per_ray=128, train_rays=1024,
+                     max_resident_bytes=mib_to_bytes(args.max_resident_mb))
+    engine = RenderEngine.from_scenes(
+        cfg, scenes, ckpt_root=args.ckpt_dir,
         train_steps=args.train_steps, n_views=8, image_hw=args.res,
         prune_sparsity=args.prune_sparsity, encode=not args.dense,
         ray_chunk=args.res * args.res, max_batch_views=args.views,
         auto_flush_interval=(0.25 if args.finetune_steps else None))
-    s = engine.stats()
-    if s["field_kind"] == "compressed":
-        print(f"compressed field: {s['factor_bytes']:.0f} B factors "
+    for name in scenes:
+        s = engine.stats(scene=name)
+        print(f"scene '{name}': {s['field_kind']}, "
+              f"{s['factor_bytes']:.0f} B factors "
               f"(dense {s['factor_bytes_dense']:.0f} B, "
               f"{s['compression_ratio']:.2f}x)")
+    if engine.store.max_resident_bytes:
+        print(f"resident budget {engine.store.max_resident_bytes} B, "
+              f"resident now: {engine.store.resident_scenes()}")
 
-    loop = None
+    loops = []
     if args.finetune_steps:
-        loop = FineTuneLoop(engine, args.scene, steps=args.finetune_steps,
-                            publish_every=args.finetune_every, n_views=8,
-                            image_hw=args.res, verbose=True).start()
+        # one trainer thread per resident scene, all publishing through
+        # the store (ROADMAP "multi-scene fine-tuning")
+        loops = [FineTuneLoop.attach(engine.store, name,
+                                     steps=args.finetune_steps,
+                                     publish_every=args.finetune_every,
+                                     n_views=8, image_hw=args.res,
+                                     verbose=True).start()
+                 for name in scenes]
 
-    scene = rays_lib.make_scene(args.scene)
+    gt_scenes = {name: rays_lib.make_scene(name) for name in scenes}
     cams = rays_lib.make_cameras(args.views, args.res, args.res)
-    gts = [rays_lib.render_gt(scene, cam) for cam in cams]
-    rounds = 1 if loop is None else max(args.finetune_rounds, 1)
+    gts = {name: [rays_lib.render_gt(gt_scenes[name], cam) for cam in cams]
+           for name in scenes}
+    rounds = 1 if not loops else max(args.finetune_rounds, 1)
     for rnd in range(rounds):
-        futures = [engine.submit(cam, gt, deadline_s=args.deadline)
-                   for cam, gt in zip(cams, gts)]
-        for i, fut in enumerate(futures):
+        futures = [(name, engine.submit(cam, gt, scene=name,
+                                        deadline_s=args.deadline))
+                   for name in scenes
+                   for cam, gt in zip(cams, gts[name])]
+        for i, (name, fut) in enumerate(futures):
             r = fut.result()
             if r.timed_out:
-                print(f"view {i}: TIMED OUT after {r.latency_s:.2f}s")
+                print(f"{name} view {i}: TIMED OUT after {r.latency_s:.2f}s")
                 continue
-            print(f"view {i}: psnr={r.psnr:.2f} latency={r.latency_s:.2f}s "
+            print(f"{name} view {i}: psnr={r.psnr:.2f} "
+                  f"latency={r.latency_s:.2f}s "
                   f"occ_accesses={r.stats['occ_accesses']:.0f} "
                   f"factor_bytes={r.stats['factor_bytes']:.0f}")
-    if loop is not None:
-        loop.join()
+    if loops:
+        for loop in loops:
+            loop.join()
         engine.close()
-        print(f"fine-tuned {loop.trainer.step_count} steps, "
-              f"{len(loop.swaps)} live swaps "
+        total_steps = sum(loop.trainer.step_count for loop in loops)
+        total_swaps = sum(len(loop.swaps) for loop in loops)
+        print(f"fine-tuned {total_steps} steps over {len(loops)} scenes, "
+              f"{total_swaps} live swaps "
               f"(max swap {engine.stats()['swap_latency_s_max'] * 1e3:.1f}ms)")
     s = engine.stats()
-    print(f"served {s['views_served']} views, {s['fps']:.3f} FPS (CPU), "
+    print(f"served {s['views_served']} views over {s['n_scenes']} scenes, "
+          f"{s['fps']:.3f} FPS (CPU), "
           f"p50={s['latency_p50_s']:.2f}s p95={s['latency_p95_s']:.2f}s, "
           f"ordering-cache hits={s['ordering_cache']['hits']}, "
           f"timeouts={s['timeouts']}, swaps={s['field_swaps']}, "
-          f"field={s['field_kind']}")
+          f"evictions={s['evictions']}, revivals={s['revivals']}, "
+          f"pair_budget={s['pair_budget']} "
+          f"(init {s['pair_budget_initial']}, "
+          f"{s['pair_budget_resizes']} resizes)")
 
 
 def main():
@@ -151,6 +182,17 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--scene", default="lego")
+    ap.add_argument("--scenes", default=None,
+                    help="rtnerf only: comma-separated scene list to serve "
+                         "from one process (e.g. lego,chair,mic); overrides "
+                         "--scene. Each scene checkpoints under its own "
+                         "subdirectory of --ckpt-dir")
+    ap.add_argument("--max-resident-mb", type=float, default=None,
+                    help="rtnerf only: device-memory budget (MiB) for "
+                         "resident encoded fields across scenes; cold "
+                         "scenes are LRU-evicted to encoded checkpoints "
+                         "and revived on their next request (default: "
+                         "unlimited)")
     ap.add_argument("--views", type=int, default=2)
     ap.add_argument("--res", type=int, default=64)
     ap.add_argument("--train-steps", type=int, default=200)
@@ -177,10 +219,11 @@ def main():
                     help="rtnerf only: magnitude-prune factors to this "
                          "sparsity before serving (0 = training prune only)")
     ap.add_argument("--ckpt-dir", default=None,
-                    help="rtnerf only: restore the trained field from this "
-                         "directory when a checkpoint exists; otherwise "
-                         "train once and save there (repeated serves reuse "
-                         "it instead of retraining)")
+                    help="rtnerf only: restore trained fields from "
+                         "per-scene subdirectories of this root when "
+                         "checkpoints exist; otherwise train once and save "
+                         "there (repeated serves reuse them instead of "
+                         "retraining)")
     args = ap.parse_args()
     if args.arch == "rtnerf":
         serve_nerf(args)

@@ -1,5 +1,7 @@
 from repro.serving.engine import (  # noqa: F401
     RenderEngine, ViewFuture, ViewResult, prepare_field)
 from repro.serving.batching import (  # noqa: F401
-    MicroBatchPlan, ViewSlice, plan_microbatches)
+    MicroBatchPlan, ViewSlice, group_requests, plan_microbatches)
+from repro.serving.store import (  # noqa: F401
+    SceneRecord, SceneSnapshot, SceneStore)
 from repro.serving.finetune import FineTuneLoop  # noqa: F401

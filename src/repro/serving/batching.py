@@ -15,10 +15,23 @@ resolution mix, or per `swap_field` refresh.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Sequence, Tuple
 
 import numpy as np
+
+
+def group_requests(items: Iterable, key: Callable) -> Dict[tuple, List]:
+    """Stable grouping in first-seen order: the serving engine's flush path
+    buckets queued requests by `(scene, ordering-key)` with this, so every
+    bucket renders as one micro-batched group against one per-scene
+    snapshot while submission order is preserved within and across
+    buckets (first scene submitted flushes first)."""
+    groups: Dict[tuple, List] = collections.OrderedDict()
+    for it in items:
+        groups.setdefault(key(it), []).append(it)
+    return groups
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,65 +1,72 @@
-"""Streaming multi-view serving engine over a resident compressed field.
+"""Scene-routed streaming serving engine over a store of resident
+compressed fields.
 
 The RT-NeRF serving story (ROADMAP: "streaming / multi-view compressed
-serving"): load — or train once and checkpoint — a scene, encode the field
-into ONE resident `field.CompressedField`, and serve a stream of novel-view
-requests from it. Costs the per-view loop pays on every request are paid
-once per engine instead:
+serving"), now multi-scene: a `serving.store.SceneStore` keeps any number
+of named scenes resident — encoded hybrid bitmap/COO fields, per-scene
+occupancy cubes and ordering caches — under one device-memory budget
+(`NeRFConfig.max_resident_bytes`, LRU eviction to encoded checkpoints with
+transparent revival), and ONE `RenderEngine` serves request streams
+against all of them. Costs the per-view loop pays on every request are
+paid once per engine (or once per scene):
 
-  * encode        — the hybrid bitmap/COO encoding is built at engine
-                    construction (or arrives pre-encoded from compressed-
-                    native training) and stays resident,
+  * encode        — the hybrid encoding is built at scene registration
+                    (or arrives pre-encoded from compressed-native
+                    training) and stays resident in the store,
   * compilation   — one jitted ray-render step (`pipeline.make_ray_renderer`)
                     at a fixed chunk shape, taking the field as a pytree
                     argument; queued views are micro-batched into those
-                    chunks (`serving.batching`) so new cameras, mixed
-                    resolutions — and hot-swapped fields with the same
-                    encoded structure — never retrace,
-  * ordering      — per-view `order_cubes` schedules are cached by octant
-                    ranking (`pipeline.OrderingCache`, the paper's coarse
-                    view-dependent ordering) and reused bit-exactly across
-                    requests that rank the octants alike,
-  * placement     — the encoded streams are replicated and ray chunks
-                    sharded across the mesh (`core.distributed.place_field`
-                    / `shard_rays`), with a single-device fallback.
+                    chunks (`serving.batching`), so new cameras, mixed
+                    resolutions, hot-swapped fields — and different scenes
+                    with the same encoded structure — never retrace,
+  * ordering      — per-view `order_cubes` schedules are cached per scene
+                    by octant ranking (`pipeline.OrderingCache`),
+  * placement     — encoded streams replicated, ray chunks sharded
+                    (`core.distributed`), single-device fallback included,
+  * pair budget   — the active-pair compaction budget adapts to observed
+                    occupancy (`aux["active_pairs_max"]`) with hysteresis
+                    instead of sitting at the static config default.
 
-API: `submit(cam, deadline_s=...) -> ViewFuture` queues a request (past-
-deadline requests resolve with a timeout result instead of rendering late);
-`flush()` renders the queue; `swap_field(field)` atomically publishes a
-newly trained / re-encoded field to the running engine without dropping
-queued requests — the train->serve loop that `serving.finetune.FineTuneLoop`
-closes; `stats()` reports FPS, latency percentiles, occupancy accesses,
-factor bytes, timeouts, swap counts/latencies, and ordering-cache hit
-rates. All entry points are thread-safe, and renders run OUTSIDE the engine
-lock against a consistent (field, cubes, ordering) snapshot — so producers
-submit, and the trainer swaps, while a flush is mid-render. With
-`auto_flush_interval` set (or `start_auto_flush`), a background flush
-thread renders on queue-full or interval expiry and producers never block
-on flush() at all; `close()` (or the context manager) joins it cleanly.
-`benchmarks/serving_throughput.py` measures this engine against the
-sequential per-view loop; `benchmarks/finetune_serving.py` measures it
-under concurrent fine-tuning.
+API: `submit(cam, scene="lego", deadline_s=...) -> ViewFuture` queues a
+request against a scene handle (scene=None routes to the default scene, so
+every single-scene PR 2–4 call site keeps working); `flush()` renders the
+queue grouped by (scene, ordering-octant) — one jitted step serves
+micro-batches per scene while several scenes flush in the same cycle;
+`swap_field(field, scene=...)` / `update_cubes(cubes, scene=...)` publish
+through the store (the train->serve loop `serving.finetune.FineTuneLoop`
+closes per scene); `register_scene(name, field)` adds scenes to a running
+engine; `stats()` aggregates and `stats(scene=...)` itemises. All entry
+points are thread-safe; renders run OUTSIDE the engine lock against
+consistent per-scene snapshots. With `auto_flush_interval` set a
+background flush thread renders on queue-full or interval expiry;
+`close()` (or the context manager) joins it cleanly.
+`benchmarks/serving_throughput.py` measures single- and multi-scene
+serving; `benchmarks/finetune_serving.py` measures it under concurrent
+fine-tuning.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import checkpoint as ckpt_lib
 from repro.configs.rtnerf import NeRFConfig
-from repro.core import distributed, occupancy as occ_lib
+from repro.core import distributed
 from repro.core import field as field_lib
+from repro.core import occupancy as occ_lib
 from repro.core import pipeline as rt_pipe
 from repro.core import rendering, tensorf
 from repro.core.occupancy import CubeSet
 from repro.core.rendering import Camera
 from repro.models.sharding import make_rules
-from repro.serving.batching import plan_microbatches
+from repro.serving.batching import group_requests, plan_microbatches
+from repro.serving.store import SceneSnapshot, SceneStore
 
 
 @dataclasses.dataclass
@@ -70,6 +77,7 @@ class ViewResult:
     latency_s: float                # submit -> resolve (queueing + render)
     stats: Dict[str, float]
     timed_out: bool = False         # deadline passed before render started
+    scene: str = ""                 # which resident scene rendered this
 
 
 class ViewFuture:
@@ -121,6 +129,7 @@ class _Request:                        # arrays, value-eq is ill-defined
     future: ViewFuture
     t_submit: float
     deadline: Optional[float] = None     # absolute perf_counter time
+    scene: str = ""                      # routing key into the SceneStore
 
 
 FIELD_META = "field_meta.json"
@@ -138,7 +147,6 @@ def prepare_field(cfg: NeRFConfig, scene: str, *, ckpt_dir: Optional[str],
     shapes (a mismatch would otherwise render silently wrong images).
     Returns a FieldBackend."""
     import json
-    import os
 
     from repro.core import train as nerf_train
 
@@ -205,18 +213,30 @@ def prepare_field(cfg: NeRFConfig, scene: str, *, ckpt_dir: Optional[str],
 
 
 class RenderEngine:
-    """Batched novel-view serving from one resident (compressed) field."""
+    """Batched novel-view serving, scene-routed over a SceneStore.
 
-    def __init__(self, cfg: NeRFConfig, field, cubes: CubeSet, *,
+    The single-scene constructor `RenderEngine(cfg, field, cubes, ...)` is
+    the deprecation shim for pre-store call sites: it builds a one-scene
+    store (under `scene_name`, default "default") and every scene-less
+    entry point (`submit`, `swap_field`, `stats`, ...) routes to that
+    default scene. Multi-scene serving passes `store=` (or calls
+    `register_scene` on a running engine) and keys each call with
+    `scene=`."""
+
+    def __init__(self, cfg: NeRFConfig, field=None, cubes: CubeSet = None,
+                 *, store: Optional[SceneStore] = None,
+                 scene_name: str = "default",
                  encode: bool = True, ray_chunk: int = 4096,
                  cube_chunk: int = 8, pair_budget: int = None,
+                 adaptive_pair_budget: bool = True,
                  order_mode: str = "octant", max_batch_views: int = 8,
                  auto_flush_interval: Optional[float] = None,
+                 max_resident_bytes: Optional[int] = None,
+                 spill_dir: Optional[str] = None,
                  mesh=None):
-        import jax
+        import collections
 
         self.cfg = cfg
-        self.encode_fields = bool(encode)
         self.ray_chunk = int(ray_chunk)
         self.cube_chunk = int(cube_chunk)
         self.max_batch_views = int(max_batch_views)
@@ -227,31 +247,56 @@ class RenderEngine:
         self.rules = make_rules(mesh)
         self.n_devices = int(np.prod(list(mesh.shape.values())))
 
-        # ONE jitted step; the field is a pytree argument, so a hot-swapped
-        # field with the same encoded structure hits the compiled cache
-        self._render = jax.jit(rt_pipe.make_ray_renderer(
-            cfg, chunk=self.cube_chunk, pair_budget=pair_budget))
+        if store is not None:
+            if field is not None or cubes is not None:
+                raise ValueError(
+                    "pass either store= or a (field, cubes) pair, not both")
+            self.store = store
+        else:
+            self.store = SceneStore(
+                cfg, rules=self.rules, encode=encode, order_mode=order_mode,
+                max_resident_bytes=max_resident_bytes, spill_dir=spill_dir)
+            if field is not None:
+                self.store.register(scene_name, field, cubes)
+            elif cubes is not None:
+                raise ValueError("cubes given without a field")
 
-        # _lock guards queue / stats / published field; renders run OUTSIDE
-        # it (serialized by _render_lock) so producers and swap_field never
-        # wait a full render behind flush()
+        # ONE jitted step shared by every scene; the field is a pytree
+        # argument, so swapped fields — and different scenes — with the
+        # same encoded structure hit the compiled cache. The active-pair
+        # budget starts at the static default (or `pair_budget`) and, with
+        # `adaptive_pair_budget`, resizes to observed occupancy (hysteresis
+        # + cap; a resize rebuilds the jitted step once).
+        n_pairs = self.cube_chunk * self.ray_chunk
+        self._pair_budget = min(
+            int(pair_budget) if pair_budget else max(n_pairs // 4, 128),
+            n_pairs)
+        self.pair_budget_initial = self._pair_budget
+        self._adaptive_budget = bool(adaptive_pair_budget)
+        self._budget_resizes = 0
+        self._pair_window = collections.deque(maxlen=8)
+        self._low_occ_streak = 0
+        self._pair_occupancy_last = 0.0
+        self._build_render()
+
+        # _lock guards queue / stats / budget; renders run OUTSIDE it
+        # (serialized by _render_lock) against per-scene store snapshots,
+        # so producers, swap_field, and eviction never wait behind a render
         self._lock = threading.RLock()
         self._render_lock = threading.Lock()
         self._flush_cv = threading.Condition(self._lock)
-        self.ordering: Optional[rt_pipe.OrderingCache] = None
-        self._order_mode = order_mode
-        self._install_field(field, cubes)
 
         self._queue: List[_Request] = []
         self._next_id = 0
-        self._latencies: List[float] = []
+        # bounded window: percentiles cover the recent 64k views, while
+        # views_served counts everything — per-request state must not
+        # grow for the life of a long-running service
+        self._latencies = collections.deque(maxlen=65536)
         self._render_s_total = 0.0
         self._views_served = 0
         self._flushes = 0
         self._dropped_pairs = 0
         self._timeouts = 0
-        self._field_swaps = 0
-        self._swap_latencies: List[float] = []
 
         self._flusher: Optional[threading.Thread] = None
         self._flusher_stop = threading.Event()
@@ -259,6 +304,50 @@ class RenderEngine:
         self.auto_flush_interval: Optional[float] = None
         if auto_flush_interval is not None:
             self.start_auto_flush(auto_flush_interval)
+
+    def _build_render(self):
+        import jax
+
+        self._render = jax.jit(rt_pipe.make_ray_renderer(
+            self.cfg, chunk=self.cube_chunk,
+            pair_budget=self._pair_budget))
+
+    # -- scene routing -----------------------------------------------------
+
+    @property
+    def default_scene(self) -> Optional[str]:
+        """Where scene-less calls route: the earliest-registered scene."""
+        return self.store.first_scene()
+
+    def _scene_key(self, scene: Optional[str]) -> str:
+        if scene is not None:
+            return scene
+        name = self.default_scene
+        if name is None:
+            raise RuntimeError("engine has no registered scenes — call "
+                               "register_scene() or pass field/cubes")
+        return name
+
+    def register_scene(self, name: str, field,
+                       cubes: Optional[CubeSet] = None) -> str:
+        """Add a resident scene to the running engine (budget-enforced —
+        may LRU-evict a colder scene). Returns the scene key."""
+        self.store.register(name, field, cubes)
+        return name
+
+    # -- legacy single-scene views (default-scene routed) ------------------
+
+    @property
+    def field(self):
+        return self.store.get_field(self._scene_key(None))
+
+    @property
+    def cubes(self) -> CubeSet:
+        return self.store.snapshot(self._scene_key(None)).cubes
+
+    @property
+    def ordering(self) -> rt_pipe.OrderingCache:
+        return self.store.snapshot(self._scene_key(None)).ordering
 
     # -- background flush thread -------------------------------------------
 
@@ -328,39 +417,15 @@ class RenderEngine:
 
     # -- field lifecycle ---------------------------------------------------
 
-    def _install_field(self, field, cubes: Optional[CubeSet]):
-        """Coerce -> normalise representation -> place on the mesh ->
-        publish. encode=True serves the hybrid streams (no-op when the
-        field arrives pre-encoded, e.g. from compressed-native training);
-        encode=False serves the dense factor arrays — it *decodes* an
-        encoded field, so the flag is a real dense/compressed toggle (the
-        benchmark baseline path). Callers hold the engine lock (or are the
-        constructor)."""
-        field = field_lib.as_backend(field, self.cfg)
-        field = field.encode() if self.encode_fields else field.decode()
-        field = distributed.place_field(field, self.rules)
-        if cubes is None:
-            occ = occ_lib.build_occupancy(field, self.cfg)
-            cubes = occ_lib.extract_cubes(occ, self.cfg)
-        self.field = field
-        self.factor_bytes = field.factor_bytes()
-        self.factor_bytes_dense = field.dense_factor_bytes()
-        self.cubes = cubes
-        # a NEW cache, not invalidate-in-place: an in-flight flush rendering
-        # outside the lock keeps its snapshot's (field, cubes, ordering)
-        # consistent while the engine moves on (counters carry over)
-        prev = self.ordering
-        self.ordering = rt_pipe.OrderingCache(cubes, self._order_mode)
-        if prev is not None:
-            self.ordering.hits, self.ordering.misses = prev.hits, prev.misses
-
     @classmethod
     def from_scene(cls, cfg: NeRFConfig, scene: str, *,
                    ckpt_dir: Optional[str] = None, train_steps: int = 200,
                    n_views: int = 8, image_hw: int = 64,
                    prune_sparsity: float = 0.0, seed: int = 0,
                    verbose: bool = True, **kw) -> "RenderEngine":
-        """Train-once-or-restore, prune, rebuild occupancy, go resident."""
+        """Train-once-or-restore, prune, rebuild occupancy, go resident
+        (registered under the scene's own name, so `submit(..., scene=...)`
+        and fine-tune attachment address it directly)."""
         field = prepare_field(cfg, scene, ckpt_dir=ckpt_dir,
                               train_steps=train_steps, n_views=n_views,
                               image_hw=image_hw, seed=seed, verbose=verbose)
@@ -368,53 +433,80 @@ class RenderEngine:
             field = field.prune(sparsity=prune_sparsity)
         occ = occ_lib.build_occupancy(field, cfg)
         cubes = occ_lib.extract_cubes(occ, cfg)
-        return cls(cfg, field, cubes, **kw)
+        return cls(cfg, field, cubes, scene_name=scene, **kw)
 
-    def swap_field(self, field, cubes: Optional[CubeSet] = None):
-        """Atomically publish a newly trained / re-encoded field to the
-        running engine (the train->serve loop). Queued requests are NOT
-        dropped: they stay queued and render from the new field at the next
-        flush; requests racing in from other threads land before or after
-        the swap, never astride it; a render already in flight finishes
-        from its own consistent (field, cubes, ordering) snapshot. When
-        `cubes` is None the occupancy cube set is rebuilt from the new
-        field at cfg.occ_sigma_thresh — pass precomputed cubes (as
-        FineTuneLoop does) to keep the engine-lock hold time, and with it
-        the producer-visible swap latency, to the pointer switch."""
-        t0 = time.perf_counter()
-        with self._lock:
-            self._install_field(field, cubes)
-            self._field_swaps += 1
-            self._swap_latencies.append(time.perf_counter() - t0)
+    @classmethod
+    def from_scenes(cls, cfg: NeRFConfig, scenes: Sequence[str], *,
+                    ckpt_root: Optional[str] = None, train_steps: int = 200,
+                    n_views: int = 8, image_hw: int = 64,
+                    prune_sparsity: float = 0.0, seed: int = 0,
+                    verbose: bool = True, **kw) -> "RenderEngine":
+        """One engine serving several named scenes: each is trained once or
+        restored (per-scene subdirectory of `ckpt_root`) and registered;
+        with a `max_resident_bytes` budget the store LRU-evicts cold scenes
+        as warmer ones register."""
+        if not scenes:
+            raise ValueError("from_scenes needs at least one scene")
+        engine: Optional[RenderEngine] = None
+        for s in scenes:
+            ckpt = os.path.join(ckpt_root, s) if ckpt_root else None
+            field = prepare_field(cfg, s, ckpt_dir=ckpt,
+                                  train_steps=train_steps, n_views=n_views,
+                                  image_hw=image_hw, seed=seed,
+                                  verbose=verbose)
+            if prune_sparsity > 0.0:
+                field = field.prune(sparsity=prune_sparsity)
+            if engine is None:
+                engine = cls(cfg, field, None, scene_name=s, **kw)
+            else:
+                engine.register_scene(s, field)
+        return engine
 
-    def update_cubes(self, cubes: CubeSet):
+    def swap_field(self, field, cubes: Optional[CubeSet] = None, *,
+                   scene: Optional[str] = None):
+        """Atomically publish a newly trained / re-encoded field for one
+        scene (the train->serve loop) through the store. Queued requests
+        are NOT dropped: they stay queued and render from the new field at
+        the next flush; requests racing in from other threads land before
+        or after the swap, never astride it; a render already in flight
+        finishes from its own consistent snapshot. When `cubes` is None the
+        occupancy cube set is rebuilt from the new field at
+        cfg.occ_sigma_thresh — pass precomputed cubes (as FineTuneLoop
+        does) to keep the swap latency to the pointer switch."""
+        self.store.publish(self._scene_key(scene), field, cubes)
+
+    def update_cubes(self, cubes: CubeSet, *, scene: Optional[str] = None):
         """Occupancy rebuilt (e.g. the field was re-pruned): swap the cube
         set and start from an empty ordering cache."""
-        with self._lock:
-            self.cubes = cubes
-            prev = self.ordering
-            self.ordering = rt_pipe.OrderingCache(cubes, self._order_mode)
-            self.ordering.hits, self.ordering.misses = prev.hits, prev.misses
+        self.store.update_cubes(self._scene_key(scene), cubes)
 
     # -- request/response --------------------------------------------------
 
-    def submit(self, cam: Camera, gt=None, *,
+    def submit(self, cam: Camera, gt=None, *, scene: Optional[str] = None,
                deadline_s: Optional[float] = None) -> ViewFuture:
-        """Queue one novel-view request; returns a future. The queue is
-        flushed when it reaches `max_batch_views` (or on flush()/result()).
-        `deadline_s` (seconds from now): if the deadline passes before the
-        render starts, the request resolves with a timed-out ViewResult
-        instead of being rendered late (AR/VR frames are useless stale).
+        """Queue one novel-view request against a scene handle; returns a
+        future. scene=None routes to the default scene. Submitting against
+        an evicted scene revives it here, transparently — before the
+        engine lock is taken, so a revival's disk I/O never stalls the
+        queue or the flush path (producers touching the store during that
+        revival briefly serialize on the store lock; ROADMAP tracks moving
+        spill I/O off-lock). The queue is flushed when it reaches `max_batch_views`
+        (or on flush()/result()). `deadline_s` (seconds from now): if the
+        deadline passes before the render starts, the request resolves with
+        a timed-out ViewResult instead of being rendered late (AR/VR frames
+        are useless stale).
 
         With the background flush thread running, submit only enqueues and
         notifies — the producer never renders (and never waits behind a
         render: flush holds the engine lock only to take the queue and to
         record stats, not for the render itself)."""
+        key = self._scene_key(scene)
+        self.store.ensure_resident(key)
         with self._lock:
             fut = ViewFuture(self, self._next_id)
             now = time.perf_counter()
             deadline = None if deadline_s is None else now + deadline_s
-            self._queue.append(_Request(cam, gt, fut, now, deadline))
+            self._queue.append(_Request(cam, gt, fut, now, deadline, key))
             self._next_id += 1
             full = len(self._queue) >= self.max_batch_views
             if full and self._auto_flush_on():
@@ -425,32 +517,45 @@ class RenderEngine:
         return fut
 
     def flush(self) -> List[ViewResult]:
-        """Render every queued view: group by ordering octant, micro-batch
-        each group's rays into fixed chunks, run the single jitted step.
-        Renders are serialized on `_render_lock` but run OUTSIDE the engine
-        lock, against a consistent (field, cubes, ordering) snapshot taken
-        with the queue — submit/swap_field proceed while a flush renders.
-        If a render fails, unresolved requests go back on the queue before
-        the error propagates."""
+        """Render every queued view: group by (scene, ordering octant),
+        micro-batch each group's rays into fixed chunks, run the single
+        jitted step per group — several scenes flush in one cycle without
+        mixing micro-batches. Renders are serialized on `_render_lock` but
+        run OUTSIDE the engine lock, against consistent per-scene
+        snapshots taken with the queue — submit/swap_field/eviction
+        proceed while a flush renders. If a render fails, unresolved
+        requests go back on the queue before the error propagates."""
         with self._render_lock:
             with self._lock:
                 if not self._queue:
                     return []
                 reqs, self._queue = self._queue, []
-                snap = (self.field, self.cubes, self.ordering,
-                        self.factor_bytes, self.factor_bytes_dense)
+                render_fn = self._render
+                budget = self._pair_budget
             try:
-                return self._flush(reqs, snap)
+                # snapshots are taken OUTSIDE the engine lock: reviving a
+                # scene evicted since its submit does disk I/O, and
+                # producers must not stall behind it — but INSIDE this
+                # try, so a failed revival requeues the batch like any
+                # render failure instead of dropping futures. A swap
+                # landing between the queue-take and the snapshot is the
+                # ordinary "request lands after the swap" case — each
+                # group still renders from one consistent snapshot.
+                snaps: Dict[str, SceneSnapshot] = {}
+                for r in reqs:
+                    if r.scene not in snaps:
+                        snaps[r.scene] = self.store.snapshot(r.scene)
+                return self._flush(reqs, snaps, render_fn, budget)
             except BaseException:
                 with self._lock:
                     self._queue = [r for r in reqs
                                    if r.future._result is None] + self._queue
                 raise
 
-    def _flush(self, reqs: List[_Request], snap) -> List[ViewResult]:
+    def _flush(self, reqs: List[_Request], snaps: Dict[str, SceneSnapshot],
+               render_fn, budget: int) -> List[ViewResult]:
         t0 = time.perf_counter()
         results: List[ViewResult] = []
-        ordering = snap[2]
 
         # deadline pass: fail expired requests now, render the rest.
         # Stats commit BEFORE each future's event fires, so a waiter that
@@ -460,7 +565,7 @@ class RenderEngine:
             if r.deadline is not None and t0 > r.deadline:
                 res = ViewResult(view_id=r.future._view_id, img=None,
                                  psnr=None, latency_s=t0 - r.t_submit,
-                                 stats={}, timed_out=True)
+                                 stats={}, timed_out=True, scene=r.scene)
                 with self._lock:
                     self._timeouts += 1
                 r.future._set(res)
@@ -470,23 +575,36 @@ class RenderEngine:
         if not live:
             return results
 
-        groups: Dict[tuple, List[_Request]] = {}
-        for r in live:
-            groups.setdefault(ordering.key_for(r.cam.origin), []).append(r)
+        groups = group_requests(
+            live, lambda r: (r.scene, snaps[r.scene].ordering.key_for(
+                r.cam.origin)))
 
+        flush_pairs = [0, 0]    # [max active pairs, successful render calls]
+        flush_dropped = [0]
         try:
-            self._flush_groups(groups, results, snap)
+            self._flush_groups(groups, results, snaps, render_fn,
+                               flush_pairs, flush_dropped)
         finally:
             # time spent counts even when a later group's render raised
             with self._lock:
                 self._render_s_total += time.perf_counter() - t0
                 self._flushes += 1
+                # zero active pairs is a valid (minimum) occupancy
+                # observation — only flushes where no render completed
+                # (failure before the first aux) are skipped
+                if flush_pairs[1]:
+                    self._note_flush_pairs(flush_pairs[0], flush_dropped[0],
+                                           budget)
         return results
 
     def _flush_groups(self, groups: Dict[tuple, List[_Request]],
-                      results: List[ViewResult], snap):
-        field, cubes, ordering, fbytes, fbytes_dense = snap
-        for reqs_g in groups.values():
+                      results: List[ViewResult],
+                      snaps: Dict[str, SceneSnapshot], render_fn,
+                      flush_pairs: List[int], flush_dropped: List[int]):
+        for (scene, _okey), reqs_g in groups.items():
+            snap = snaps[scene]
+            ordering = snap.ordering
+            tg0 = time.perf_counter()
             for r in reqs_g:                      # one cache access per view
                 centers, valid = ordering.get_ordered(r.cam.origin)
             batches = []
@@ -500,9 +618,13 @@ class RenderEngine:
                 ro, rd = distributed.shard_rays(
                     self.rules, jnp.asarray(plan.rays_o[i]),
                     jnp.asarray(plan.rays_d[i]))
-                rgb, aux = self._render(field, centers, valid, ro, rd)
+                rgb, aux = render_fn(snap.field, centers, valid, ro, rd)
                 outs.append(np.asarray(rgb))
                 group_dropped += int(aux["dropped_pairs"])
+                flush_pairs[0] = max(flush_pairs[0],
+                                     int(aux["active_pairs_max"]))
+                flush_pairs[1] += 1
+            flush_dropped[0] += group_dropped
             imgs = plan.scatter(outs)
             t_done = time.perf_counter()
             group: List[tuple] = []
@@ -514,36 +636,81 @@ class RenderEngine:
                 lat = t_done - r.t_submit
                 group.append((r, ViewResult(
                     view_id=r.future._view_id, img=img, psnr=psnr,
-                    latency_s=lat, stats={
-                        "occ_accesses": float(cubes.count),
-                        "factor_bytes": float(fbytes),
-                        "factor_bytes_dense": float(fbytes_dense),
+                    latency_s=lat, scene=scene, stats={
+                        "occ_accesses": float(snap.cubes.count),
+                        "factor_bytes": float(snap.factor_bytes),
+                        "factor_bytes_dense": float(snap.factor_bytes_dense),
                     })))
-            # commit the whole group's stats, THEN resolve its futures —
-            # a render failure in a later group leaves this group counted
-            # and resolved, unrendered groups uncounted (they requeue)
+            # commit the whole group's stats (global, then per-scene), THEN
+            # resolve its futures — a render failure in a later group
+            # leaves this group counted and resolved, unrendered groups
+            # uncounted (they requeue)
             with self._lock:
                 self._dropped_pairs += group_dropped
                 for _, res in group:
                     self._latencies.append(res.latency_s)
                     self._views_served += 1
+            self.store.note_served(scene,
+                                   [res.latency_s for _, res in group],
+                                   time.perf_counter() - tg0)
             for r, res in group:
                 results.append(res)
                 r.future._set(res)
 
-    def render_views(self, cams, gts=None) -> List[ViewResult]:
+    # -- adaptive pair budget ----------------------------------------------
+
+    def _note_flush_pairs(self, max_pairs: int, dropped: int, budget: int):
+        """Resize the active-pair compaction budget from observed occupancy
+        (engine lock + render lock held — the jitted step is rebuilt here,
+        never mid-flush). Hysteresis: grow immediately (x2, capped at the
+        full pair count) when pairs were dropped or the budget filled;
+        shrink only after 3 consecutive low-occupancy (<25%) flushes, to 2x
+        the recent observed max (256-aligned, floor 128) — so one busy view
+        doesn't thrash the compiled step."""
+        n_pairs = self.cube_chunk * self.ray_chunk
+        self._pair_occupancy_last = max_pairs / max(budget, 1)
+        if not self._adaptive_budget or budget != self._pair_budget:
+            return          # a resize already happened since this snapshot
+        self._pair_window.append(max_pairs)
+        new = None
+        if dropped > 0 or max_pairs >= budget:
+            new = min(budget * 2, n_pairs)
+            self._low_occ_streak = 0
+        elif max_pairs * 4 < budget:
+            self._low_occ_streak += 1
+            if self._low_occ_streak >= 3:
+                want = max(2 * max(self._pair_window), 128)
+                want = min(-(-want // 256) * 256, n_pairs)
+                if want < budget:
+                    new = want
+                self._low_occ_streak = 0
+        else:
+            self._low_occ_streak = 0
+        if new is not None and new != budget:
+            self._pair_budget = new
+            self._budget_resizes += 1
+            self._build_render()
+
+    def render_views(self, cams, gts=None, *,
+                     scene: Optional[str] = None) -> List[ViewResult]:
         """Convenience: submit a batch of cameras and flush."""
         gts = gts if gts is not None else [None] * len(cams)
-        futs = [self.submit(c, g) for c, g in zip(cams, gts)]
+        futs = [self.submit(c, g, scene=scene) for c, g in zip(cams, gts)]
         self.flush()
         return [f.result() for f in futs]
 
     # -- telemetry ---------------------------------------------------------
 
-    def stats(self) -> Dict:
+    def stats(self, scene: Optional[str] = None) -> Dict:
+        """stats() aggregates across scenes (single-scene keys unchanged
+        from the pre-store engine, computed over the default scene where a
+        single scene's identity matters — field_kind, factor bytes);
+        stats(scene="lego") itemises one scene."""
+        if scene is not None:
+            return self.store.stats(scene)
         with self._lock:
             lat = np.asarray(self._latencies, np.float64)
-            return {
+            out = {
                 "views_served": self._views_served,
                 "flushes": self._flushes,
                 "fps": (self._views_served / self._render_s_total
@@ -554,23 +721,50 @@ class RenderEngine:
                 "latency_p95_s": (float(np.percentile(lat, 95))
                                   if lat.size else 0.0),
                 "latency_mean_s": float(lat.mean()) if lat.size else 0.0,
-                "occ_accesses_per_view": float(self.cubes.count),
-                "factor_bytes": float(self.factor_bytes),
-                "factor_bytes_dense": float(self.factor_bytes_dense),
-                "compression_ratio": (self.factor_bytes_dense
-                                      / max(self.factor_bytes, 1)),
                 "dropped_pairs": self._dropped_pairs,
                 "timeouts": self._timeouts,
-                "field_swaps": self._field_swaps,
-                "swap_latency_s_last": (self._swap_latencies[-1]
-                                        if self._swap_latencies else 0.0),
-                "swap_latency_s_max": (max(self._swap_latencies)
-                                       if self._swap_latencies else 0.0),
+                "pair_budget": self._pair_budget,
+                "pair_budget_initial": self.pair_budget_initial,
+                "pair_budget_resizes": self._budget_resizes,
+                "pair_occupancy_last": self._pair_occupancy_last,
                 "auto_flush_interval": self.auto_flush_interval,
                 "auto_flush_running": self._auto_flush_on(),
-                "ordering_cache": self.ordering.stats(),
-                "field_kind": self.field.kind,
                 "ray_chunk": self.ray_chunk,
                 "cube_chunk": self.cube_chunk,
                 "n_devices": self.n_devices,
             }
+        ss = self.store.stats()
+        scenes = ss["scenes"]
+        out.update({
+            "n_scenes": ss["n_scenes"],
+            "resident_scenes": ss["resident_scenes"],
+            "resident_bytes": ss["resident_bytes"],
+            "max_resident_bytes": ss["max_resident_bytes"],
+            "evictions": ss["evictions"],
+            "revivals": ss["revivals"],
+            "scenes": scenes,
+            "field_swaps": sum(s["swaps"] for s in scenes.values()),
+            "swap_latency_s_last": self.store.last_swap_latency_s,
+            "swap_latency_s_max": max(
+                [s["swap_latency_s_max"] for s in scenes.values()],
+                default=0.0),
+            "ordering_cache": {
+                "hits": sum(s["ordering_cache"]["hits"]
+                            for s in scenes.values()),
+                "misses": sum(s["ordering_cache"]["misses"]
+                              for s in scenes.values()),
+                "entries": sum(s["ordering_cache"]["entries"]
+                               for s in scenes.values()),
+            },
+        })
+        default = self.default_scene
+        if default is not None:
+            d = scenes[default]
+            out.update({
+                "occ_accesses_per_view": d["occ_accesses_per_view"],
+                "factor_bytes": d["factor_bytes"],
+                "factor_bytes_dense": d["factor_bytes_dense"],
+                "compression_ratio": d["compression_ratio"],
+                "field_kind": d["field_kind"],
+            })
+        return out

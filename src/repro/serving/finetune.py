@@ -1,35 +1,40 @@
-"""Online fine-tuning service: background trainer -> live `swap_field` loop.
+"""Online fine-tuning service: background trainer -> live per-scene
+publish loop through the SceneStore.
 
-Closes the ROADMAP's "wire the train->serve loop end to end" item: a
-`FineTuneLoop` owns a `core.train.NerfTrainer` (compressed-native — the
-factors stay hybrid-encoded between steps, with support revival at every
-`occ_every` boundary) and runs it on a background thread while a
-`RenderEngine` keeps serving. Every `publish_every` steps it snapshots the
-trainer's field, rebuilds the occupancy cube set *on the trainer thread*
-(so the engine lock is held only for the pointer switch), and publishes
-through `RenderEngine.swap_field` — zero dropped or retraced requests:
-the jitted render step takes the field as a pytree argument, so a
-refreshed field with the same encoded structure hits the compiled cache,
-and queued futures survive the swap by construction (engine contract,
-tested in tests/test_serving.py / tests/test_finetune.py).
+Closes the ROADMAP's "multi-scene fine-tuning with one trainer thread per
+resident field" item: a `FineTuneLoop` *attaches* to one named scene in a
+`serving.store.SceneStore` — `FineTuneLoop.attach(store, scene)` — owns a
+`core.train.NerfTrainer` for it (compressed-native, support revival at
+every `occ_every` boundary), and runs it on a background thread while the
+`RenderEngine` keeps serving every resident scene. Every `publish_every`
+steps it snapshots the trainer's field, rebuilds the occupancy cube set
+*on the trainer thread*, and publishes through `SceneStore.publish` —
+so fine-tuning serializes with LRU eviction on the store lock and the two
+can never race: a publish into a scene that was evicted mid-round simply
+revives it around the refreshed field. Zero dropped or retraced requests:
+the jitted render step takes the field as a pytree argument, and queued
+futures survive the swap by construction (engine contract, tested in
+tests/test_serving.py / tests/test_store.py).
+
+Run several loops — one per resident scene — to fine-tune a whole store
+from one process (`launch/serve.py --scenes a,b,c --finetune-steps N`).
 
 This is the paper's serving story made live: RT-NeRF's hybrid bitmap/COO
-encoding and view-dependent ordering (Sec. 3/4) assume a resident field
-that tracks the scene; Re-ReND (arXiv:2303.08717) makes the same point for
-cross-device real-time rendering — the served representation must stay
+encoding and view-dependent ordering (Sec. 3/4) assume resident fields
+that track their scenes; Re-ReND (arXiv:2303.08717) makes the same point
+for cross-device real-time rendering — the served representation must stay
 current without recompilation stalls.
 
 API:
-    loop = FineTuneLoop(engine, "lego", steps=400, publish_every=100)
-    loop.start()            # background thread; engine keeps serving
-    ...                     # submit() from any thread meanwhile
+    loop = FineTuneLoop.attach(store, "lego", steps=400, publish_every=100)
+    loop.start()            # background thread; the engine keeps serving
+    ...                     # submit(cam, scene=...) from any thread
     loop.join()             # waits, re-raises trainer errors
     loop.swaps              # [{step, train_psnr, swap_s, t_wall}, ...]
 
-`launch/serve.py --finetune-steps/--finetune-every` wires this into the
-serving CLI; `examples/finetune_serve.py` demonstrates PSNR climbing while
-views stream; `benchmarks/finetune_serving.py` measures swap latency, FPS
-during training, and PSNR-vs-wall-clock (BENCH_finetune.json).
+The pre-store constructor `FineTuneLoop(engine, "lego", ...)` still works
+(deprecation shim): it resolves the engine's store and targets the scene
+of that name if registered, else the engine's default scene.
 """
 from __future__ import annotations
 
@@ -39,35 +44,62 @@ from typing import Dict, List, Optional
 
 from repro.core import occupancy as occ_lib
 from repro.core import train as train_lib
+from repro.serving.store import SceneStore
 
 
 class FineTuneLoop:
-    """Background compressed-native fine-tuning published into a live
-    engine via `swap_field`.
+    """Background compressed-native fine-tuning published into one named
+    scene of a live SceneStore.
 
     The trainer starts from `start_field` when given, else from the
-    engine's currently-resident field (true *fine*-tuning of the scene
-    being served); `start_field="init"` trains from a fresh initialisation.
-    One publication is always made for the final step, so `steps >=
+    scene's currently-published field (true *fine*-tuning of the scene
+    being served — revived from its spill checkpoint if it was evicted);
+    `start_field="init"` trains from a fresh initialisation. One
+    publication is always made for the final step, so `steps >=
     publish_every` guarantees at least one swap and `steps >= 2 *
     publish_every` at least two.
     """
 
-    def __init__(self, engine, scene_name: str, *, steps: int = 400,
+    def __init__(self, target, scene_name: str, *,
+                 scene: Optional[str] = None, steps: int = 400,
                  publish_every: int = 100, occ_every: Optional[int] = None,
                  n_views: int = 8, image_hw: int = 64,
                  prune_tol: float = 1e-3, revive_frac: float = 0.05,
                  seed: int = 0, start_field=None, verbose: bool = False):
-        self.engine = engine
+        if isinstance(target, SceneStore):
+            store, engine = target, None
+        elif hasattr(target, "store"):            # RenderEngine shim
+            engine = target
+            store = engine.store
+        else:
+            raise TypeError(
+                f"FineTuneLoop target must be a SceneStore or RenderEngine, "
+                f"not {type(target).__name__}")
+        if scene is None:
+            # legacy routing: the training-data scene name if it is a
+            # registered store key, else the engine's default scene
+            if scene_name in store:
+                scene = scene_name
+            elif engine is not None:
+                scene = engine.default_scene
+            else:
+                scene = scene_name
+        if scene not in store:
+            raise KeyError(
+                f"scene '{scene}' is not registered in the store "
+                f"(registered: {store.scenes() or 'none'}) — register it "
+                f"before attaching a fine-tuner")
+        self.store = store
+        self.scene = scene
         self.steps = int(steps)
         self.publish_every = max(int(publish_every), 1)
         self.verbose = bool(verbose)
         if start_field is None:
-            start_field = engine.field
+            start_field = store.get_field(scene)   # revives if evicted
         elif start_field == "init":
             start_field = None
         self.trainer = train_lib.NerfTrainer(
-            engine.cfg, scene_name, field=start_field, n_views=n_views,
+            store.cfg, scene_name, field=start_field, n_views=n_views,
             image_hw=image_hw,
             occ_every=(self.publish_every if occ_every is None
                        else int(occ_every)),
@@ -80,14 +112,22 @@ class FineTuneLoop:
         self._error: Optional[BaseException] = None
         self._t0 = 0.0
 
+    @classmethod
+    def attach(cls, store: SceneStore, scene: str, *,
+               data_scene: Optional[str] = None, **kw) -> "FineTuneLoop":
+        """One trainer thread for one resident scene: train on
+        `data_scene` (default: the scene itself) and publish into
+        `store`'s `scene` record."""
+        return cls(store, data_scene or scene, scene=scene, **kw)
+
     # -- lifecycle ---------------------------------------------------------
 
     def start(self) -> "FineTuneLoop":
         if self._thread is not None:
             raise RuntimeError("fine-tune loop already started")
         self._t0 = time.perf_counter()
-        self._thread = threading.Thread(target=self._run,
-                                        name="finetune-trainer")
+        self._thread = threading.Thread(
+            target=self._run, name=f"finetune-trainer-{self.scene}")
         self._thread.start()
         return self
 
@@ -133,19 +173,22 @@ class FineTuneLoop:
             self._error = e
 
     def _publish(self, rec: Dict[str, float]):
-        """Snapshot -> occupancy rebuild (this thread) -> swap_field.
-        Everything expensive happens off the serving path; the engine lock
-        is held only for the pointer switch inside swap_field."""
+        """Snapshot -> occupancy rebuild (this thread) -> store.publish.
+        Everything expensive happens off the serving path; the store lock
+        is held only for the pointer switch inside publish — and because
+        eviction also runs under that lock, a publish lands either wholly
+        before or wholly after any eviction of this scene (after an
+        eviction it revives the scene around the refreshed field)."""
         field = self.trainer.snapshot()
-        occ = occ_lib.build_occupancy(field, self.engine.cfg)
-        cubes = occ_lib.extract_cubes(occ, self.engine.cfg)
+        occ = occ_lib.build_occupancy(field, self.store.cfg)
+        cubes = occ_lib.extract_cubes(occ, self.store.cfg)
         t0 = time.perf_counter()
-        self.engine.swap_field(field, cubes)
+        self.store.publish(self.scene, field, cubes)
         swap_s = time.perf_counter() - t0
         self.swaps.append({"step": rec["step"], "train_psnr": rec["psnr"],
                            "swap_s": swap_s,
                            "t_wall": time.perf_counter() - self._t0})
         if self.verbose:
-            print(f"  [finetune] step {rec['step']:5d} published field "
-                  f"(train-psnr {rec['psnr']:.2f}, swap {swap_s * 1e3:.1f}ms)",
-                  flush=True)
+            print(f"  [finetune:{self.scene}] step {rec['step']:5d} "
+                  f"published field (train-psnr {rec['psnr']:.2f}, "
+                  f"swap {swap_s * 1e3:.1f}ms)", flush=True)

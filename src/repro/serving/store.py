@@ -1,0 +1,389 @@
+"""SceneStore: a registry of named resident scenes under one device-memory
+budget — the multi-scene pivot of the serving layer.
+
+RT-NeRF's hybrid bitmap/COO encoding (paper Sec. 4.2) exists so that *many*
+scenes fit in device memory at once; this module is where that pays off for
+serving. A `SceneStore` owns, per named scene, the resident published
+state: the (normally encoded) `FieldBackend`, its occupancy `CubeSet`, a
+per-scene `pipeline.OrderingCache`, and cumulative serving/swap telemetry.
+Everything scene-shaped in the serving layer routes through it:
+
+  * `RenderEngine` resolves `submit(cam, scene=...)` against the store and
+    renders each flush group from a consistent per-scene snapshot;
+  * `FineTuneLoop.attach(store, scene)` publishes refreshed fields through
+    `publish()`, so fine-tuning and eviction serialize on the store lock
+    and can never race;
+  * the **memory budget** (`max_resident_bytes`, defaulting from
+    `NeRFConfig.max_resident_bytes`) bounds the total encoded factor bytes
+    resident across scenes. Registering, publishing, or reviving a scene
+    that would exceed the budget LRU-evicts cold scenes: their encoded
+    streams are demoted to disk via `ckpt.spill_field` (bit-for-bit, no
+    decompress) together with their cube set, and the next
+    `submit`/`publish`/`get_field` touching them revives the identical
+    representation via `ckpt.unspill_field` — a revived scene renders
+    bit-identically to its pre-eviction self.
+
+Lock order (engine lock -> store lock, never the reverse): the store lock
+guards scene records and the LRU clock; renders never run under it — the
+engine takes per-scene snapshots (field, cubes, ordering) under the lock
+and renders outside, so an in-flight flush keeps its snapshot alive (and
+consistent) even if the scene is concurrently evicted or republished.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, List, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt_lib
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import distributed, occupancy as occ_lib
+from repro.core import field as field_lib
+from repro.core import pipeline as rt_pipe
+from repro.core.occupancy import CubeSet
+
+CUBES_FILE = "cubes.npz"
+
+
+class SceneSnapshot(NamedTuple):
+    """A consistent per-scene view for one flush: renders read this, never
+    the live record, so publishes/evictions mid-render can't tear it."""
+    scene: str
+    field: field_lib.FieldBackend
+    cubes: CubeSet
+    ordering: rt_pipe.OrderingCache
+    factor_bytes: int
+    factor_bytes_dense: int
+
+
+@dataclasses.dataclass(eq=False)
+class SceneRecord:
+    """One named scene: resident state + counters that survive eviction."""
+    name: str
+    field: Optional[field_lib.FieldBackend] = None
+    cubes: Optional[CubeSet] = None
+    ordering: Optional[rt_pipe.OrderingCache] = None
+    factor_bytes: int = 0
+    factor_bytes_dense: int = 0
+    resident: bool = False
+    spill_path: Optional[str] = None
+    last_used: int = 0
+    # -- cumulative telemetry (kept across evict/revive cycles). The two
+    # latency stores are bounded windows — a long-running service must not
+    # grow per-request state — so percentiles are over the recent window
+    # while views_served / swaps count everything.
+    views_served: int = 0
+    latencies: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096))
+    render_s: float = 0.0
+    swaps: int = 0
+    swap_latencies: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=256))
+    swap_latency_s_max: float = 0.0      # all-time, not windowed
+    evictions: int = 0
+    revivals: int = 0
+    _ord_hits: int = 0            # ordering counters parked while evicted
+    _ord_misses: int = 0
+
+
+class SceneStore:
+    """Named resident scenes with LRU eviction under a byte budget."""
+
+    def __init__(self, cfg: NeRFConfig, *, rules=None, encode: bool = True,
+                 order_mode: str = "octant",
+                 max_resident_bytes: Optional[int] = None,
+                 spill_dir: Optional[str] = None):
+        self.cfg = cfg
+        self.encode_fields = bool(encode)
+        self.order_mode = order_mode
+        if max_resident_bytes is None:
+            max_resident_bytes = cfg.max_resident_bytes
+        self.max_resident_bytes = (int(max_resident_bytes)
+                                   if max_resident_bytes else None)
+        self._spill_dir = spill_dir
+        self._rules = rules
+        self._lock = threading.RLock()
+        self._records: Dict[str, SceneRecord] = {}
+        self._clock = 0
+        self.evictions_total = 0
+        self.revivals_total = 0
+        self.last_swap_latency_s = 0.0
+
+    # -- infrastructure ----------------------------------------------------
+
+    @property
+    def rules(self):
+        if self._rules is None:
+            from repro.launch.mesh import make_host_mesh
+            from repro.models.sharding import make_rules
+            self._rules = make_rules(make_host_mesh())
+        return self._rules
+
+    @property
+    def spill_dir(self) -> str:
+        if self._spill_dir is None:
+            self._spill_dir = tempfile.mkdtemp(prefix="scene_store_")
+        return self._spill_dir
+
+    def _touch(self, rec: SceneRecord):
+        self._clock += 1
+        rec.last_used = self._clock
+
+    def _prepare(self, field, cubes: Optional[CubeSet]):
+        """Coerce -> normalise representation -> place on the mesh. encode
+        serves the hybrid streams (no-op when pre-encoded); encode=False
+        decodes, the dense-baseline toggle. Cubes rebuild at the shared
+        `cfg.occ_sigma_thresh` when not supplied."""
+        field = field_lib.as_backend(field, self.cfg)
+        field = field.encode() if self.encode_fields else field.decode()
+        field = distributed.place_field(field, self.rules)
+        if cubes is None:
+            occ = occ_lib.build_occupancy(field, self.cfg)
+            cubes = occ_lib.extract_cubes(occ, self.cfg)
+        return field, cubes
+
+    # -- scene lifecycle ---------------------------------------------------
+
+    def register(self, name: str, field, cubes: Optional[CubeSet] = None
+                 ) -> SceneRecord:
+        """Make `name` resident with `field` (+ optional precomputed cubes).
+        Registering an existing name is an error — republish via
+        `publish()`, which keeps the scene's telemetry."""
+        def taken():
+            return ValueError(
+                f"scene '{name}' already registered — use publish() to "
+                f"replace its field")
+        with self._lock:                  # fail fast, before the encode/
+            if name in self._records:     # occupancy work in _prepare
+                raise taken()
+        field, cubes = self._prepare(field, cubes)
+        with self._lock:
+            if name in self._records:     # lost a register-register race
+                raise taken()
+            rec = SceneRecord(name=name)
+            self._records[name] = rec
+            self._install(rec, field, cubes)
+            self._touch(rec)
+            self._enforce_budget(protect=name)
+        return rec
+
+    def _install(self, rec: SceneRecord, field, cubes: CubeSet):
+        """Publish (field, cubes) into `rec` (store lock held, field already
+        prepared). A NEW ordering cache, counters carried — a flush holding
+        the previous snapshot stays consistent."""
+        rec.field = field
+        rec.cubes = cubes
+        if rec.ordering is not None:
+            rec.ordering = rec.ordering.with_cubes(cubes)
+        else:
+            rec.ordering = rt_pipe.OrderingCache(cubes, self.order_mode,
+                                                 scene=rec.name)
+            rec.ordering.hits, rec.ordering.misses = (rec._ord_hits,
+                                                      rec._ord_misses)
+        rec.factor_bytes = field.factor_bytes()
+        rec.factor_bytes_dense = field.dense_factor_bytes()
+        rec.resident = True
+
+    def publish(self, name: str, field, cubes: Optional[CubeSet] = None):
+        """Atomically replace a scene's served field (the swap_field /
+        fine-tune path). The scene needn't be resident: publishing into an
+        evicted scene revives it around the new field. Queued engine
+        requests are never dropped — they render from the new snapshot at
+        their flush. Pass precomputed `cubes` (as FineTuneLoop does) to
+        keep the lock hold, and with it the producer-visible swap latency,
+        to the pointer switch."""
+        t0 = time.perf_counter()
+        field, cubes = self._prepare(field, cubes)
+        with self._lock:
+            rec = self._get(name)
+            self._install(rec, field, cubes)
+            self._touch(rec)
+            rec.swaps += 1
+            rec.swap_latencies.append(time.perf_counter() - t0)
+            rec.swap_latency_s_max = max(rec.swap_latency_s_max,
+                                         rec.swap_latencies[-1])
+            self.last_swap_latency_s = rec.swap_latencies[-1]
+            self._enforce_budget(protect=name)
+
+    def update_cubes(self, name: str, cubes: CubeSet):
+        """Occupancy rebuilt (e.g. the field was re-pruned): swap the cube
+        set; the ordering cache restarts empty (counters carried)."""
+        with self._lock:
+            rec = self.ensure_resident(name)
+            rec.cubes = cubes
+            rec.ordering = rec.ordering.with_cubes(cubes)
+
+    def _get(self, name: str) -> SceneRecord:
+        rec = self._records.get(name)
+        if rec is None:
+            raise KeyError(
+                f"unknown scene '{name}' (registered: "
+                f"{sorted(self._records) or 'none'})")
+        return rec
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._records
+
+    def scenes(self) -> List[str]:
+        with self._lock:
+            return sorted(self._records)
+
+    def first_scene(self) -> Optional[str]:
+        """Earliest-registered scene name — the engine's default route for
+        scene-less (single-scene, pre-store) call sites."""
+        with self._lock:
+            return next(iter(self._records), None)
+
+    def resident_scenes(self) -> List[str]:
+        with self._lock:
+            return sorted(n for n, r in self._records.items() if r.resident)
+
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return sum(r.factor_bytes for r in self._records.values()
+                       if r.resident)
+
+    # -- eviction / revival ------------------------------------------------
+
+    def _enforce_budget(self, protect: Optional[str] = None):
+        """LRU-evict resident scenes (never `protect`, never the last one
+        standing if it alone exceeds the budget — an unserveable store
+        would be worse than an over-budget one) until under budget."""
+        if self.max_resident_bytes is None:
+            return
+        while self.resident_bytes() > self.max_resident_bytes:
+            victims = [r for r in self._records.values()
+                       if r.resident and r.name != protect]
+            if not victims:
+                break
+            self.evict(min(victims, key=lambda r: r.last_used).name)
+
+    def evict(self, name: str):
+        """Demote a resident scene to its encoded checkpoint: spill the
+        bitmap/COO streams as-is (`ckpt.spill_field`) plus the cube set,
+        then drop the device-side references. Telemetry stays on the
+        record; the ordering cache's counters are parked for revival."""
+        with self._lock:
+            rec = self._get(name)
+            if not rec.resident:
+                return
+            path = os.path.join(self.spill_dir, name)
+            ckpt_lib.spill_field(path, rec.field,
+                                 extra_meta={"scene": name})
+            c = rec.cubes
+            np.savez(os.path.join(path, CUBES_FILE),
+                     centers=np.asarray(c.centers),
+                     valid=np.asarray(c.valid), count=c.count,
+                     radius=c.radius, occ=np.asarray(c.occ))
+            rec._ord_hits = rec.ordering.hits
+            rec._ord_misses = rec.ordering.misses
+            rec.field = rec.cubes = rec.ordering = None
+            rec.spill_path = path
+            rec.resident = False
+            rec.evictions += 1
+            self.evictions_total += 1
+
+    def ensure_resident(self, name: str) -> SceneRecord:
+        """Revive `name` from its spill checkpoint if evicted (bit-for-bit:
+        `ckpt.unspill_field` rebuilds the exact encoded representation, and
+        the cube set is reloaded, not rebuilt). Touches the LRU clock."""
+        with self._lock:
+            rec = self._get(name)
+            if not rec.resident:
+                field, _ = ckpt_lib.unspill_field(rec.spill_path, self.cfg)
+                with np.load(os.path.join(rec.spill_path, CUBES_FILE)) as z:
+                    cubes = CubeSet(jnp.asarray(z["centers"]),
+                                    jnp.asarray(z["valid"]),
+                                    int(z["count"]), float(z["radius"]),
+                                    jnp.asarray(z["occ"]))
+                # placement only — the representation is already encoded
+                field = distributed.place_field(
+                    field_lib.as_backend(field, self.cfg), self.rules)
+                self._install(rec, field, cubes)
+                rec.revivals += 1
+                self.revivals_total += 1
+                self._touch(rec)
+                self._enforce_budget(protect=name)
+            self._touch(rec)
+            return rec
+
+    # -- engine-facing reads -----------------------------------------------
+
+    def snapshot(self, name: str) -> SceneSnapshot:
+        """The consistent (field, cubes, ordering) triple one flush group
+        renders from, reviving the scene first if needed."""
+        with self._lock:
+            rec = self.ensure_resident(name)
+            return SceneSnapshot(name, rec.field, rec.cubes, rec.ordering,
+                                 rec.factor_bytes, rec.factor_bytes_dense)
+
+    def get_field(self, name: str) -> field_lib.FieldBackend:
+        """The currently published field (revived if evicted) — what a
+        fine-tuner attaching to this scene starts from."""
+        with self._lock:
+            return self.ensure_resident(name).field
+
+    def note_served(self, name: str, latencies: List[float],
+                    render_s: float):
+        """Commit one flush group's serving telemetry to the scene."""
+        with self._lock:
+            rec = self._get(name)
+            rec.views_served += len(latencies)
+            rec.latencies.extend(latencies)
+            rec.render_s += render_s
+
+    # -- telemetry ---------------------------------------------------------
+
+    def _scene_stats(self, rec: SceneRecord) -> Dict:
+        lat = np.asarray(rec.latencies, np.float64)
+        ordering = (rec.ordering.stats() if rec.ordering is not None
+                    else {"hits": rec._ord_hits, "misses": rec._ord_misses,
+                          "entries": 0})
+        return {
+            "scene": rec.name,
+            "resident": rec.resident,
+            "views_served": rec.views_served,
+            "fps": (rec.views_served / rec.render_s
+                    if rec.render_s > 0 else 0.0),
+            "render_s": rec.render_s,
+            "latency_p50_s": (float(np.percentile(lat, 50))
+                              if lat.size else 0.0),
+            "latency_p95_s": (float(np.percentile(lat, 95))
+                              if lat.size else 0.0),
+            "factor_bytes": float(rec.factor_bytes),
+            "factor_bytes_dense": float(rec.factor_bytes_dense),
+            "compression_ratio": (rec.factor_bytes_dense
+                                  / max(rec.factor_bytes, 1)),
+            "field_kind": (rec.field.kind if rec.resident else "evicted"),
+            "occ_accesses_per_view": (float(rec.cubes.count)
+                                      if rec.resident else 0.0),
+            "swaps": rec.swaps,
+            "swap_latency_s_last": (rec.swap_latencies[-1]
+                                    if rec.swap_latencies else 0.0),
+            "swap_latency_s_max": rec.swap_latency_s_max,
+            "evictions": rec.evictions,
+            "revivals": rec.revivals,
+            "ordering_cache": ordering,
+        }
+
+    def stats(self, scene: Optional[str] = None) -> Dict:
+        with self._lock:
+            if scene is not None:
+                return self._scene_stats(self._get(scene))
+            return {
+                "n_scenes": len(self._records),
+                "resident_scenes": self.resident_scenes(),
+                "resident_bytes": self.resident_bytes(),
+                "max_resident_bytes": self.max_resident_bytes,
+                "evictions": self.evictions_total,
+                "revivals": self.revivals_total,
+                "scenes": {n: self._scene_stats(r)
+                           for n, r in sorted(self._records.items())},
+            }

@@ -1,0 +1,364 @@
+"""SceneStore + scene-routed serving: multi-scene registry, LRU eviction
+to encoded checkpoints with bit-for-bit revival, concurrent cross-scene
+request streams, per-scene fine-tune attach, and the engine's adaptive
+pair budget."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import field as field_lib
+from repro.core import occupancy as occ_lib
+from repro.core import pipeline as rt_pipe
+from repro.core import rendering, tensorf
+from repro.core import train as nerf_train
+from repro.data import rays as rays_lib
+from repro.serving import FineTuneLoop, RenderEngine, SceneStore
+
+CFG = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=256,
+                 r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                 max_samples_per_ray=64, train_rays=256)
+
+
+def _field_and_cubes(target=0.9, seed=0):
+    params = tensorf.init_field(CFG, jax.random.PRNGKey(seed))
+    field = field_lib.DenseField(params, CFG).prune(sparsity=target)
+    occ = occ_lib.build_occupancy(field, CFG, sigma_thresh=0.01)
+    cubes = occ_lib.extract_cubes(occ, CFG)
+    assert cubes.count > 0
+    return field, cubes
+
+
+def _store(tmp_path, budget=None, **kw):
+    return SceneStore(CFG, max_resident_bytes=budget,
+                      spill_dir=str(tmp_path / "spill"), **kw)
+
+
+# -- registry --------------------------------------------------------------
+
+
+def test_store_register_and_duplicate_rejected(tmp_path):
+    store = _store(tmp_path)
+    f, c = _field_and_cubes()
+    store.register("a", f, c)
+    assert "a" in store and store.resident_scenes() == ["a"]
+    assert store.resident_bytes() > 0
+    with pytest.raises(ValueError, match="already registered"):
+        store.register("a", f, c)
+    with pytest.raises(KeyError, match="unknown scene"):
+        store.snapshot("nope")
+
+
+def test_store_snapshot_is_consistent_after_publish(tmp_path):
+    """A snapshot taken before a publish keeps its (field, cubes, ordering)
+    triple; the live record moves on."""
+    store = _store(tmp_path)
+    f1, c1 = _field_and_cubes(seed=0)
+    f2, c2 = _field_and_cubes(seed=7)
+    store.register("a", f1, c1)
+    snap = store.snapshot("a")
+    store.publish("a", f2, c2)
+    assert snap.cubes is c1
+    assert store.snapshot("a").cubes is not c1
+    assert store.stats("a")["swaps"] == 1
+
+
+# -- eviction / revival ----------------------------------------------------
+
+
+def test_store_eviction_roundtrip_bit_for_bit(tmp_path):
+    """Evict -> revive must rebuild the exact encoded representation:
+    same formats, same packed bytes, bit-identical leaf arrays."""
+    store = _store(tmp_path)
+    f, c = _field_and_cubes()
+    store.register("a", f, c)
+    before = store.get_field("a")
+    spec_b, arrays_b = field_lib.field_state(before)
+    report_b = before.sparsity_report()
+
+    store.evict("a")
+    assert store.resident_scenes() == []
+    assert store.stats("a")["field_kind"] == "evicted"
+
+    after = store.get_field("a")               # transparent revival
+    spec_a, arrays_a = field_lib.field_state(after)
+    assert spec_a == spec_b
+    assert sorted(arrays_a) == sorted(arrays_b)
+    for k in arrays_b:
+        np.testing.assert_array_equal(np.asarray(arrays_a[k]),
+                                      np.asarray(arrays_b[k]))
+    assert after.sparsity_report() == report_b
+    # cube set reloaded, not rebuilt: identical geometry
+    c2 = store.snapshot("a").cubes
+    np.testing.assert_array_equal(np.asarray(c2.centers),
+                                  np.asarray(c.centers))
+    assert c2.count == c.count
+    s = store.stats("a")
+    assert s["evictions"] == 1 and s["revivals"] == 1
+
+
+def test_store_budget_lru_evicts_coldest(tmp_path):
+    """Registering past the byte budget evicts the least-recently-used
+    resident scene, never the incoming one; touching a scene protects it."""
+    f1, c1 = _field_and_cubes(seed=0)
+    f2, c2 = _field_and_cubes(seed=1)
+    f3, c3 = _field_and_cubes(seed=2)
+    one = field_lib.as_backend(f1, CFG).encode().factor_bytes()
+    store = _store(tmp_path, budget=int(2.5 * one))
+    store.register("a", f1, c1)
+    store.register("b", f2, c2)
+    assert store.resident_scenes() == ["a", "b"]
+    store.snapshot("a")                        # a is now warmer than b
+    store.register("c", f3, c3)                # over budget -> evict b
+    assert "b" not in store.resident_scenes()
+    assert set(store.resident_scenes()) == {"a", "c"}
+    # next touch revives b (and evicts the now-coldest, a)
+    store.snapshot("b")
+    assert "b" in store.resident_scenes()
+    assert "a" not in store.resident_scenes()
+
+
+def test_store_single_scene_over_budget_stays_resident(tmp_path):
+    """A lone scene larger than the budget must stay resident (an
+    unserveable store would be worse than an over-budget one)."""
+    f, c = _field_and_cubes()
+    store = _store(tmp_path, budget=1)          # absurdly tight
+    store.register("a", f, c)
+    assert store.resident_scenes() == ["a"]
+
+
+def test_engine_revived_scene_renders_identically(tmp_path):
+    """Acceptance: with max_resident_bytes forcing eviction, a revived
+    scene returns PSNR identical to pre-eviction (encoded round-trip) —
+    the engine route, not just the store."""
+    f1, c1 = _field_and_cubes(seed=0)
+    f2, c2 = _field_and_cubes(seed=7)
+    one = field_lib.as_backend(f1, CFG).encode().factor_bytes()
+    engine = RenderEngine(CFG, f1, c1, scene_name="a", ray_chunk=16 * 16,
+                          max_resident_bytes=int(1.5 * one),
+                          spill_dir=str(tmp_path / "spill"))
+    cam = rays_lib.make_cameras(3, 16, 16)[0]
+    img_a = np.asarray(engine.submit(cam, scene="a").result().img)
+    engine.register_scene("b", f2, c2)          # evicts a
+    assert engine.store.resident_scenes() == ["b"]
+    img_b = np.asarray(engine.submit(cam, scene="b").result().img)
+    img_a2 = np.asarray(engine.submit(cam, scene="a").result().img)
+    np.testing.assert_array_equal(img_a2, img_a)
+    img_b2 = np.asarray(engine.submit(cam, scene="b").result().img)
+    np.testing.assert_array_equal(img_b2, img_b)
+    s = engine.stats()
+    assert s["evictions"] >= 2 and s["revivals"] >= 2
+    assert s["timeouts"] == 0
+
+
+# -- scene-routed engine ---------------------------------------------------
+
+
+def test_engine_two_scene_flush_no_cross_scene_mixups(tmp_path):
+    """One flush cycle holding requests for two scenes renders each group
+    from its own snapshot — every result matches a direct render of ITS
+    scene's field."""
+    f1, c1 = _field_and_cubes(seed=0)
+    f2, c2 = _field_and_cubes(seed=7)
+    engine = RenderEngine(CFG, f1, c1, scene_name="a", ray_chunk=16 * 16,
+                          max_batch_views=16,
+                          spill_dir=str(tmp_path / "spill"))
+    engine.register_scene("b", f2, c2)
+    cams = rays_lib.make_cameras(4, 16, 16)
+    futs = [(n, cam, engine.submit(cam, scene=n))
+            for cam in cams for n in ("a", "b")]
+    engine.flush()                              # one cycle, both scenes
+    for n, cam, fut in futs:
+        r = fut.result()
+        assert r.scene == n
+        field, cubes = (f1, c1) if n == "a" else (f2, c2)
+        ref, _ = rt_pipe.render_rtnerf(field.encode(), CFG, cubes, cam,
+                                       chunk=8)
+        psnr = float(rendering.psnr(jnp.clip(jnp.asarray(r.img), 0, 1),
+                                    jnp.clip(ref, 0, 1)))
+        assert psnr >= 40.0, (n, psnr)
+    s = engine.stats()
+    assert s["views_served"] == 8
+    assert s["scenes"]["a"]["views_served"] == 4
+    assert s["scenes"]["b"]["views_served"] == 4
+
+
+def test_engine_concurrent_submits_across_scenes(tmp_path):
+    """Producer threads hammer two resident scenes while flush cycles
+    interleave: every future resolves with its own scene's image, none
+    are dropped, per-scene counters add up."""
+    f1, c1 = _field_and_cubes(seed=0)
+    f2, c2 = _field_and_cubes(seed=7)
+    engine = RenderEngine(CFG, f1, c1, scene_name="a", ray_chunk=16 * 16,
+                          max_batch_views=3,
+                          spill_dir=str(tmp_path / "spill"))
+    engine.register_scene("b", f2, c2)
+    cam = rays_lib.make_cameras(3, 16, 16)[0]
+    ref = {}
+    for n in ("a", "b"):
+        ref[n] = np.asarray(engine.submit(cam, scene=n).result().img)
+    assert float(np.abs(ref["a"] - ref["b"]).mean()) > 1e-5
+
+    futs, errs = [], []
+
+    def producer(tid):
+        try:
+            for i in range(6):
+                n = ("a", "b")[(tid + i) % 2]
+                futs.append((n, engine.submit(cam, scene=n)))
+        except BaseException as e:            # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    engine.flush()
+    assert not errs
+    assert len(futs) == 18
+    for n, f in futs:
+        r = f.result()
+        assert not r.timed_out
+        assert r.scene == n
+        np.testing.assert_array_equal(np.asarray(r.img), ref[n])
+    s = engine.stats()
+    assert s["views_served"] == 20
+    assert (s["scenes"]["a"]["views_served"]
+            + s["scenes"]["b"]["views_served"]) == 20
+
+
+def test_finetune_attach_survives_eviction_of_other_scene(tmp_path):
+    """A FineTuneLoop attached to scene 'a' keeps publishing while 'b' is
+    evicted and revived under it: publishes land in 'a' only, 'b' revives
+    bit-identically, nothing races."""
+    res = nerf_train.train_nerf(CFG, "lego", steps=3, n_views=2,
+                                image_hw=16, verbose=False)
+    f2, c2 = _field_and_cubes(seed=7)
+    one = res.field.factor_bytes()
+    engine = RenderEngine(CFG, res.field, res.cubes, scene_name="a",
+                          ray_chunk=16 * 16, max_batch_views=4,
+                          max_resident_bytes=int(2.5 * one),
+                          spill_dir=str(tmp_path / "spill"))
+    engine.register_scene("b", f2, c2)
+    cam = rays_lib.make_cameras(3, 16, 16)[0]
+    img_b = np.asarray(engine.submit(cam, scene="b").result().img)
+
+    loop = FineTuneLoop.attach(engine.store, "a", data_scene="lego",
+                               steps=12, publish_every=4,
+                               n_views=2, image_hw=16).start()
+    evicted_once = False
+    while loop.running():
+        engine.store.evict("b")                 # keep forcing b cold
+        evicted_once = True
+        r = engine.submit(cam, scene="b").result()   # ... and reviving it
+        np.testing.assert_array_equal(np.asarray(r.img), img_b)
+    loop.join()
+    assert evicted_once
+    s = engine.stats()
+    assert s["scenes"]["a"]["swaps"] >= 2       # publishes landed in a
+    assert s["scenes"]["b"]["swaps"] == 0       # never in b
+    assert s["timeouts"] == 0
+    # b still revives bit-identically after the fine-tune round
+    r = engine.submit(cam, scene="b").result()
+    np.testing.assert_array_equal(np.asarray(r.img), img_b)
+
+
+def test_finetune_publish_into_evicted_scene_revives_it(tmp_path):
+    """Publishing into a scene that was evicted mid-round revives it
+    around the refreshed field (store.publish contract)."""
+    res = nerf_train.train_nerf(CFG, "lego", steps=3, n_views=2,
+                                image_hw=16, verbose=False)
+    store = _store(tmp_path)
+    store.register("a", res.field, res.cubes)
+    store.evict("a")
+    f2, c2 = _field_and_cubes(seed=7)
+    store.publish("a", f2, c2)
+    assert store.resident_scenes() == ["a"]
+    assert store.stats("a")["swaps"] == 1
+
+
+# -- adaptive pair budget --------------------------------------------------
+
+
+def test_adaptive_pair_budget_grows_on_drops(tmp_path):
+    """A budget too small for the view drops pairs; the engine doubles it
+    (recompiling once) until drops stop, and stats() reports the chosen
+    budget."""
+    field, cubes = _field_and_cubes()
+    engine = RenderEngine(CFG, field, cubes, ray_chunk=16 * 16,
+                          pair_budget=8, spill_dir=str(tmp_path / "spill"))
+    assert engine.stats()["pair_budget"] == 8
+    cam = rays_lib.make_cameras(3, 16, 16)[0]
+    engine.submit(cam).result()
+    s1 = engine.stats()
+    assert s1["dropped_pairs"] > 0              # 8 pairs can't cover a view
+    assert s1["pair_budget"] > 8                # grew for the next flush
+    assert s1["pair_budget_resizes"] >= 1
+    grown = 0
+    for _ in range(12):                         # keep flushing: budget
+        engine.submit(cam).result()             # converges, drops stop
+        s = engine.stats()
+        if s["dropped_pairs"] == s1["dropped_pairs"] and \
+                s["pair_budget"] == grown:
+            break
+        grown = s["pair_budget"]
+    assert engine.stats()["pair_budget"] >= 4 * 8
+
+
+def test_adaptive_pair_budget_shrinks_with_hysteresis(tmp_path):
+    """Sustained low occupancy shrinks the budget — but only after 3
+    consecutive low flushes, never below the observed need, and an
+    explicit adaptive_pair_budget=False pins it."""
+    field, cubes = _field_and_cubes()
+    engine = RenderEngine(CFG, field, cubes, ray_chunk=16 * 16,
+                          cube_chunk=8, spill_dir=str(tmp_path / "spill"))
+    init = engine.stats()["pair_budget"]
+    cam = rays_lib.make_cameras(3, 16, 16)[0]
+    engine.submit(cam).result()
+    engine.submit(cam).result()
+    assert engine.stats()["pair_budget"] == init    # hysteresis: < 3 flushes
+    need = None
+    for _ in range(6):
+        engine.submit(cam).result()
+        need = engine.stats()
+    if need["pair_occupancy_last"] * init < init // 4:
+        assert need["pair_budget"] <= init
+    assert need["pair_budget"] >= 128
+    assert need["dropped_pairs"] == 0               # shrink never drops
+
+    pinned = RenderEngine(CFG, field, cubes, ray_chunk=16 * 16,
+                          adaptive_pair_budget=False,
+                          spill_dir=str(tmp_path / "spill2"))
+    for _ in range(5):
+        pinned.submit(cam).result()
+    assert pinned.stats()["pair_budget"] == pinned.stats()[
+        "pair_budget_initial"]
+    assert pinned.stats()["pair_budget_resizes"] == 0
+
+
+# -- stats surface ---------------------------------------------------------
+
+
+def test_engine_stats_scene_keyed(tmp_path):
+    f1, c1 = _field_and_cubes(seed=0)
+    f2, c2 = _field_and_cubes(seed=7)
+    engine = RenderEngine(CFG, f1, c1, scene_name="a", ray_chunk=16 * 16,
+                          spill_dir=str(tmp_path / "spill"))
+    engine.register_scene("b", f2, c2)
+    cam = rays_lib.make_cameras(3, 16, 16)[0]
+    engine.submit(cam, scene="b").result()
+    agg = engine.stats()
+    assert agg["n_scenes"] == 2
+    assert set(agg["scenes"]) == {"a", "b"}
+    assert agg["field_kind"] == "compressed"    # default scene (a)
+    per = engine.stats(scene="b")
+    assert per["views_served"] == 1
+    assert per["scene"] == "b" and per["resident"]
+    assert engine.stats(scene="a")["views_served"] == 0
+    with pytest.raises(KeyError):
+        engine.stats(scene="zzz")
