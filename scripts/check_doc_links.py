@@ -8,10 +8,17 @@ docs/*.md):
 External (scheme://) links are skipped — CI must not depend on the
 network. Exit non-zero listing every broken link.
 
+`--require FILE` (repeatable) additionally fails if FILE is absent —
+docs/*.md is a glob, so a deleted guide would otherwise just silently
+drop out of the check. CI pins the load-bearing guides this way.
+
     python scripts/check_doc_links.py [files...]
+    python scripts/check_doc_links.py --require docs/kernels.md \
+        --require docs/benchmarks.md
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import os
 import re
@@ -70,9 +77,24 @@ def check(path: str, root: str) -> list:
 
 def main(argv) -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    files = argv[1:] or ["README.md"] + sorted(
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*")
+    ap.add_argument("--require", action="append", default=[],
+                    help="repo-relative file that must exist (repeatable); "
+                         "required .md files also join the checked set")
+    args = ap.parse_args(argv[1:])
+    files = args.files or ["README.md"] + sorted(
         glob.glob(os.path.join(root, "docs", "*.md")))
     errors = []
+    checked = {os.path.abspath(x if os.path.isabs(x)
+                               else os.path.join(root, x)) for x in files}
+    for f in args.require:
+        path = os.path.abspath(f if os.path.isabs(f)
+                               else os.path.join(root, f))
+        if not os.path.exists(path):
+            errors.append(f"{f}: required doc is missing")
+        elif f.endswith(".md") and path not in checked:
+            files.append(f)
     for f in files:
         path = f if os.path.isabs(f) else os.path.join(root, f)
         if not os.path.exists(path):

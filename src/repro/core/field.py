@@ -60,6 +60,19 @@ class FieldBackend:
     def app_features(self, pts: jax.Array) -> jax.Array:
         raise NotImplementedError
 
+    def sigma_app(self, pts: jax.Array, cube_centers=None, cube_id=None):
+        """(sigma (N,), app_features (N, app_dim)) in one call. Renderers
+        that group points by occupancy cube pass `cube_centers` (C, 3
+        world) and `cube_id` (N,) so encoded backends can stream per-cube
+        factor windows through the fused kernel; the default is the
+        two-head composition (no grouping required)."""
+        return self.sigma(pts), self.app_features(pts)
+
+    def dispatch_path(self) -> str:
+        """Which kernel path `sigma_app` takes on this backend (benchmarks
+        record this per run): "dense", "fused", "fused_ref" or "per-op"."""
+        return "dense"
+
     @property
     def mlp_params(self) -> Dict[str, jax.Array]:
         raise NotImplementedError
@@ -282,6 +295,20 @@ class CompressedField(FieldBackend):
     def app_features(self, pts):
         return tensorf.eval_app_features_hybrid(self, self.cfg, pts)
 
+    def sigma_app(self, pts, cube_centers=None, cube_id=None):
+        """Fused streaming eval when the caller supplies cube grouping:
+        decode per-cube factor windows from the encoded streams, sample,
+        and accumulate both heads in one pass (kernels/fused_sample.py).
+        Without grouping, the per-point gather composition."""
+        if cube_centers is None or cube_id is None:
+            return self.sigma(pts), self.app_features(pts)
+        base = tensorf.window_base(self.cfg, cube_centers)
+        return tensorf.eval_sigma_app_hybrid(self, self.cfg, pts, base,
+                                             cube_id)
+
+    def dispatch_path(self) -> str:
+        return tensorf.hybrid_dispatch(self)
+
     @property
     def mlp_params(self):
         return self.extras
@@ -458,9 +485,13 @@ def field_from_state(spec: Dict, arrays: Dict[str, jax.Array],
             if ef.fmt == "dense":
                 ef.dense = A[f"{base}/dense"]
             elif ef.fmt == "bitmap":
+                # rank is derived, never serialized: rebuild it so restored
+                # fields hit the same O(1) fused lookup path as fresh encodes
                 ef.bitmap = sparse.BitmapEncoded(
                     shape, A[f"{base}/words"], A[f"{base}/rowptr"],
-                    A[f"{base}/values"], ef.nnz)
+                    A[f"{base}/values"], ef.nnz,
+                    rank=sparse.bitmap_rank(A[f"{base}/words"],
+                                            A[f"{base}/rowptr"]))
             else:
                 ef.coo = sparse.CooEncoded(
                     shape, A[f"{base}/coords"], A[f"{base}/values"], ef.nnz)

@@ -353,9 +353,13 @@ def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
             s_mask = sel[:, None] & (ts < t1s[:, None])   # (budget,ns)
             pts = ro_s[:, None] + rd_s[:, None] * ts[..., None]
             flat = pts.reshape(-1, 3)
-            sigma = f.sigma(flat).reshape(s_mask.shape)
-            sigma = jnp.where(s_mask, sigma, 0.0)
-            feats = f.app_features(flat)
+            # points grouped by chunk-local cube (idx // n_rays) so encoded
+            # fields stream per-cube factor windows through the fused kernel;
+            # non-selected pairs land out-of-window and are masked below
+            cube_i = (idx // n_rays).astype(jnp.int32)
+            cid = jnp.broadcast_to(cube_i[:, None], s_mask.shape).reshape(-1)
+            sigma, feats = f.sigma_app(flat, ctr, cid)
+            sigma = jnp.where(s_mask, sigma.reshape(s_mask.shape), 0.0)
             dirs = jnp.broadcast_to(rd_s[:, None], pts.shape).reshape(-1, 3)
             rgb = f.color(feats, dirs).reshape(*s_mask.shape, 3)
 
@@ -438,9 +442,12 @@ def render_rtnerf(field, cfg: NeRFConfig, cubes: CubeSet, cam: Camera, *,
         s_mask = s_mask & alive[..., None]
 
         flat = pts.reshape(-1, 3)
-        sigma = f.sigma(flat).reshape(s_mask.shape)
-        sigma = jnp.where(s_mask, sigma, 0.0)
-        feats = f.app_features(flat)
+        # points grouped by their source cube for the fused streaming path
+        cid = jnp.broadcast_to(
+            jnp.arange(ctr.shape[0], dtype=jnp.int32)[:, None, None],
+            s_mask.shape).reshape(-1)
+        sigma, feats = f.sigma_app(flat, ctr, cid)
+        sigma = jnp.where(s_mask, sigma.reshape(s_mask.shape), 0.0)
         dirs = jnp.broadcast_to(d[:, :, None], pts.shape).reshape(-1, 3)
         rgb = f.color(feats, dirs).reshape(*s_mask.shape, 3)
 

@@ -43,6 +43,13 @@ class BitmapEncoded:
     rowptr: jax.Array     # (rows,) int32 — start of each row in `values`
     values: jax.Array     # (nnz_pad,) packed non-zeros (padded)
     nnz: int
+    # Per-word rank table (rows, W) int32: rank[r, w] = packed index of word
+    # w's first non-zero in row r (rowptr folded in). Derived from
+    # words/rowptr at encode time (never serialized — see bitmap_rank), it
+    # turns a lookup's O(W) masked prefix-popcount into O(1): one rank read
+    # plus the popcount of a single masked word. The fused kernel's
+    # "popcount-based rank lookup".
+    rank: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(eq=False)
@@ -55,8 +62,9 @@ class CooEncoded:
 
 jax.tree_util.register_pytree_node(
     BitmapEncoded,
-    lambda e: ((e.words, e.rowptr, e.values), (e.shape, e.nnz)),
-    lambda aux, ch: BitmapEncoded(aux[0], ch[0], ch[1], ch[2], aux[1]))
+    lambda e: ((e.words, e.rowptr, e.values, e.rank), (e.shape, e.nnz)),
+    lambda aux, ch: BitmapEncoded(aux[0], ch[0], ch[1], ch[2], aux[1],
+                                  rank=ch[3]))
 jax.tree_util.register_pytree_node(
     CooEncoded,
     lambda e: ((e.coords, e.values), (e.shape, e.nnz)),
@@ -74,6 +82,16 @@ def sparsity(w) -> float:
 def choose_format(s: float, threshold: float = 0.80) -> str:
     """The paper's rule: bitmap below the threshold, COO at/above it."""
     return "coo" if s >= threshold else "bitmap"
+
+
+def bitmap_rank(words, rowptr) -> jax.Array:
+    """Per-word rank table for a bitmap stream: rank[r, w] = rowptr[r] +
+    popcount(words[r, :w]). Pure function of (words, rowptr), so restore
+    paths recompute it instead of serializing it (checkpoints stay
+    byte-compatible across PRs)."""
+    pc = jax.lax.population_count(jnp.asarray(words)).astype(jnp.int32)
+    prefix = jnp.cumsum(pc, axis=1) - pc
+    return jnp.asarray(rowptr, jnp.int32)[:, None] + prefix
 
 
 def encode_bitmap(w, pad_to: Optional[int] = None) -> BitmapEncoded:
@@ -95,7 +113,8 @@ def encode_bitmap(w, pad_to: Optional[int] = None) -> BitmapEncoded:
     values = np.zeros((pad,), w.dtype)
     values[:nnz] = vals
     return BitmapEncoded((rows, cols), jnp.asarray(words),
-                         jnp.asarray(rowptr), jnp.asarray(values), nnz)
+                         jnp.asarray(rowptr), jnp.asarray(values), nnz,
+                         rank=bitmap_rank(words, rowptr))
 
 
 def encode_coo(w, pad_to: Optional[int] = None) -> CooEncoded:
@@ -135,7 +154,8 @@ def decode_coo(enc: CooEncoded) -> jax.Array:
 
 def bitmap_lookup_linear(words: jax.Array, rowptr: jax.Array,
                          values: jax.Array, queries: jax.Array,
-                         cols: int) -> jax.Array:
+                         cols: int, rank: Optional[jax.Array] = None
+                         ) -> jax.Array:
     """jnp oracle: random access into a bitmap-encoded matrix (raw arrays).
 
     queries (Q,) linear indices into the row-major (rows, cols) matrix. The
@@ -143,29 +163,42 @@ def bitmap_lookup_linear(words: jax.Array, rowptr: jax.Array,
     prefix-popcount over the query row's bitmap words to find the packed
     address (3 cycles in the ASIC; one word-vector popcount here). This is
     the single source of truth for the decode math; kernels/ref.py delegates
-    here and the Pallas kernel (kernels/bitmap_decode.py) mirrors it.
+    here and the Pallas kernels (kernels/bitmap_decode.py,
+    kernels/fused_sample.py) mirror it.
+
+    Without `rank`, the prefix is a masked popcount over the whole query row
+    (O(W) per query — the from-first-principles reference form). With the
+    precomputed `bitmap_rank` table the same address is rank[r, wi] +
+    popcount of ONE masked word (O(1) per query — the fused fast path);
+    the two are tested equal.
     """
     r = queries // cols
     c = queries % cols
     wi = (c // 32).astype(jnp.int32)
     bi = (c % 32).astype(jnp.uint32)
-    qwords = words[r]                                       # (Q, W)
-    widx = jnp.arange(words.shape[1], dtype=jnp.int32)[None, :]
     below = jnp.left_shift(jnp.uint32(1), bi) - jnp.uint32(1)
-    mask = jnp.where(widx < wi[:, None], jnp.uint32(0xFFFFFFFF),
-                     jnp.where(widx == wi[:, None], below[:, None],
-                               jnp.uint32(0)))
-    prefix = jnp.sum(jax.lax.population_count(qwords & mask), axis=1)
+    if rank is None:
+        qwords = words[r]                                   # (Q, W)
+        widx = jnp.arange(words.shape[1], dtype=jnp.int32)[None, :]
+        mask = jnp.where(widx < wi[:, None], jnp.uint32(0xFFFFFFFF),
+                         jnp.where(widx == wi[:, None], below[:, None],
+                                   jnp.uint32(0)))
+        prefix = jnp.sum(jax.lax.population_count(qwords & mask), axis=1)
+        addr = rowptr[r] + prefix.astype(jnp.int32)
+    else:
+        word_at = words[r, wi]
+        prefix = jax.lax.population_count(word_at & below)
+        addr = rank[r, wi] + prefix.astype(jnp.int32)
     bit = (words[r, wi] >> bi) & jnp.uint32(1)
-    addr = rowptr[r] + prefix.astype(jnp.int32)
     vals = values[jnp.clip(addr, 0, values.shape[0] - 1)]
     return jnp.where(bit > 0, vals, 0).astype(values.dtype)
 
 
 def bitmap_lookup(enc: BitmapEncoded, queries: jax.Array) -> jax.Array:
-    """bitmap_lookup_linear over an encoded container."""
+    """bitmap_lookup_linear over an encoded container (rank-accelerated
+    when the table is present)."""
     return bitmap_lookup_linear(enc.words, enc.rowptr, enc.values, queries,
-                                enc.shape[1])
+                                enc.shape[1], rank=enc.rank)
 
 
 def coo_lookup(enc: CooEncoded, queries: jax.Array) -> jax.Array:

@@ -10,6 +10,7 @@ bilinear on planes, linear on lines (as in TensoRF).
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Tuple
 
 import jax
@@ -220,6 +221,98 @@ def eval_app_features_hybrid(cf, cfg: NeRFConfig,
                                 cf.factors["app_lines"], pts_g, force)
     feat = comp.reshape(3 * cfg.r_color, -1).T
     return feat @ cf.extras["basis"]
+
+
+# --------------------------------------------------------------------------
+# Fused streaming eval (kernels/fused_sample.py): points grouped by
+# occupancy cube decode small per-cube factor windows once, then sample and
+# accumulate both heads in a single pass — the Potamoi-style unified
+# streaming that makes hybrid the fast path.
+# --------------------------------------------------------------------------
+
+
+def fused_window(cfg: NeRFConfig) -> int:
+    """Window span W (grid units) that covers every interpolation stencil a
+    single cube's sample points can touch. Sized to the cube's *bounding
+    ball* (not the cube) so both intersect modes of the pipeline are
+    covered, +1 for the floor low corner, +1 for the stencil high corner,
+    +1 slack for the clipped origin."""
+    span = (cfg.cube_ball_radius() / cfg.scene_bound) * (cfg.grid_res - 1)
+    return min(int(math.ceil(span)) + 3, cfg.grid_res)
+
+
+def window_base(cfg: NeRFConfig, centers: jax.Array) -> jax.Array:
+    """(C, 3) int32 window origins for cube centers (C, 3 world): every
+    unmasked sample of cube c has its whole stencil inside
+    [base[c], base[c]+W) per axis. Masked (out-of-segment) points may fall
+    outside; they read clipped window entries and are zeroed downstream."""
+    W = fused_window(cfg)
+    gmin = to_grid(cfg, centers - cfg.cube_ball_radius())
+    base = jnp.floor(gmin).astype(jnp.int32) - 1
+    return jnp.clip(base, 0, cfg.grid_res - W)
+
+
+def fused_field_inputs(cf) -> Tuple:
+    """(spec, streams) flattening of a CompressedField's encoded factors in
+    the canonical order of kernels/fused_sample.py (FACTOR_KEYS x mode).
+    `spec` is static and hashable (it participates in jit keys); `streams`
+    is the matching flat tuple of arrays. Returns (None, None) when any
+    factor cannot stream — unknown format, or a bitmap that predates rank
+    tables — which sends dispatch down the per-op oracle path."""
+    spec, streams = [], []
+    for k in sparse.FACTOR_KEYS:
+        for ef in cf.factors[k]:
+            rows, ncols = ef.shape
+            if ef.fmt == "dense":
+                spec.append(("dense", rows, ncols))
+                streams.append(ef.dense)
+            elif ef.fmt == "bitmap":
+                e = ef.bitmap
+                if e.rank is None:
+                    return None, None
+                spec.append(("bitmap", rows, ncols))
+                streams.extend([e.words, e.rank, e.values])
+            elif ef.fmt == "coo":
+                spec.append(("coo", rows, ncols))
+                streams.extend([ef.coo.coords, ef.coo.values])
+            else:
+                return None, None
+    return tuple(spec), tuple(streams)
+
+
+def hybrid_dispatch(cf, force=None) -> str:
+    """Which path `eval_sigma_app_hybrid` takes for this field on this
+    backend: "fused" (Pallas kernel), "fused_ref" (jnp fused oracle) or
+    "per-op" (gather-composition fallback). Benchmarks record this so bench
+    trajectories are apples-to-apples."""
+    spec, _ = fused_field_inputs(cf)
+    mode = ops.fused_mode(force)
+    if spec is None or mode == "per-op":
+        return "per-op"
+    return mode
+
+
+def eval_sigma_app_hybrid(cf, cfg: NeRFConfig, pts: jax.Array,
+                          cube_base: jax.Array, cube_id: jax.Array,
+                          force=None) -> Tuple[jax.Array, jax.Array]:
+    """Single-pass (sigma, app_features) over an encoded field via the
+    fused streaming kernel: per-cube factor windows are decoded from the
+    bitmap/COO streams in VMEM, sampled, and accumulated into both heads
+    sharing one stencil computation. Falls back to the per-op gather
+    composition when the field can't stream or dispatch forces "per-op"
+    (the contract docs/kernels.md specifies). Exact same math as
+    eval_sigma_hybrid + eval_app_features_hybrid."""
+    spec, streams = fused_field_inputs(cf)
+    mode = ops.fused_mode(force)
+    if spec is None or mode == "per-op":
+        per_op_force = None if mode == "per-op" else force
+        return (eval_sigma_hybrid(cf, cfg, pts, per_op_force),
+                eval_app_features_hybrid(cf, cfg, pts, per_op_force))
+    raw, feats = ops.fused_sigma_app(
+        spec, streams, cf.extras["basis"], pts, cube_base, cube_id,
+        grid_res=cfg.grid_res, scene_bound=cfg.scene_bound,
+        window=fused_window(cfg), app_dim=cfg.app_dim, force=force)
+    return jax.nn.softplus(raw), feats
 
 
 def eval_color(params, cfg: NeRFConfig, feats: jax.Array,

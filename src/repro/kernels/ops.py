@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import fused_sample, ref
 from repro.kernels.bitmap_decode import bitmap_gather as _bitmap_gather_pallas
 from repro.kernels.bitmap_decode import bitmap_matmul as _bitmap_pallas
 from repro.kernels.coo_gather import coo_gather as _coo_pallas
@@ -53,6 +53,47 @@ def coo_gather(coords, values, queries, *, force: Optional[str] = None):
         return ref.coo_gather_ref(coords, values, queries)
     return _coo_pallas(coords, values, queries,
                        interpret=(jax.default_backend() != "tpu"))
+
+
+def fused_mode(force: Optional[str] = None) -> str:
+    """Dispatch mode for the fused decode-sample-accumulate path: "fused"
+    (Pallas kernel; interpret off-TPU), "fused_ref" (jnp oracle, the CPU
+    serving default), or whatever explicit mode `force` names ("per-op"
+    makes core/tensorf fall back to the per-op gather composition). The
+    per-op force vocabulary maps onto its fused equivalents so callers can
+    use one force string for the whole hybrid eval."""
+    if force in ("pallas", "fused"):
+        return "fused"
+    if force in ("ref", "fused_ref"):
+        return "fused_ref"
+    if force:
+        return force
+    return "fused" if jax.default_backend() == "tpu" else "fused_ref"
+
+
+fused_supported = fused_sample.fused_supported
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec", "grid_res", "scene_bound", "window", "app_dim", "force"))
+def fused_sigma_app(spec, streams, basis, pts, cube_base, cube_id, *,
+                    grid_res: int, scene_bound: float, window: int,
+                    app_dim: int, force: Optional[str] = None):
+    """(sigma_raw, feat) straight from the encoded factor streams — the
+    fused decode-sample-accumulate kernel (kernels/fused_sample.py). `spec`
+    is the static factor-structure tuple from tensorf.fused_field_inputs;
+    it participates in the jit key, so hot-swapped fields with the same
+    encoded structure reuse the compiled step."""
+    m = fused_mode(force)
+    if m == "fused_ref":
+        return fused_sample.fused_sigma_app_ref(
+            spec, streams, basis, pts, cube_base, cube_id,
+            grid_res=grid_res, scene_bound=scene_bound, window=window,
+            app_dim=app_dim)
+    return fused_sample.fused_sigma_app(
+        spec, streams, basis, pts, cube_base, cube_id,
+        grid_res=grid_res, scene_bound=scene_bound, window=window,
+        app_dim=app_dim, interpret=(jax.default_backend() != "tpu"))
 
 
 @functools.partial(jax.jit, static_argnames=("delta", "term_eps", "force"))

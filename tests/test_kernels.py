@@ -6,8 +6,10 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.core import sparse
-from repro.kernels import ops, ref
+from repro.configs.rtnerf import demo_config
+from repro.core import field as field_lib
+from repro.core import sparse, tensorf
+from repro.kernels import fused_sample, ops, ref
 from repro.kernels.bitmap_decode import bitmap_gather, bitmap_matmul
 from repro.kernels.coo_gather import coo_gather
 from repro.kernels.flash_attention import flash_attention
@@ -163,6 +165,150 @@ def test_flash_attention_bf16():
     np.testing.assert_allclose(np.asarray(o_pal, np.float32),
                                np.asarray(o_ref, np.float32),
                                rtol=3e-2, atol=3e-2)
+
+
+# ------------------------------------------------- fused decode-sample ---
+def _fused_case(sparsity_lvl, threshold, seed=0, zero_slices=False):
+    """A tiny encoded field + cube-grouped query points for fused parity
+    tests. Returns (cfg, cf, centers, cube_id, pts)."""
+    cfg = demo_config(tiny=True)
+    params = tensorf.init_field(cfg, jax.random.PRNGKey(seed))
+    params = tensorf.prune_to_sparsity(params, sparsity_lvl)
+    if zero_slices:                       # whole factor modes with nnz == 0
+        params["sigma_planes"] = params["sigma_planes"].at[1].set(0.0)
+        params["app_lines"] = params["app_lines"].at[2].set(0.0)
+    cf = field_lib.DenseField(params, cfg).encode(threshold)
+    rng = np.random.RandomState(seed)
+    C = 4
+    ci = rng.randint(0, cfg.cube_grid_res, size=(C, 3))
+    centers = jnp.asarray(
+        -cfg.scene_bound + (ci + 0.5) * cfg.cube_world(), jnp.float32)
+    cid = jnp.asarray(rng.randint(0, C, 300), jnp.int32)
+    half = cfg.cube_world() / 2.0
+    off = jnp.asarray(rng.uniform(-half, half, (300, 3)), jnp.float32)
+    pts = jnp.take(centers, cid, axis=0) + off
+    return cfg, cf, centers, cid, pts
+
+
+def _fused_eval(cfg, cf, centers, cid, pts, force):
+    base = tensorf.window_base(cfg, centers)
+    return tensorf.eval_sigma_app_hybrid(cf, cfg, pts, base, cid,
+                                         force=force)
+
+
+@pytest.mark.parametrize("force", ["fused_ref", "fused"])
+@pytest.mark.parametrize("case,want_fmts", [
+    ("bitmap", {"bitmap"}),               # below-threshold factors -> bitmap
+    ("coo", {"coo"}),                     # at/above threshold -> COO
+    ("mixed", {"bitmap", "coo"}),         # both formats in one field
+    ("empty", {"coo"}),                   # factor modes with zero nnz
+])
+def test_fused_parity(case, want_fmts, force):
+    """Fused streaming kernel (jnp oracle AND Pallas interpret mode) vs the
+    per-op gather composition, across the codec's format space."""
+    if case == "bitmap":
+        cfg, cf, centers, cid, pts = _fused_case(0.6, threshold=0.99)
+    elif case == "coo":
+        cfg, cf, centers, cid, pts = _fused_case(0.9, threshold=0.80)
+    elif case == "empty":
+        cfg, cf, centers, cid, pts = _fused_case(0.9, threshold=0.80,
+                                                 zero_slices=True)
+    else:                                 # mixed: splice the two encodings
+        cfg, bm, centers, cid, pts = _fused_case(0.6, threshold=0.99)
+        co = bm.decode().encode(0.0)
+        cf = field_lib.CompressedField(
+            {"sigma_planes": bm.factors["sigma_planes"],
+             "sigma_lines": co.factors["sigma_lines"],
+             "app_planes": co.factors["app_planes"],
+             "app_lines": bm.factors["app_lines"]},
+            bm.extras, cfg, bm.threshold)
+    fmts = {ef.fmt for efs in cf.factors.values() for ef in efs}
+    assert fmts == want_fmts, f"case {case} encoded as {fmts}"
+    want_sig = cf.sigma(pts)              # per-op oracle composition
+    want_feat = cf.app_features(pts)
+    got_sig, got_feat = _fused_eval(cfg, cf, centers, cid, pts, force)
+    np.testing.assert_allclose(np.asarray(got_sig), np.asarray(want_sig),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_feat), np.asarray(want_feat),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_multi_block_padding():
+    """Point counts that are not a multiple of the kernel block exercise the
+    pad-and-slice wrapper and a multi-step Pallas grid."""
+    cfg, cf, centers, cid, pts = _fused_case(0.9, threshold=0.80)
+    spec, streams = tensorf.fused_field_inputs(cf)
+    base = tensorf.window_base(cfg, centers)
+    W = tensorf.fused_window(cfg)
+    want, _ = fused_sample.fused_sigma_app_ref(
+        spec, streams, cf.extras["basis"], pts, base, cid,
+        grid_res=cfg.grid_res, scene_bound=cfg.scene_bound, window=W,
+        app_dim=cfg.app_dim)
+    got, _ = fused_sample.fused_sigma_app(
+        spec, streams, cf.extras["basis"], pts, base, cid,
+        grid_res=cfg.grid_res, scene_bound=cfg.scene_bound, window=W,
+        app_dim=cfg.app_dim, block_pts=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fused_out_of_window_points_are_finite():
+    """Points outside their cube's window read clipped entries by contract
+    (callers mask them); the kernel must stay in-bounds and finite."""
+    cfg, cf, centers, cid, pts = _fused_case(0.9, threshold=0.80)
+    far = pts + 10.0 * cfg.cube_world()   # well outside every window
+    sig, feat = _fused_eval(cfg, cf, centers, cid, far, "fused_ref")
+    assert np.all(np.isfinite(np.asarray(sig)))
+    assert np.all(np.isfinite(np.asarray(feat)))
+
+
+def test_fused_dispatch_contract():
+    """ops.fused_mode / hybrid_dispatch: fused_ref on CPU by default,
+    "per-op" forces the gather composition, unsupported specs fall back."""
+    cfg, cf, centers, cid, pts = _fused_case(0.9, threshold=0.80)
+    assert ops.fused_mode("pallas") == "fused"
+    assert ops.fused_mode("ref") == "fused_ref"
+    assert ops.fused_mode("per-op") == "per-op"
+    if jax.default_backend() != "tpu":
+        assert tensorf.hybrid_dispatch(cf) == "fused_ref"
+    spec, _ = tensorf.fused_field_inputs(cf)
+    assert len(spec) == 12 and fused_sample.fused_supported(spec)
+    assert not fused_sample.fused_supported(spec[:3])
+    # forcing per-op still produces the same numbers through sigma_app
+    want_sig, want_feat = _fused_eval(cfg, cf, centers, cid, pts, "per-op")
+    got_sig, got_feat = _fused_eval(cfg, cf, centers, cid, pts, None)
+    np.testing.assert_allclose(np.asarray(got_sig), np.asarray(want_sig),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_feat), np.asarray(want_feat),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_rank_table_restores():
+    """bitmap rank tables are derived state: dropping them (as a restored
+    checkpoint would) routes dispatch to per-op until recomputed."""
+    import dataclasses
+    cfg, cf, centers, cid, pts = _fused_case(0.6, threshold=0.99)
+    stripped = {}
+    for k, efs in cf.factors.items():
+        out = []
+        for ef in efs:
+            if ef.fmt == "bitmap":
+                e = dataclasses.replace(ef)
+                e.bitmap = sparse.BitmapEncoded(
+                    ef.bitmap.shape, ef.bitmap.words, ef.bitmap.rowptr,
+                    ef.bitmap.values, ef.bitmap.nnz, rank=None)
+                out.append(e)
+            else:
+                out.append(ef)
+        stripped[k] = tuple(out)
+    cf2 = field_lib.CompressedField(stripped, cf.extras, cfg, cf.threshold)
+    spec, streams = tensorf.fused_field_inputs(cf2)
+    assert spec is None and streams is None
+    assert tensorf.hybrid_dispatch(cf2) == "per-op"
+    # the fallback still answers correctly
+    sig, feat = _fused_eval(cfg, cf2, centers, cid, pts, None)
+    np.testing.assert_allclose(np.asarray(sig), np.asarray(cf.sigma(pts)),
+                               rtol=1e-5, atol=1e-5)
 
 
 # --------------------------------------------------------------- ops API ---
