@@ -20,7 +20,10 @@ refreshed hybrid-encoded fields via `swap_field`. Measured:
     PYTHONPATH=src python benchmarks/finetune_serving.py
     PYTHONPATH=src python benchmarks/finetune_serving.py --tiny --check
 
-Emits BENCH_finetune.json. --check exits non-zero unless max swap latency
+Emits BENCH_finetune.json, including the trace-derived per-stage latency
+table (`stages`) and the fine-tuner's full publication-cost histogram
+(`finetune_publish_s`: snapshot + occupancy rebuild + swap) from the
+shared metrics registry. --check exits non-zero unless max swap latency
 < one flush interval, every future resolved (zero timeouts/drops), >= 2
 swaps landed, and PSNR improved from the first swap epoch to the last.
 """
@@ -124,6 +127,13 @@ def main():
         "timeouts": s["timeouts"],
         "latency_p50_s": s["latency_p50_s"],
         "latency_p95_s": s["latency_p95_s"],
+        "latency_p99_s": s["latency_p99_s"],
+        # trace-derived per-stage latency table: where a served view's time
+        # went (queue/group/ordering/compaction/render/deliver) while the
+        # trainer competed for the host
+        "stages": engine.stage_breakdown(),
+        "finetune_publish_s": engine.metrics.histogram(
+            "finetune_publish_s", scene=loop.scene).snapshot(),
         "psnr_epoch_first": psnr_first,
         "psnr_epoch_last": psnr_last,
         "psnr_vs_wall_clock": [

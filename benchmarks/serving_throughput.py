@@ -25,11 +25,14 @@ baseline/N by construction).
     PYTHONPATH=src python benchmarks/serving_throughput.py \
         --tiny --check --scenes lego,chair          # nightly 2-scene gate
 
-Emits BENCH_serving.json (FPS, p50/p95 latency, factor bytes, per-scene
-multi-scene table) so the perf trajectory is tracked across PRs. --check
-exits non-zero unless batched FPS >= 1.5x sequential at PSNR parity
-(within 0.5 dB) — and, when >1 scene is served, unless every scene's FPS
->= 0.7x the single-scene baseline.
+Emits BENCH_serving.json (FPS, p50/p95/p99 latency + timeout counts,
+factor bytes, a trace-derived per-stage latency table from the engine's
+request tracer, the instrumentation self-overhead, per-scene multi-scene
+table) so the perf trajectory is tracked across PRs. --check exits
+non-zero unless batched FPS >= 1.5x sequential at PSNR parity (within
+0.5 dB), tracing costs < 2% FPS (traced vs `set_tracing(False)` passes
+on the same warmed engine) — and, when >1 scene is served, unless every
+scene's FPS >= 0.7x the single-scene baseline.
 
 CPU wall-clock is a relative signal (TPU is the compile target), but the
 batched/sequential *ratio* is the claim under test: what the engine
@@ -91,7 +94,8 @@ def main():
                     help="CI smoke shape: 20 steps, 32^2, 5 views")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero unless batched FPS >= 1.5x the "
-                         "sequential loop at PSNR parity (0.5 dB), and — "
+                         "sequential loop at PSNR parity (0.5 dB), "
+                         "instrumentation overhead < 2% FPS, and — "
                          "multi-scene — per-scene render-rate FPS >= 0.7x "
                          "the single-scene baseline")
     args = ap.parse_args()
@@ -145,6 +149,27 @@ def main():
     bat_lat = [r.latency_s for r in results]
     es = engine.stats()
 
+    # -- instrumentation self-overhead: traced vs tracing-off passes -------
+    # Same warmed engine, same cameras; best-of-2 per mode so one scheduler
+    # hiccup on a shared CI box doesn't decide the gate. The claim under
+    # test: per-request span tracing + registry recording must cost < 2%
+    # FPS — observability that taxes the serving path defeats its purpose.
+    def timed_pass():
+        t0 = time.time()
+        engine.render_views(cams, gts[base_scene])
+        return time.time() - t0
+
+    engine.set_tracing(True)
+    timed_pass()                                     # symmetric warm pass
+    t_traced = min(timed_pass() for _ in range(2))
+    engine.set_tracing(False)
+    timed_pass()
+    t_plain = min(timed_pass() for _ in range(2))
+    engine.set_tracing(True)
+    fps_traced = args.views / t_traced
+    fps_plain = args.views / t_plain
+    overhead_frac = max(0.0, 1.0 - fps_traced / max(fps_plain, 1e-9))
+
     speedup = bat_fps / max(seq_fps, 1e-9)
     report = {
         "scene": base_scene, "views": args.views, "res": args.res,
@@ -161,13 +186,24 @@ def main():
             "fps": seq_fps, "total_s": seq_total,
             "latency_p50_s": pctl(seq_lat, 50),
             "latency_p95_s": pctl(seq_lat, 95),
+            "latency_p99_s": pctl(seq_lat, 99),
+            "timeouts": 0,          # the per-view loop has no deadline path
             "psnr_mean": float(np.mean(seq_psnr)),
         },
         "batched": {
             "fps": bat_fps, "total_s": bat_total,
             "latency_p50_s": pctl(bat_lat, 50),
             "latency_p95_s": pctl(bat_lat, 95),
+            "latency_p99_s": pctl(bat_lat, 99),
+            "timeouts": es["timeouts"],
             "psnr_mean": float(np.mean(bat_psnr)),
+        },
+        # trace-derived per-stage latency columns (queue/group/ordering/
+        # compaction/render/deliver) from the engine's request tracer
+        "stages": engine.stage_breakdown(),
+        "overhead": {
+            "fps_traced": fps_traced, "fps_untraced": fps_plain,
+            "overhead_frac": overhead_frac,
         },
         "speedup": speedup,
     }
@@ -213,6 +249,7 @@ def main():
                 "psnr_mean": float(np.mean(per_scene_psnr[n])),
                 "latency_p50_s": sc["latency_p50_s"],
                 "latency_p95_s": sc["latency_p95_s"],
+                "latency_p99_s": sc["latency_p99_s"],
             }
         # the acceptance ratio: a scene's render-rate FPS (views / time
         # spent rendering THAT scene's flush groups) vs the single-scene
@@ -229,6 +266,7 @@ def main():
             "per_scene": per_scene,
             "fps_render_per_scene_vs_single_ratio": ratios,
             "evictions": ms["evictions"], "revivals": ms["revivals"],
+            "timeouts": ms["timeouts"],
         }
         report["multi_scene"] = multi
 
@@ -248,6 +286,11 @@ def main():
         if es["dropped_pairs"] > 0 and es["pair_budget_resizes"] == 0:
             failures.append(f"{es['dropped_pairs']} ray-cube pairs dropped "
                             "and the adaptive budget never grew")
+        if overhead_frac > 0.02:
+            failures.append(
+                f"instrumentation overhead {overhead_frac * 100:.1f}% "
+                f"FPS >= 2% (traced {fps_traced:.3f} vs untraced "
+                f"{fps_plain:.3f})")
         if multi is not None:
             for n, ratio in \
                     multi["fps_render_per_scene_vs_single_ratio"].items():
@@ -260,7 +303,8 @@ def main():
             sys.exit(1)
         msg = (f"CHECK OK: {speedup:.2f}x FPS over the sequential loop at "
                f"PSNR parity ({np.mean(bat_psnr):.2f} vs "
-               f"{np.mean(seq_psnr):.2f} dB)")
+               f"{np.mean(seq_psnr):.2f} dB); tracing overhead "
+               f"{overhead_frac * 100:.1f}% FPS")
         if multi is not None:
             worst = min(
                 multi["fps_render_per_scene_vs_single_ratio"].values())

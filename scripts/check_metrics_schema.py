@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Validate a `repro.obs/v1` metrics snapshot (CI metrics-smoke gate).
+
+Checks the JSON envelope produced by `serve --metrics-dump` or the
+`/metrics.json` endpoint against the schema contract documented in
+docs/observability.md:
+
+  * envelope: `schema == "repro.obs/v1"`, numeric `ts_unix_s`, a
+    `metrics` object with `counters` / `gauges` / `histograms` maps;
+  * every counter/gauge snapshot has a numeric `value` (counters >= 0);
+  * every histogram snapshot has integer `count`/`window_len`/`maxlen`,
+    numeric `sum`/`max`/`last`/`mean`/`p50`/`p95`/`p99`, with
+    `window_len <= min(count, maxlen)` and `p50 <= p95 <= p99 <= max`
+    (when the window is non-empty);
+  * flat names parse as `name` or `name{k=v,...}`.
+
+`--expect-counter NAME` / `--expect-histogram NAME` (repeatable) assert a
+metric of that base name exists — CI uses them to pin the serving-stack
+names (engine_views_served, request_stage_s, ...) so a rename cannot land
+without updating the docs and this gate. Exits non-zero with a pointed
+message on the first violation.
+
+    python scripts/check_metrics_schema.py /tmp/obs.json \
+        --expect-counter engine_views_served \
+        --expect-histogram engine_latency_s
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+FLAT = re.compile(r"^[A-Za-z_:][A-Za-z0-9_:.]*(\{[^{}]*\})?$")
+
+
+def fail(msg: str):
+    sys.exit(f"metrics schema violation: {msg}")
+
+
+def base_name(flat: str) -> str:
+    return flat.split("{", 1)[0]
+
+
+def need_num(obj, key, where, *, integer=False):
+    v = obj.get(key)
+    ok = isinstance(v, int) if integer \
+        else isinstance(v, (int, float)) and not isinstance(v, bool)
+    if not ok:
+        fail(f"{where}: '{key}' must be {'an integer' if integer else 'a number'}, got {v!r}")
+    return v
+
+
+def check(snap, expect_counters, expect_histograms):
+    if snap.get("schema") != "repro.obs/v1":
+        fail(f"schema must be 'repro.obs/v1', got {snap.get('schema')!r}")
+    need_num(snap, "ts_unix_s", "envelope")
+    metrics = snap.get("metrics")
+    if not isinstance(metrics, dict):
+        fail("'metrics' must be an object")
+    for kind in ("counters", "gauges", "histograms"):
+        if not isinstance(metrics.get(kind), dict):
+            fail(f"metrics.{kind} must be an object")
+
+    for kind in ("counters", "gauges"):
+        for flat, m in metrics[kind].items():
+            if not FLAT.match(flat):
+                fail(f"{kind} name {flat!r} does not parse")
+            v = need_num(m, "value", f"{kind}[{flat}]")
+            if kind == "counters" and v < 0:
+                fail(f"counters[{flat}]: negative value {v}")
+
+    for flat, h in metrics["histograms"].items():
+        where = f"histograms[{flat}]"
+        if not FLAT.match(flat):
+            fail(f"histogram name {flat!r} does not parse")
+        count = need_num(h, "count", where, integer=True)
+        wlen = need_num(h, "window_len", where, integer=True)
+        maxlen = need_num(h, "maxlen", where, integer=True)
+        for k in ("sum", "max", "last", "mean", "p50", "p95", "p99"):
+            need_num(h, k, where)
+        if wlen > maxlen:
+            fail(f"{where}: window_len {wlen} > maxlen {maxlen}")
+        if wlen > count:
+            fail(f"{where}: window_len {wlen} > all-time count {count}")
+        if wlen > 0 and not (h["p50"] <= h["p95"] <= h["p99"]
+                             <= h["max"] + 1e-9):
+            fail(f"{where}: percentiles not ordered "
+                 f"(p50={h['p50']} p95={h['p95']} p99={h['p99']} "
+                 f"max={h['max']})")
+
+    counters = {base_name(f) for f in metrics["counters"]}
+    hists = {base_name(f) for f in metrics["histograms"]}
+    for name in expect_counters:
+        if name not in counters:
+            fail(f"expected counter '{name}' missing "
+                 f"(have: {sorted(counters)})")
+    for name in expect_histograms:
+        if name not in hists:
+            fail(f"expected histogram '{name}' missing "
+                 f"(have: {sorted(hists)})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshot", help="snapshot JSON path, or '-' for stdin")
+    ap.add_argument("--expect-counter", action="append", default=[],
+                    metavar="NAME", help="require a counter of this base "
+                    "name (repeatable)")
+    ap.add_argument("--expect-histogram", action="append", default=[],
+                    metavar="NAME", help="require a histogram of this base "
+                    "name (repeatable)")
+    args = ap.parse_args()
+    if args.snapshot == "-":
+        snap = json.load(sys.stdin)
+    else:
+        with open(args.snapshot) as f:
+            snap = json.load(f)
+    check(snap, args.expect_counter, args.expect_histogram)
+    n = sum(len(snap["metrics"][k]) for k in ("counters", "gauges",
+                                              "histograms"))
+    print(f"ok: repro.obs/v1 snapshot with {n} metrics "
+          f"({len(snap['metrics']['histograms'])} histograms)")
+
+
+if __name__ == "__main__":
+    main()

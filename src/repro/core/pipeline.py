@@ -322,66 +322,78 @@ def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
         n_pairs = chunk * n_rays
         budget = min(pair_budget or max(n_pairs // 4, 128), n_pairs)
 
+        # named_scope markers (zero runtime cost) tag the HLO so XLA
+        # profiler captures (serve --profile-dir) line up with the host-side
+        # span stages in repro/obs/tracing.py (see docs/observability.md)
         def body(carry, xs):
             log_t, color, processed, dropped, pairs_max = carry
             ctr, vld = xs                                 # (chunk,3),(chunk,)
 
             # Step 2-1-d: line-slab intersection of every ray with each cube
-            safe_d = jnp.where(jnp.abs(rays_d) < 1e-9, 1e-9, rays_d)
-            ta = (ctr[:, None] - half - rays_o[None]) / safe_d[None]
-            tb = (ctr[:, None] + half - rays_o[None]) / safe_d[None]
-            t0 = jnp.max(jnp.minimum(ta, tb), axis=-1)    # (chunk,N)
-            t1 = jnp.min(jnp.maximum(ta, tb), axis=-1)
-            alive = jnp.exp(log_t) > cfg.term_eps         # (N,)
-            # t1 > near: cubes behind the camera / inside the near plane
-            # yield no samples and must not consume pair-budget slots
-            hit = (t1 > t0) & (t1 > cfg.near) & vld[:, None] & alive[None]
-            t0 = jnp.maximum(t0, cfg.near)
+            with jax.named_scope("rtnerf.intersect"):
+                safe_d = jnp.where(jnp.abs(rays_d) < 1e-9, 1e-9, rays_d)
+                ta = (ctr[:, None] - half - rays_o[None]) / safe_d[None]
+                tb = (ctr[:, None] + half - rays_o[None]) / safe_d[None]
+                t0 = jnp.max(jnp.minimum(ta, tb), axis=-1)  # (chunk,N)
+                t1 = jnp.min(jnp.maximum(ta, tb), axis=-1)
+                alive = jnp.exp(log_t) > cfg.term_eps       # (N,)
+                # t1 > near: cubes behind the camera / inside the near plane
+                # yield no samples and must not consume pair-budget slots
+                hit = (t1 > t0) & (t1 > cfg.near) & vld[:, None] & alive[None]
+                t0 = jnp.maximum(t0, cfg.near)
 
             # active-pair compaction: hitting pairs first (stable), cut to
             # the static budget, evaluate the field only there
-            flat_hit = hit.reshape(-1)                    # (chunk*N,)
-            idx = jnp.argsort(~flat_hit)[:budget]         # hits lead
-            sel = flat_hit[idx]                           # (budget,)
-            ray_i = idx % n_rays
-            t0s = t0.reshape(-1)[idx]
-            t1s = t1.reshape(-1)[idx]
-            ro_s = rays_o[ray_i]
-            rd_s = rays_d[ray_i]
+            with jax.named_scope("rtnerf.compact"):
+                flat_hit = hit.reshape(-1)                # (chunk*N,)
+                idx = jnp.argsort(~flat_hit)[:budget]     # hits lead
+                sel = flat_hit[idx]                       # (budget,)
+                ray_i = idx % n_rays
+                t0s = t0.reshape(-1)[idx]
+                t1s = t1.reshape(-1)[idx]
+                ro_s = rays_o[ray_i]
+                rd_s = rays_d[ray_i]
 
-            ts = t0s[:, None] + (jnp.arange(ns)[None] + 0.5) * delta
-            s_mask = sel[:, None] & (ts < t1s[:, None])   # (budget,ns)
-            pts = ro_s[:, None] + rd_s[:, None] * ts[..., None]
-            flat = pts.reshape(-1, 3)
-            # points grouped by chunk-local cube (idx // n_rays) so encoded
-            # fields stream per-cube factor windows through the fused kernel;
-            # non-selected pairs land out-of-window and are masked below
-            cube_i = (idx // n_rays).astype(jnp.int32)
-            cid = jnp.broadcast_to(cube_i[:, None], s_mask.shape).reshape(-1)
-            sigma, feats = f.sigma_app(flat, ctr, cid)
-            sigma = jnp.where(s_mask, sigma.reshape(s_mask.shape), 0.0)
-            dirs = jnp.broadcast_to(rd_s[:, None], pts.shape).reshape(-1, 3)
-            rgb = f.color(feats, dirs).reshape(*s_mask.shape, 3)
+                ts = t0s[:, None] + (jnp.arange(ns)[None] + 0.5) * delta
+                s_mask = sel[:, None] & (ts < t1s[:, None])  # (budget,ns)
+                pts = ro_s[:, None] + rd_s[:, None] * ts[..., None]
+                flat = pts.reshape(-1, 3)
+                # points grouped by chunk-local cube (idx // n_rays) so
+                # encoded fields stream per-cube factor windows through the
+                # fused kernel; non-selected pairs land out-of-window and
+                # are masked below
+                cube_i = (idx // n_rays).astype(jnp.int32)
+                cid = jnp.broadcast_to(cube_i[:, None],
+                                       s_mask.shape).reshape(-1)
+            with jax.named_scope("rtnerf.field_eval"):
+                sigma, feats = f.sigma_app(flat, ctr, cid)
+                sigma = jnp.where(s_mask, sigma.reshape(s_mask.shape), 0.0)
+                dirs = jnp.broadcast_to(rd_s[:, None],
+                                        pts.shape).reshape(-1, 3)
+                rgb = f.color(feats, dirs).reshape(*s_mask.shape, 3)
 
             # per-pair local compositing along the segment
-            tau = sigma * delta
-            cum = jnp.cumsum(tau, axis=-1)
-            t_local = jnp.exp(-(cum - tau))
-            alpha = 1.0 - jnp.exp(-tau)
-            w = t_local * alpha
-            seg_rgb = jnp.sum(w[..., None] * rgb, axis=-2)  # (budget,3)
-            seg_tau = jnp.where(sel, cum[..., -1], 0.0)     # (budget,)
+            with jax.named_scope("rtnerf.composite"):
+                tau = sigma * delta
+                cum = jnp.cumsum(tau, axis=-1)
+                t_local = jnp.exp(-(cum - tau))
+                alpha = 1.0 - jnp.exp(-tau)
+                w = t_local * alpha
+                seg_rgb = jnp.sum(w[..., None] * rgb, axis=-2)  # (budget,3)
+                seg_tau = jnp.where(sel, cum[..., -1], 0.0)     # (budget,)
 
             # scatter into the per-ray accumulators (pre-chunk T, exactly
             # the image path's chunk>1 approximation)
-            t_here = jnp.exp(log_t)[ray_i]
-            contrib = jnp.where(sel[:, None], t_here[:, None] * seg_rgb, 0.0)
-            color = color.at[ray_i].add(contrib)
-            log_t = log_t.at[ray_i].add(-seg_tau)
-            processed = processed + jnp.sum(s_mask.astype(jnp.float32))
-            n_hit = jnp.sum(flat_hit.astype(jnp.int32))
-            dropped = dropped + jnp.maximum(n_hit - budget, 0)
-            pairs_max = jnp.maximum(pairs_max, n_hit)
+            with jax.named_scope("rtnerf.scatter"):
+                t_here = jnp.exp(log_t)[ray_i]
+                contrib = jnp.where(sel[:, None],
+                                    t_here[:, None] * seg_rgb, 0.0)
+                color = color.at[ray_i].add(contrib)
+                log_t = log_t.at[ray_i].add(-seg_tau)
+                processed = processed + jnp.sum(s_mask.astype(jnp.float32))
+                n_hit = jnp.sum(flat_hit.astype(jnp.int32))
+                dropped = dropped + jnp.maximum(n_hit - budget, 0)
+                pairs_max = jnp.maximum(pairs_max, n_hit)
             return (log_t, color, processed, dropped, pairs_max), None
 
         xs = (centers.reshape(n_chunks, chunk, 3),
@@ -430,26 +442,28 @@ def render_rtnerf(field, cfg: NeRFConfig, cubes: CubeSet, cam: Camera, *,
         log_t, color, processed = carry
         ctr, vld = xs                                     # (chunk,3),(chunk,)
 
-        def per_cube(c):
-            return _cube_samples(cfg, cam, c, tile, intersect)
-        pix_id, d, pts, ts, s_mask = jax.vmap(per_cube)(ctr)
-        s_mask = s_mask & vld[:, None, None]
-        P = pix_id.shape[1]
+        with jax.named_scope("rtnerf.intersect"):
+            def per_cube(c):
+                return _cube_samples(cfg, cam, c, tile, intersect)
+            pix_id, d, pts, ts, s_mask = jax.vmap(per_cube)(ctr)
+            s_mask = s_mask & vld[:, None, None]
+            P = pix_id.shape[1]
 
-        # Sec. 3.2 early termination: skip points on rays already opaque
-        t_here = jnp.exp(log_t.reshape(-1)[pix_id])       # (chunk,P)
-        alive = t_here > cfg.term_eps
-        s_mask = s_mask & alive[..., None]
+            # Sec. 3.2 early termination: skip points on rays already opaque
+            t_here = jnp.exp(log_t.reshape(-1)[pix_id])   # (chunk,P)
+            alive = t_here > cfg.term_eps
+            s_mask = s_mask & alive[..., None]
 
-        flat = pts.reshape(-1, 3)
-        # points grouped by their source cube for the fused streaming path
-        cid = jnp.broadcast_to(
-            jnp.arange(ctr.shape[0], dtype=jnp.int32)[:, None, None],
-            s_mask.shape).reshape(-1)
-        sigma, feats = f.sigma_app(flat, ctr, cid)
-        sigma = jnp.where(s_mask, sigma.reshape(s_mask.shape), 0.0)
-        dirs = jnp.broadcast_to(d[:, :, None], pts.shape).reshape(-1, 3)
-        rgb = f.color(feats, dirs).reshape(*s_mask.shape, 3)
+            flat = pts.reshape(-1, 3)
+            # points grouped by source cube for the fused streaming path
+            cid = jnp.broadcast_to(
+                jnp.arange(ctr.shape[0], dtype=jnp.int32)[:, None, None],
+                s_mask.shape).reshape(-1)
+        with jax.named_scope("rtnerf.field_eval"):
+            sigma, feats = f.sigma_app(flat, ctr, cid)
+            sigma = jnp.where(s_mask, sigma.reshape(s_mask.shape), 0.0)
+            dirs = jnp.broadcast_to(d[:, :, None], pts.shape).reshape(-1, 3)
+            rgb = f.color(feats, dirs).reshape(*s_mask.shape, 3)
 
         # per-(cube,pixel) local compositing along the segment
         tau = sigma * delta                               # (chunk,P,ns)

@@ -159,6 +159,9 @@ def _eval(groups, basis, ptsg, base, cid, *, grid_res: int, window: int,
     n = ptsg.shape[0]
     ii = jnp.arange(W, dtype=jnp.int32)
 
+    # jax.named_scope markers (trace-time only, zero runtime cost) tag the
+    # decode / sample / accumulate phases in the HLO so XLA profiler
+    # captures line up with the serving spans (docs/observability.md)
     # per-point global stencil — identical arithmetic to the dense path:
     # clip to the grid, floor to the low corner, fractional weights; then
     # shift into window-local coords (clipped: out-of-window points are
@@ -184,38 +187,41 @@ def _eval(groups, basis, ptsg, base, cid, *, grid_res: int, window: int,
         # decoded into ONE (Rs+Rc, ...) block and sampled together —
         # halving the gather count versus evaluating the heads separately
         # (the structural win over the dense two-head baseline).
-        pcols = ((base[:, a, None, None] + ii[None, :, None]) * G
-                 + base[:, b, None, None] + ii[None, None, :]).reshape(-1)
-        pw = jnp.concatenate([
-            _decode_cols(spf, spa, pcols, searchsorted=searchsorted),
-            _decode_cols(apf, apa, pcols, searchsorted=searchsorted),
-        ]).T                                             # (C*W*W, Rs+Rc)
-        lcols = (base[:, ax, None] + ii[None, :]).reshape(-1)
-        lw = jnp.concatenate([
-            _decode_cols(slf, sla, lcols, searchsorted=searchsorted),
-            _decode_cols(alf, ala, lcols, searchsorted=searchsorted),
-        ]).T                                             # (C*W, Rs+Rc)
+        with jax.named_scope(f"fused.decode.m{m}"):
+            pcols = ((base[:, a, None, None] + ii[None, :, None]) * G
+                     + base[:, b, None, None]
+                     + ii[None, None, :]).reshape(-1)
+            pw = jnp.concatenate([
+                _decode_cols(spf, spa, pcols, searchsorted=searchsorted),
+                _decode_cols(apf, apa, pcols, searchsorted=searchsorted),
+            ]).T                                         # (C*W*W, Rs+Rc)
+            lcols = (base[:, ax, None] + ii[None, :]).reshape(-1)
+            lw = jnp.concatenate([
+                _decode_cols(slf, sla, lcols, searchsorted=searchsorted),
+                _decode_cols(alf, ala, lcols, searchsorted=searchsorted),
+            ]).T                                         # (C*W, Rs+Rc)
 
         # 2. sample — bilinear on the plane window, linear on the line.
         # Windows are transposed to (cells, R) BEFORE the gathers so each
         # of the N stencil reads pulls one contiguous R-length row —
         # row-gathers on the small window are the cheap orientation;
         # column-gathers (stride R) measured ~5x slower on CPU.
-        lu, lv, lx = loc[:, a], loc[:, b], loc[:, ax]
-        fu = fr[:, a, None]
-        fv = fr[:, b, None]
-        fx = fr[:, ax, None]
-        i00 = (cid * W + lu) * W + lv
-        p00 = jnp.take(pw, i00, axis=0)                  # (N, Rs+Rc)
-        p01 = jnp.take(pw, i00 + 1, axis=0)
-        p10 = jnp.take(pw, i00 + W, axis=0)
-        p11 = jnp.take(pw, i00 + W + 1, axis=0)
-        pm = (p00 * (1 - fu) * (1 - fv) + p01 * (1 - fu) * fv
-              + p10 * fu * (1 - fv) + p11 * fu * fv)
-        il = cid * W + lx
-        lm = (jnp.take(lw, il, axis=0) * (1 - fx)
-              + jnp.take(lw, il + 1, axis=0) * fx)
-        comp = pm * lm                                   # (N, Rs+Rc)
+        with jax.named_scope(f"fused.sample.m{m}"):
+            lu, lv, lx = loc[:, a], loc[:, b], loc[:, ax]
+            fu = fr[:, a, None]
+            fv = fr[:, b, None]
+            fx = fr[:, ax, None]
+            i00 = (cid * W + lu) * W + lv
+            p00 = jnp.take(pw, i00, axis=0)              # (N, Rs+Rc)
+            p01 = jnp.take(pw, i00 + 1, axis=0)
+            p10 = jnp.take(pw, i00 + W, axis=0)
+            p11 = jnp.take(pw, i00 + W + 1, axis=0)
+            pm = (p00 * (1 - fu) * (1 - fv) + p01 * (1 - fu) * fv
+                  + p10 * fu * (1 - fv) + p11 * fu * fv)
+            il = cid * W + lx
+            lm = (jnp.take(lw, il, axis=0) * (1 - fx)
+                  + jnp.take(lw, il + 1, axis=0) * fx)
+            comp = pm * lm                               # (N, Rs+Rc)
 
         # 3. accumulate — ONE matmul folds both heads: the basis slice is
         # extended with a leading ones-column over the sigma rows, so
@@ -223,14 +229,17 @@ def _eval(groups, basis, ptsg, base, cid, *, grid_res: int, window: int,
         # basis-projected features. Slicing comp into two consumers
         # instead (sum + matmul) makes XLA CPU re-evaluate the whole
         # gather fusion per consumer — measured 6x slower.
-        bm = basis[m * Rc:(m + 1) * Rc]                  # (Rc, app_dim)
-        bext = jnp.concatenate([
-            jnp.concatenate([jnp.ones((Rs, 1), jnp.float32),
-                             jnp.zeros((Rs, app_dim), jnp.float32)], axis=1),
-            jnp.concatenate([jnp.zeros((Rc, 1), jnp.float32), bm], axis=1),
-        ])                                               # (Rs+Rc, 1+app_dim)
-        out = out + jnp.dot(comp, bext,
-                            preferred_element_type=jnp.float32)
+        with jax.named_scope(f"fused.accumulate.m{m}"):
+            bm = basis[m * Rc:(m + 1) * Rc]              # (Rc, app_dim)
+            bext = jnp.concatenate([
+                jnp.concatenate(
+                    [jnp.ones((Rs, 1), jnp.float32),
+                     jnp.zeros((Rs, app_dim), jnp.float32)], axis=1),
+                jnp.concatenate(
+                    [jnp.zeros((Rc, 1), jnp.float32), bm], axis=1),
+            ])                                           # (Rs+Rc, 1+app_dim)
+            out = out + jnp.dot(comp, bext,
+                                preferred_element_type=jnp.float32)
     return out[:, 0], out[:, 1:]
 
 

@@ -95,9 +95,14 @@ def serve_nerf(args):
     refreshes its field through the store every --finetune-every steps
     while the request streams keep rendering.
     """
+    import contextlib
+    import json
+
     from repro.configs.base import mib_to_bytes
     from repro.configs.rtnerf import NeRFConfig
     from repro.data import rays as rays_lib
+    from repro.obs import (MetricsRegistry, MetricsServer, StatsReporter,
+                           snapshot_json)
     from repro.serving import FineTuneLoop, RenderEngine
 
     scenes = [s for s in args.scenes.split(",") if s] if args.scenes \
@@ -106,12 +111,43 @@ def serve_nerf(args):
                      r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
                      max_samples_per_ray=128, train_rays=1024,
                      max_resident_bytes=mib_to_bytes(args.max_resident_mb))
+
+    # the registry is created BEFORE the engine (which may train scenes for
+    # minutes) so the exposition endpoint answers scrapes from the start;
+    # the engine and every fine-tune loop record into this same registry
+    registry = MetricsRegistry()
+    holder = {"engine": None}
+
+    def _extra_stats():
+        eng = holder["engine"]
+        return eng.stats() if eng is not None else {"phase": "loading"}
+
+    mserver = None
+    if args.metrics_port is not None:
+        mserver = MetricsServer(registry, port=args.metrics_port,
+                                extra=_extra_stats)
+        print(f"[obs] metrics: http://127.0.0.1:{mserver.port}/metrics "
+              f"(Prometheus) and /metrics.json (snapshot)", flush=True)
+
     engine = RenderEngine.from_scenes(
         cfg, scenes, ckpt_root=args.ckpt_dir,
         train_steps=args.train_steps, n_views=8, image_hw=args.res,
         prune_sparsity=args.prune_sparsity, encode=not args.dense,
         ray_chunk=args.res * args.res, max_batch_views=args.views,
-        auto_flush_interval=(0.25 if args.finetune_steps else None))
+        auto_flush_interval=(0.25 if args.finetune_steps else None),
+        registry=registry)
+    holder["engine"] = engine
+
+    reporter = None
+    if args.stats_interval:
+        def _stats_line():
+            s = engine.stats()
+            return (f"[obs] views={s['views_served']} fps={s['fps']:.3f} "
+                    f"p50={s['latency_p50_s'] * 1e3:.0f}ms "
+                    f"p99={s['latency_p99_s'] * 1e3:.0f}ms "
+                    f"flushes={s['flushes']} timeouts={s['timeouts']} "
+                    f"dropped={s['dropped_pairs']} swaps={s['field_swaps']}")
+        reporter = StatsReporter(_stats_line, args.stats_interval)
     for name in scenes:
         s = engine.stats(scene=name)
         print(f"scene '{name}': {s['field_kind']}, "
@@ -138,20 +174,29 @@ def serve_nerf(args):
     gts = {name: [rays_lib.render_gt(gt_scenes[name], cam) for cam in cams]
            for name in scenes}
     rounds = 1 if not loops else max(args.finetune_rounds, 1)
-    for rnd in range(rounds):
-        futures = [(name, engine.submit(cam, gt, scene=name,
-                                        deadline_s=args.deadline))
-                   for name in scenes
-                   for cam, gt in zip(cams, gts[name])]
-        for i, (name, fut) in enumerate(futures):
-            r = fut.result()
-            if r.timed_out:
-                print(f"{name} view {i}: TIMED OUT after {r.latency_s:.2f}s")
-                continue
-            print(f"{name} view {i}: psnr={r.psnr:.2f} "
-                  f"latency={r.latency_s:.2f}s "
-                  f"occ_accesses={r.stats['occ_accesses']:.0f} "
-                  f"factor_bytes={r.stats['factor_bytes']:.0f}")
+    # --profile-dir captures an XLA device profile of the serving rounds;
+    # the jax.named_scope markers in core/pipeline.py tag the HLO so the
+    # capture lines up with the host-side request spans
+    prof = (jax.profiler.trace(args.profile_dir) if args.profile_dir
+            else contextlib.nullcontext())
+    with prof:
+        for rnd in range(rounds):
+            futures = [(name, engine.submit(cam, gt, scene=name,
+                                            deadline_s=args.deadline))
+                       for name in scenes
+                       for cam, gt in zip(cams, gts[name])]
+            for i, (name, fut) in enumerate(futures):
+                r = fut.result()
+                if r.timed_out:
+                    print(f"{name} view {i}: TIMED OUT after "
+                          f"{r.latency_s:.2f}s")
+                    continue
+                print(f"{name} view {i}: psnr={r.psnr:.2f} "
+                      f"latency={r.latency_s:.2f}s "
+                      f"occ_accesses={r.stats['occ_accesses']:.0f} "
+                      f"factor_bytes={r.stats['factor_bytes']:.0f}")
+    if args.profile_dir:
+        print(f"[obs] XLA profile written to {args.profile_dir}")
     if loops:
         for loop in loops:
             loop.join()
@@ -171,6 +216,23 @@ def serve_nerf(args):
           f"pair_budget={s['pair_budget']} "
           f"(init {s['pair_budget_initial']}, "
           f"{s['pair_budget_resizes']} resizes)")
+    br = engine.stage_breakdown()
+    if br:
+        print("stage breakdown (per request):")
+        for stage, d in br.items():
+            print(f"  {stage:>10s}  n={d['count']:4d} "
+                  f"p50={d['p50_s'] * 1e3:8.2f}ms "
+                  f"p99={d['p99_s'] * 1e3:8.2f}ms "
+                  f"total={d['total_s']:7.3f}s")
+    if args.metrics_dump:
+        snap = snapshot_json(registry, extra=s)
+        with open(args.metrics_dump, "w") as f:
+            json.dump(snap, f, indent=2)
+        print(f"[obs] metrics snapshot written to {args.metrics_dump}")
+    if reporter is not None:
+        reporter.close()
+    if mserver is not None:
+        mserver.close()
 
 
 def main():
@@ -218,6 +280,23 @@ def main():
     ap.add_argument("--prune-sparsity", type=float, default=0.0,
                     help="rtnerf only: magnitude-prune factors to this "
                          "sparsity before serving (0 = training prune only)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="rtnerf only: expose the metrics registry over "
+                         "HTTP on 127.0.0.1:<port> (/metrics Prometheus "
+                         "text, /metrics.json snapshot); 0 picks an "
+                         "ephemeral port (printed at startup)")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="rtnerf only: print a one-line serving summary "
+                         "every N seconds while serving (0 = off)")
+    ap.add_argument("--metrics-dump", default=None,
+                    help="rtnerf only: write the final metrics snapshot "
+                         "(JSON, schema repro.obs/v1) to this path on exit "
+                         "— the input of scripts/obs_report.py")
+    ap.add_argument("--profile-dir", default=None,
+                    help="rtnerf only: capture an XLA profiler trace of "
+                         "the serving rounds into this directory "
+                         "(jax.profiler.trace; named scopes from "
+                         "core/pipeline.py tag the pipeline stages)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="rtnerf only: restore trained fields from "
                          "per-scene subdirectories of this root when "

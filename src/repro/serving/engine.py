@@ -65,6 +65,8 @@ from repro.core import rendering, tensorf
 from repro.core.occupancy import CubeSet
 from repro.core.rendering import Camera
 from repro.models.sharding import make_rules
+from repro.obs import MetricsRegistry, Tracer
+from repro.obs.tracing import ViewTrace
 from repro.serving.batching import group_requests, plan_microbatches
 from repro.serving.store import SceneSnapshot, SceneStore
 
@@ -78,6 +80,8 @@ class ViewResult:
     stats: Dict[str, float]
     timed_out: bool = False         # deadline passed before render started
     scene: str = ""                 # which resident scene rendered this
+    trace: Optional[Dict] = None    # span tree (obs.ViewTrace.tree()), if
+                                    # tracing was enabled at submit
 
 
 class ViewFuture:
@@ -130,6 +134,7 @@ class _Request:                        # arrays, value-eq is ill-defined
     t_submit: float
     deadline: Optional[float] = None     # absolute perf_counter time
     scene: str = ""                      # routing key into the SceneStore
+    trace: Optional[ViewTrace] = None    # span tree; None = tracing off
 
 
 FIELD_META = "field_meta.json"
@@ -233,6 +238,8 @@ class RenderEngine:
                  auto_flush_interval: Optional[float] = None,
                  max_resident_bytes: Optional[int] = None,
                  spill_dir: Optional[str] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 trace_requests: bool = True,
                  mesh=None):
         import collections
 
@@ -251,15 +258,38 @@ class RenderEngine:
             if field is not None or cubes is not None:
                 raise ValueError(
                     "pass either store= or a (field, cubes) pair, not both")
+            if registry is not None and registry is not store.metrics:
+                raise ValueError(
+                    "registry= conflicts with store= — the engine shares "
+                    "its store's registry")
             self.store = store
         else:
             self.store = SceneStore(
                 cfg, rules=self.rules, encode=encode, order_mode=order_mode,
-                max_resident_bytes=max_resident_bytes, spill_dir=spill_dir)
+                max_resident_bytes=max_resident_bytes, spill_dir=spill_dir,
+                registry=registry)
             if field is not None:
                 self.store.register(scene_name, field, cubes)
             elif cubes is not None:
                 raise ValueError("cubes given without a field")
+
+        # ONE registry for the whole serving stack of this store: engine
+        # totals, per-scene records, fine-tune loops, and request-stage
+        # histograms all land here; stats() and the exposition endpoints
+        # (serve --metrics-port) read it. trace_requests=False disables
+        # span tracing only — the self-overhead toggle the serving
+        # benchmark gates; metrics counters always run.
+        self.metrics = self.store.metrics
+        self.tracer = Tracer(self.metrics, enabled=trace_requests)
+        m = self.metrics
+        self._m_views = m.counter("engine_views_served")
+        self._m_flushes = m.counter("engine_flushes")
+        self._m_render_s = m.counter("engine_render_s")
+        self._m_dropped = m.counter("engine_dropped_pairs")
+        self._m_timeouts = m.counter("engine_timeouts")
+        self._m_latency = m.histogram("engine_latency_s", maxlen=65536)
+        self._g_queue = m.gauge("engine_queue_depth")
+        self._g_budget = m.gauge("engine_pair_budget")
 
         # ONE jitted step shared by every scene; the field is a pytree
         # argument, so swapped fields — and different scenes — with the
@@ -277,6 +307,7 @@ class RenderEngine:
         self._pair_window = collections.deque(maxlen=8)
         self._low_occ_streak = 0
         self._pair_occupancy_last = 0.0
+        self._g_budget.set(self._pair_budget)
         self._build_render()
 
         # _lock guards queue / stats / budget; renders run OUTSIDE it
@@ -288,15 +319,6 @@ class RenderEngine:
 
         self._queue: List[_Request] = []
         self._next_id = 0
-        # bounded window: percentiles cover the recent 64k views, while
-        # views_served counts everything — per-request state must not
-        # grow for the life of a long-running service
-        self._latencies = collections.deque(maxlen=65536)
-        self._render_s_total = 0.0
-        self._views_served = 0
-        self._flushes = 0
-        self._dropped_pairs = 0
-        self._timeouts = 0
 
         self._flusher: Optional[threading.Thread] = None
         self._flusher_stop = threading.Event()
@@ -311,6 +333,20 @@ class RenderEngine:
         self._render = jax.jit(rt_pipe.make_ray_renderer(
             self.cfg, chunk=self.cube_chunk,
             pair_budget=self._pair_budget))
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def _latencies(self) -> np.ndarray:
+        """The recent-latency window (compat view over the registry
+        histogram the old deque became)."""
+        return self._m_latency.window()
+
+    def set_tracing(self, enabled: bool):
+        """Toggle per-request span tracing (metrics counters always run).
+        Requests already queued keep the tracing mode they were submitted
+        under; the serving benchmark's self-overhead gate flips this."""
+        self.tracer.enabled = bool(enabled)
 
     # -- scene routing -----------------------------------------------------
 
@@ -505,9 +541,14 @@ class RenderEngine:
         with self._lock:
             fut = ViewFuture(self, self._next_id)
             now = time.perf_counter()
+            trace = self.tracer.start(self._next_id, key, t_submit=now)
             deadline = None if deadline_s is None else now + deadline_s
-            self._queue.append(_Request(cam, gt, fut, now, deadline, key))
+            self._queue.append(
+                _Request(cam, gt, fut, now, deadline, key, trace))
             self._next_id += 1
+            self._g_queue.set(len(self._queue))
+            if trace is not None:
+                trace.add("submit", now, time.perf_counter())
             full = len(self._queue) >= self.max_batch_views
             if full and self._auto_flush_on():
                 self._flush_cv.notify()
@@ -530,6 +571,7 @@ class RenderEngine:
                 if not self._queue:
                     return []
                 reqs, self._queue = self._queue, []
+                self._g_queue.set(0)
                 render_fn = self._render
                 budget = self._pair_budget
             try:
@@ -560,14 +602,23 @@ class RenderEngine:
         # deadline pass: fail expired requests now, render the rest.
         # Stats commit BEFORE each future's event fires, so a waiter that
         # wakes on resolution always sees them reflected in stats().
+        # Every request's queue span closes here — the flush that claimed
+        # it ends its time-in-queue, rendered or expired alike.
         live: List[_Request] = []
         for r in reqs:
+            if r.trace is not None:
+                r.trace.add("queue", r.t_submit, t0)
             if r.deadline is not None and t0 > r.deadline:
+                trace_tree = None
+                if r.trace is not None:
+                    r.trace.add("deliver", t0, t0, timed_out=True)
+                    self.tracer.finish(r.trace, t_done=t0)
+                    trace_tree = r.trace.tree()
                 res = ViewResult(view_id=r.future._view_id, img=None,
                                  psnr=None, latency_s=t0 - r.t_submit,
-                                 stats={}, timed_out=True, scene=r.scene)
-                with self._lock:
-                    self._timeouts += 1
+                                 stats={}, timed_out=True, scene=r.scene,
+                                 trace=trace_tree)
+                self._m_timeouts.inc()
                 r.future._set(res)
                 results.append(res)
             else:
@@ -575,9 +626,15 @@ class RenderEngine:
         if not live:
             return results
 
+        tg = time.perf_counter()
         groups = group_requests(
             live, lambda r: (r.scene, snaps[r.scene].ordering.key_for(
                 r.cam.origin)))
+        tg1 = time.perf_counter()
+        for r in live:
+            if r.trace is not None:
+                r.trace.add("group", tg, tg1, n_groups=len(groups),
+                            batch_views=len(live))
 
         flush_pairs = [0, 0]    # [max active pairs, successful render calls]
         flush_dropped = [0]
@@ -587,8 +644,8 @@ class RenderEngine:
         finally:
             # time spent counts even when a later group's render raised
             with self._lock:
-                self._render_s_total += time.perf_counter() - t0
-                self._flushes += 1
+                self._m_render_s.inc(time.perf_counter() - t0)
+                self._m_flushes.inc()
                 # zero active pairs is a valid (minimum) occupancy
                 # observation — only flushes where no render completed
                 # (failure before the first aux) are skipped
@@ -604,16 +661,31 @@ class RenderEngine:
         for (scene, _okey), reqs_g in groups.items():
             snap = snaps[scene]
             ordering = snap.ordering
+            traces = [r.trace for r in reqs_g if r.trace is not None]
+
+            def span_all(name, t0, t1, **attrs):
+                # group-level stages are shared intervals: each member
+                # request spent exactly [t0, t1] in this stage
+                for tr in traces:
+                    tr.add(name, t0, t1, **attrs)
+
             tg0 = time.perf_counter()
             for r in reqs_g:                      # one cache access per view
                 centers, valid = ordering.get_ordered(r.cam.origin)
+            t_ord = time.perf_counter()
+            span_all("ordering", tg0, t_ord,
+                     cache_entries=len(ordering._entries))
             batches = []
             for r in reqs_g:
                 o, d = rendering.camera_rays(r.cam)
                 batches.append((np.asarray(o), np.asarray(d)))
             plan = plan_microbatches(batches, self.ray_chunk)
+            t_plan = time.perf_counter()
+            span_all("compaction", t_ord, t_plan, n_chunks=plan.n_chunks,
+                     rays=plan.total)
             outs = []
             group_dropped = 0
+            group_pairs_max = 0
             for i in range(plan.n_chunks):
                 ro, rd = distributed.shard_rays(
                     self.rules, jnp.asarray(plan.rays_o[i]),
@@ -621,12 +693,20 @@ class RenderEngine:
                 rgb, aux = render_fn(snap.field, centers, valid, ro, rd)
                 outs.append(np.asarray(rgb))
                 group_dropped += int(aux["dropped_pairs"])
-                flush_pairs[0] = max(flush_pairs[0],
-                                     int(aux["active_pairs_max"]))
+                group_pairs_max = max(group_pairs_max,
+                                      int(aux["active_pairs_max"]))
                 flush_pairs[1] += 1
+            flush_pairs[0] = max(flush_pairs[0], group_pairs_max)
             flush_dropped[0] += group_dropped
             imgs = plan.scatter(outs)
             t_done = time.perf_counter()
+            # the render span covers the jitted steps AND the host
+            # transfer (np.asarray blocks on the device); dispatch_path
+            # separates fused / fused_ref / per-op / dense time
+            span_all("render", t_plan, t_done,
+                     dispatch_path=snap.field.dispatch_path(),
+                     n_chunks=plan.n_chunks, dropped_pairs=group_dropped,
+                     active_pairs_max=group_pairs_max)
             group: List[tuple] = []
             for r, img in zip(reqs_g, imgs):
                 psnr = None
@@ -645,15 +725,20 @@ class RenderEngine:
             # resolve its futures — a render failure in a later group
             # leaves this group counted and resolved, unrendered groups
             # uncounted (they requeue)
-            with self._lock:
-                self._dropped_pairs += group_dropped
-                for _, res in group:
-                    self._latencies.append(res.latency_s)
-                    self._views_served += 1
+            self._m_dropped.inc(group_dropped)
+            for _, res in group:
+                self._m_latency.record(res.latency_s)
+                self._m_views.inc()
             self.store.note_served(scene,
                                    [res.latency_s for _, res in group],
                                    time.perf_counter() - tg0)
             for r, res in group:
+                if r.trace is not None:
+                    t_del = time.perf_counter()
+                    r.trace.add("deliver", t_done, t_del,
+                                psnr=res.psnr)
+                    self.tracer.finish(r.trace, t_done=t_del)
+                    res.trace = r.trace.tree()
                 results.append(res)
                 r.future._set(res)
 
@@ -689,6 +774,7 @@ class RenderEngine:
         if new is not None and new != budget:
             self._pair_budget = new
             self._budget_resizes += 1
+            self._g_budget.set(new)
             self._build_render()
 
     def render_views(self, cams, gts=None, *,
@@ -703,26 +789,26 @@ class RenderEngine:
 
     def stats(self, scene: Optional[str] = None) -> Dict:
         """stats() aggregates across scenes (single-scene keys unchanged
-        from the pre-store engine, computed over the default scene where a
-        single scene's identity matters — field_kind, factor bytes);
+        from the pre-store engine — every key now sourced from the shared
+        metrics registry, computed over the default scene where a single
+        scene's identity matters — field_kind, factor bytes);
         stats(scene="lego") itemises one scene."""
         if scene is not None:
             return self.store.stats(scene)
         with self._lock:
-            lat = np.asarray(self._latencies, np.float64)
+            views = int(self._m_views.value)
+            render_s = self._m_render_s.value
             out = {
-                "views_served": self._views_served,
-                "flushes": self._flushes,
-                "fps": (self._views_served / self._render_s_total
-                        if self._render_s_total > 0 else 0.0),
-                "render_s_total": self._render_s_total,
-                "latency_p50_s": (float(np.percentile(lat, 50))
-                                  if lat.size else 0.0),
-                "latency_p95_s": (float(np.percentile(lat, 95))
-                                  if lat.size else 0.0),
-                "latency_mean_s": float(lat.mean()) if lat.size else 0.0,
-                "dropped_pairs": self._dropped_pairs,
-                "timeouts": self._timeouts,
+                "views_served": views,
+                "flushes": int(self._m_flushes.value),
+                "fps": views / render_s if render_s > 0 else 0.0,
+                "render_s_total": render_s,
+                "latency_p50_s": self._m_latency.percentile(50),
+                "latency_p95_s": self._m_latency.percentile(95),
+                "latency_p99_s": self._m_latency.percentile(99),
+                "latency_mean_s": self._m_latency.mean(),
+                "dropped_pairs": int(self._m_dropped.value),
+                "timeouts": int(self._m_timeouts.value),
                 "pair_budget": self._pair_budget,
                 "pair_budget_initial": self.pair_budget_initial,
                 "pair_budget_resizes": self._budget_resizes,
@@ -767,4 +853,23 @@ class RenderEngine:
                 "compression_ratio": d["compression_ratio"],
                 "field_kind": d["field_kind"],
             })
+        return out
+
+    def stage_breakdown(self) -> Dict[str, Dict[str, float]]:
+        """Trace-derived per-stage latency table (canonical stage order):
+        stage -> {count, p50_s, p95_s, p99_s, mean_s, total_s}, read from
+        the `request_stage_s{stage=...}` histograms the tracer folds every
+        finished request into. Benchmarks record this as their
+        stage-breakdown columns; `scripts/obs_report.py` renders it from
+        an exposition snapshot instead."""
+        from repro.obs.tracing import STAGES
+
+        out = {}
+        for st in STAGES:
+            h = self.metrics.histogram("request_stage_s", stage=st)
+            if h.count:
+                out[st] = {"count": h.count, "p50_s": h.percentile(50),
+                           "p95_s": h.percentile(95),
+                           "p99_s": h.percentile(99), "mean_s": h.mean(),
+                           "total_s": h.sum}
         return out

@@ -94,6 +94,13 @@ class FineTuneLoop:
         self.steps = int(steps)
         self.publish_every = max(int(publish_every), 1)
         self.verbose = bool(verbose)
+        # telemetry lands in the store's shared registry (the same one the
+        # engine and exposition read), labelled by the published scene
+        m = store.metrics
+        self._m_steps = m.counter("finetune_steps", scene=scene)
+        self._m_publish_s = m.histogram("finetune_publish_s", maxlen=256,
+                                        scene=scene)
+        self._g_train_psnr = m.gauge("finetune_train_psnr", scene=scene)
         if start_field is None:
             start_field = store.get_field(scene)   # revives if evicted
         elif start_field == "init":
@@ -166,6 +173,8 @@ class FineTuneLoop:
                     break
                 rec = self.trainer.step()
                 rec["t_wall"] = time.perf_counter() - self._t0
+                self._m_steps.inc()
+                self._g_train_psnr.set(rec["psnr"])
                 self.history.append(rec)
                 if (i + 1) % self.publish_every == 0 or i == self.steps - 1:
                     self._publish(rec)
@@ -179,12 +188,16 @@ class FineTuneLoop:
         eviction also runs under that lock, a publish lands either wholly
         before or wholly after any eviction of this scene (after an
         eviction it revives the scene around the refreshed field)."""
+        t_pub = time.perf_counter()
         field = self.trainer.snapshot()
         occ = occ_lib.build_occupancy(field, self.store.cfg)
         cubes = occ_lib.extract_cubes(occ, self.store.cfg)
         t0 = time.perf_counter()
         self.store.publish(self.scene, field, cubes)
         swap_s = time.perf_counter() - t0
+        # full cost of one publication (snapshot + occupancy rebuild +
+        # swap) — the store's scene_swap_latency_s records the swap alone
+        self._m_publish_s.record(time.perf_counter() - t_pub)
         self.swaps.append({"step": rec["step"], "train_psnr": rec["psnr"],
                            "swap_s": swap_s,
                            "t_wall": time.perf_counter() - self._t0})

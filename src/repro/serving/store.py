@@ -28,10 +28,18 @@ guards scene records and the LRU clock; renders never run under it — the
 engine takes per-scene snapshots (field, cubes, ordering) under the lock
 and renders outside, so an in-flight flush keeps its snapshot alive (and
 consistent) even if the scene is concurrently evicted or republished.
+
+Telemetry lives in ONE `obs.MetricsRegistry` per store (shared with the
+engine serving it and every fine-tune loop attached to it): per-scene
+counters/gauges/bounded-ring histograms replace the ad-hoc deques the
+records used to carry, `stats()` keys are computed from the registry
+bit-compatibly, and the same registry backs the JSON/Prometheus
+exposition (`serve --metrics-port`). Swap latencies are a bounded ring
+(maxlen 256) with the all-time `swap_latency_s_max` kept by the
+histogram — per-publish state never grows for the life of the service.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import os
 import tempfile
@@ -48,6 +56,7 @@ from repro.core import distributed, occupancy as occ_lib
 from repro.core import field as field_lib
 from repro.core import pipeline as rt_pipe
 from repro.core.occupancy import CubeSet
+from repro.obs import Counter, Histogram, MetricsRegistry
 
 CUBES_FILE = "cubes.npz"
 
@@ -64,9 +73,42 @@ class SceneSnapshot(NamedTuple):
 
 
 @dataclasses.dataclass(eq=False)
+class SceneMetrics:
+    """One scene's registry handles (cumulative — they survive eviction).
+
+    Latency and swap-latency are bounded-ring histograms (percentiles over
+    the recent window, all-time count/max kept by the histogram itself),
+    so per-request and per-publish state never grows for the life of a
+    long-running service; `views_served`/`swaps` count everything.
+    """
+    views_served: Counter
+    latencies: Histogram          # window 4096
+    render_s: Counter
+    swaps: Counter
+    swap_latencies: Histogram     # window 256; .max is the all-time max
+    evictions: Counter
+    revivals: Counter
+
+    @classmethod
+    def create(cls, registry: MetricsRegistry, scene: str) -> "SceneMetrics":
+        return cls(
+            views_served=registry.counter("scene_views_served", scene=scene),
+            latencies=registry.histogram("scene_latency_s", maxlen=4096,
+                                         scene=scene),
+            render_s=registry.counter("scene_render_s", scene=scene),
+            swaps=registry.counter("scene_swaps", scene=scene),
+            swap_latencies=registry.histogram("scene_swap_latency_s",
+                                              maxlen=256, scene=scene),
+            evictions=registry.counter("scene_evictions", scene=scene),
+            revivals=registry.counter("scene_revivals", scene=scene),
+        )
+
+
+@dataclasses.dataclass(eq=False)
 class SceneRecord:
-    """One named scene: resident state + counters that survive eviction."""
+    """One named scene: resident state + metrics that survive eviction."""
     name: str
+    m: SceneMetrics
     field: Optional[field_lib.FieldBackend] = None
     cubes: Optional[CubeSet] = None
     ordering: Optional[rt_pipe.OrderingCache] = None
@@ -75,20 +117,6 @@ class SceneRecord:
     resident: bool = False
     spill_path: Optional[str] = None
     last_used: int = 0
-    # -- cumulative telemetry (kept across evict/revive cycles). The two
-    # latency stores are bounded windows — a long-running service must not
-    # grow per-request state — so percentiles are over the recent window
-    # while views_served / swaps count everything.
-    views_served: int = 0
-    latencies: "collections.deque" = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=4096))
-    render_s: float = 0.0
-    swaps: int = 0
-    swap_latencies: "collections.deque" = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=256))
-    swap_latency_s_max: float = 0.0      # all-time, not windowed
-    evictions: int = 0
-    revivals: int = 0
     _ord_hits: int = 0            # ordering counters parked while evicted
     _ord_misses: int = 0
 
@@ -99,7 +127,8 @@ class SceneStore:
     def __init__(self, cfg: NeRFConfig, *, rules=None, encode: bool = True,
                  order_mode: str = "octant",
                  max_resident_bytes: Optional[int] = None,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.encode_fields = bool(encode)
         self.order_mode = order_mode
@@ -112,9 +141,26 @@ class SceneStore:
         self._lock = threading.RLock()
         self._records: Dict[str, SceneRecord] = {}
         self._clock = 0
-        self.evictions_total = 0
-        self.revivals_total = 0
-        self.last_swap_latency_s = 0.0
+        # one registry per store, shared by the engine serving it and by
+        # attached fine-tune loops — NOT the process default, so two
+        # stores in one process never bleed counters into each other
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._evictions_total = self.metrics.counter("store_evictions")
+        self._revivals_total = self.metrics.counter("store_revivals")
+        self._swap_latency_last = self.metrics.gauge(
+            "store_swap_latency_s_last")
+
+    @property
+    def evictions_total(self) -> int:
+        return int(self._evictions_total.value)
+
+    @property
+    def revivals_total(self) -> int:
+        return int(self._revivals_total.value)
+
+    @property
+    def last_swap_latency_s(self) -> float:
+        return self._swap_latency_last.value
 
     # -- infrastructure ----------------------------------------------------
 
@@ -167,7 +213,8 @@ class SceneStore:
         with self._lock:
             if name in self._records:     # lost a register-register race
                 raise taken()
-            rec = SceneRecord(name=name)
+            rec = SceneRecord(name=name,
+                              m=SceneMetrics.create(self.metrics, name))
             self._records[name] = rec
             self._install(rec, field, cubes)
             self._touch(rec)
@@ -205,11 +252,10 @@ class SceneStore:
             rec = self._get(name)
             self._install(rec, field, cubes)
             self._touch(rec)
-            rec.swaps += 1
-            rec.swap_latencies.append(time.perf_counter() - t0)
-            rec.swap_latency_s_max = max(rec.swap_latency_s_max,
-                                         rec.swap_latencies[-1])
-            self.last_swap_latency_s = rec.swap_latencies[-1]
+            swap_s = time.perf_counter() - t0
+            rec.m.swaps.inc()
+            rec.m.swap_latencies.record(swap_s)   # bounded ring, all-time max
+            self._swap_latency_last.set(swap_s)
             self._enforce_budget(protect=name)
 
     def update_cubes(self, name: str, cubes: CubeSet):
@@ -287,8 +333,8 @@ class SceneStore:
             rec.field = rec.cubes = rec.ordering = None
             rec.spill_path = path
             rec.resident = False
-            rec.evictions += 1
-            self.evictions_total += 1
+            rec.m.evictions.inc()
+            self._evictions_total.inc()
 
     def ensure_resident(self, name: str) -> SceneRecord:
         """Revive `name` from its spill checkpoint if evicted (bit-for-bit:
@@ -307,8 +353,8 @@ class SceneStore:
                 field = distributed.place_field(
                     field_lib.as_backend(field, self.cfg), self.rules)
                 self._install(rec, field, cubes)
-                rec.revivals += 1
-                self.revivals_total += 1
+                rec.m.revivals.inc()
+                self._revivals_total.inc()
                 self._touch(rec)
                 self._enforce_budget(protect=name)
             self._touch(rec)
@@ -335,28 +381,27 @@ class SceneStore:
         """Commit one flush group's serving telemetry to the scene."""
         with self._lock:
             rec = self._get(name)
-            rec.views_served += len(latencies)
-            rec.latencies.extend(latencies)
-            rec.render_s += render_s
+            rec.m.views_served.inc(len(latencies))
+            rec.m.latencies.extend(latencies)
+            rec.m.render_s.inc(render_s)
 
     # -- telemetry ---------------------------------------------------------
 
     def _scene_stats(self, rec: SceneRecord) -> Dict:
-        lat = np.asarray(rec.latencies, np.float64)
+        m = rec.m
+        views, render_s = int(m.views_served.value), m.render_s.value
         ordering = (rec.ordering.stats() if rec.ordering is not None
                     else {"hits": rec._ord_hits, "misses": rec._ord_misses,
                           "entries": 0})
         return {
             "scene": rec.name,
             "resident": rec.resident,
-            "views_served": rec.views_served,
-            "fps": (rec.views_served / rec.render_s
-                    if rec.render_s > 0 else 0.0),
-            "render_s": rec.render_s,
-            "latency_p50_s": (float(np.percentile(lat, 50))
-                              if lat.size else 0.0),
-            "latency_p95_s": (float(np.percentile(lat, 95))
-                              if lat.size else 0.0),
+            "views_served": views,
+            "fps": views / render_s if render_s > 0 else 0.0,
+            "render_s": render_s,
+            "latency_p50_s": m.latencies.percentile(50),
+            "latency_p95_s": m.latencies.percentile(95),
+            "latency_p99_s": m.latencies.percentile(99),
             "factor_bytes": float(rec.factor_bytes),
             "factor_bytes_dense": float(rec.factor_bytes_dense),
             "compression_ratio": (rec.factor_bytes_dense
@@ -364,12 +409,11 @@ class SceneStore:
             "field_kind": (rec.field.kind if rec.resident else "evicted"),
             "occ_accesses_per_view": (float(rec.cubes.count)
                                       if rec.resident else 0.0),
-            "swaps": rec.swaps,
-            "swap_latency_s_last": (rec.swap_latencies[-1]
-                                    if rec.swap_latencies else 0.0),
-            "swap_latency_s_max": rec.swap_latency_s_max,
-            "evictions": rec.evictions,
-            "revivals": rec.revivals,
+            "swaps": int(m.swaps.value),
+            "swap_latency_s_last": m.swap_latencies.last,
+            "swap_latency_s_max": m.swap_latencies.max,   # all-time
+            "evictions": int(m.evictions.value),
+            "revivals": int(m.revivals.value),
             "ordering_cache": ordering,
         }
 
