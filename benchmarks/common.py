@@ -57,6 +57,29 @@ def get_trained(scene: str, steps: int = 250, image_hw: int = 56):
     return BENCH_CFG, params, res.cubes
 
 
+def steady_state(fn, *, iters: int = 3) -> Tuple[float, float, object]:
+    """Best-of-`iters` steady-state wall-clock for a zero-arg pass.
+
+    The shared timing methodology of every BENCH family
+    (docs/benchmarks.md): call `fn` once first — that call pays jit
+    compilation / cache warmup and is reported separately as `compile_s` —
+    then report the best of `iters` further calls as the steady-state
+    time. Blocks on jax arrays in the output (pytree-aware; host-side
+    outputs pass through). Returns (best_s, compile_s, last_out).
+    """
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(max(int(iters), 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, compile_s, out
+
+
 def timeit(fn, *args, reps: int = 3, warmup: int = 1) -> float:
     """Median wall time in microseconds (blocks on jax arrays)."""
     for _ in range(warmup):

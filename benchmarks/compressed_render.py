@@ -33,13 +33,12 @@ import argparse
 import json
 import os
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-from benchmarks.common import ALL_SCENES  # noqa: E402
+from benchmarks.common import ALL_SCENES, steady_state  # noqa: E402
 
 from repro.configs.rtnerf import NeRFConfig  # noqa: E402
 from repro.core import occupancy as occ_lib  # noqa: E402
@@ -52,20 +51,12 @@ from repro.data import rays as rays_lib  # noqa: E402
 def timed_render(field, cfg: NeRFConfig, cubes, cam, *, iters: int):
     """(img, steady_s, compile_s): jit the full-view render with the field
     as the only argument (same trace-once-serve-many shape the serving
-    engine uses), pay compilation on the first call, then report the best
-    of `iters` steady-state calls."""
+    engine uses); timing via the shared best-of-iters methodology
+    (`common.steady_state` — compile paid and recorded on the first
+    call)."""
     run = jax.jit(lambda f: rt_pipe.render_rtnerf(f, cfg, cubes, cam,
                                                   chunk=8)[0])
-    t0 = time.time()
-    img = run(field)
-    img.block_until_ready()
-    compile_s = time.time() - t0
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.time()
-        img = run(field)
-        img.block_until_ready()
-        best = min(best, time.time() - t0)
+    best, compile_s, img = steady_state(lambda: run(field), iters=iters)
     return img, best, compile_s
 
 

@@ -28,11 +28,19 @@ baseline/N by construction).
 Emits BENCH_serving.json (FPS, p50/p95/p99 latency + timeout counts,
 factor bytes, a trace-derived per-stage latency table from the engine's
 request tracer, the instrumentation self-overhead, per-scene multi-scene
-table) so the perf trajectory is tracked across PRs. --check exits
-non-zero unless batched FPS >= 1.5x sequential at PSNR parity (within
-0.5 dB), tracing costs < 2% FPS (traced vs `set_tracing(False)` passes
-on the same warmed engine) — and, when >1 scene is served, unless every
-scene's FPS >= 0.7x the single-scene baseline.
+table) so the perf trajectory is tracked across PRs. Both the sequential
+and batched rows use the shared best-of-iters steady-state methodology
+(`benchmarks.common.steady_state`): the warmup/compile pass is recorded
+separately as `compile_s`, so the FPS ratio excludes compile on both
+sides. A repeated-view segment re-serves the same cameras and records
+the ordering-cache counters across it (`repeat` +
+`ordering_cache_after_repeat`), so schedule reuse is exercised — not
+perpetually 0 — on every benchmark run. --check exits non-zero unless
+batched FPS >= 1.5x sequential at PSNR parity (within 0.5 dB), tracing
+costs < 2% FPS (traced vs `set_tracing(False)` passes on the same warmed
+engine), the repeated-view segment scores ordering-cache hits — and,
+when >1 scene is served, unless every scene's FPS >= 0.7x the
+single-scene baseline.
 
 CPU wall-clock is a relative signal (TPU is the compile target), but the
 batched/sequential *ratio* is the claim under test: what the engine
@@ -49,6 +57,7 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import steady_state  # noqa: E402
 
 from repro.configs.rtnerf import NeRFConfig  # noqa: E402
 from repro.core import occupancy as occ_lib  # noqa: E402
@@ -125,15 +134,23 @@ def main():
            for n in scene_names}
 
     # -- sequential per-view loop (the replaced serve path) ----------------
-    seq_lat, seq_psnr = [], []
-    t_seq = time.time()
-    for cam, gt in zip(cams, gts[base_scene]):
-        t0 = time.time()
-        p, stats, _ = nerf_train.eval_view(field, cfg, cubes, cam, gt,
+    # shared best-of-iters methodology (common.steady_state): the first
+    # pass warms op caches and is reported as compile_s; the steady pass
+    # is the serving-relevant number — same exclusion every BENCH family
+    # applies, so the batched/sequential ratio is compile-free on BOTH
+    # sides
+    def seq_pass():
+        lat, ps = [], []
+        for cam, gt in zip(cams, gts[base_scene]):
+            t0 = time.time()
+            p, _, _ = nerf_train.eval_view(field, cfg, cubes, cam, gt,
                                            pipeline="rtnerf", chunk=8)
-        seq_lat.append(time.time() - t0)
-        seq_psnr.append(p)
-    seq_total = time.time() - t_seq
+            lat.append(time.time() - t0)
+            ps.append(p)
+        return lat, ps
+
+    seq_total, seq_compile, (seq_lat, seq_psnr) = steady_state(seq_pass,
+                                                               iters=1)
     seq_fps = args.views / seq_total
 
     # -- batched engine over the same resident field -----------------------
@@ -141,9 +158,8 @@ def main():
                           encode=not args.dense,
                           ray_chunk=args.res * args.res,
                           max_batch_views=args.views)
-    t_bat = time.time()
-    results = engine.render_views(cams, gts[base_scene])
-    bat_total = time.time() - t_bat
+    bat_total, bat_compile, results = steady_state(
+        lambda: engine.render_views(cams, gts[base_scene]), iters=1)
     bat_fps = args.views / bat_total
     bat_psnr = [r.psnr for r in results]
     bat_lat = [r.latency_s for r in results]
@@ -170,6 +186,22 @@ def main():
     fps_plain = args.views / t_plain
     overhead_frac = max(0.0, 1.0 - fps_traced / max(fps_plain, 1e-9))
 
+    # -- repeated-view segment: ordering-cache reuse under a looping -------
+    # workload (a camera path revisiting poses — the hits-perpetually-0
+    # blind spot this segment closes: every re-served camera must be an
+    # exact ordering-cache hit, visible both here and in the
+    # ordering_cache_hits registry counters)
+    oc_pre = engine.stats()["ordering_cache"]
+    t0 = time.time()
+    engine.render_views(cams, gts[base_scene])
+    repeat_total = time.time() - t0
+    oc_post = engine.stats()["ordering_cache"]
+    repeat = {
+        "fps": args.views / repeat_total,
+        "hits_delta": oc_post["hits"] - oc_pre["hits"],
+        "misses_delta": oc_post["misses"] - oc_pre["misses"],
+    }
+
     speedup = bat_fps / max(seq_fps, 1e-9)
     report = {
         "scene": base_scene, "views": args.views, "res": args.res,
@@ -182,8 +214,10 @@ def main():
         "pair_budget_initial": es["pair_budget_initial"],
         "pair_budget_resizes": es["pair_budget_resizes"],
         "ordering_cache": es["ordering_cache"],
+        "ordering_cache_after_repeat": oc_post,
         "sequential": {
             "fps": seq_fps, "total_s": seq_total,
+            "compile_s": seq_compile,
             "latency_p50_s": pctl(seq_lat, 50),
             "latency_p95_s": pctl(seq_lat, 95),
             "latency_p99_s": pctl(seq_lat, 99),
@@ -192,12 +226,14 @@ def main():
         },
         "batched": {
             "fps": bat_fps, "total_s": bat_total,
+            "compile_s": bat_compile,
             "latency_p50_s": pctl(bat_lat, 50),
             "latency_p95_s": pctl(bat_lat, 95),
             "latency_p99_s": pctl(bat_lat, 99),
             "timeouts": es["timeouts"],
             "psnr_mean": float(np.mean(bat_psnr)),
         },
+        "repeat": repeat,
         # trace-derived per-stage latency columns (queue/group/ordering/
         # compaction/render/deliver) from the engine's request tracer
         "stages": engine.stage_breakdown(),
@@ -291,6 +327,11 @@ def main():
                 f"instrumentation overhead {overhead_frac * 100:.1f}% "
                 f"FPS >= 2% (traced {fps_traced:.3f} vs untraced "
                 f"{fps_plain:.3f})")
+        if repeat["hits_delta"] <= 0 or oc_post["hits"] <= 0:
+            failures.append(
+                f"repeated-view segment produced no ordering-cache hits "
+                f"(hits_delta={repeat['hits_delta']}, "
+                f"total hits={oc_post['hits']}) — schedule reuse is broken")
         if multi is not None:
             for n, ratio in \
                     multi["fps_render_per_scene_vs_single_ratio"].items():

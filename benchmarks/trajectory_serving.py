@@ -1,0 +1,245 @@
+"""Frame-coherent streaming on a synthetic camera path: the temporal tier
+(serving/temporal.py + RenderEngine.submit_delta) vs full re-rendering.
+
+Real AR/VR traffic is a head-tracked video stream — consecutive cameras
+nearly identical. This benchmark renders a smooth orbit path twice with
+the same engine:
+
+  * full pass      — every frame through `submit` (the stateless path:
+                     every ray of every frame rendered),
+  * delta pass     — a keyframe every `--keyframe-every` frames through
+                     `submit` (prev=None), every other frame through
+                     `submit_delta(cam, prev=<previous result>)`: the
+                     previous frame's radiance is forward-warped to the
+                     new camera and only the low-confidence rays render.
+
+Both passes are frame-by-frame (submit -> result per frame — a stream
+cannot batch future cameras) and use the shared best-of-iters
+steady-state methodology (`benchmarks.common.steady_state`; the
+warmup/compile pass is recorded separately), over an engine in
+trajectory ordering mode so quantised-pose keys + NN fallback reuse the
+`order_cubes` schedules along the path.
+
+Emits BENCH_trajectory.json: effective FPS for both passes and their
+ratio, per-frame warp fraction, per-stage wall-clock from the PR 7
+tracer (warp/mask/render/composite among them), PSNR tables (each pass
+vs ground truth, delta vs full per frame) and the mean PSNR drift.
+--check gates the temporal tier's contract:
+
+  * delta-path effective FPS >= 2x the full-render pass,
+  * mean PSNR drift (full-vs-gt minus delta-vs-gt) <= 0.5 dB,
+  * keyframes bit-identical to `submit` renders of the same cameras.
+
+    PYTHONPATH=src python benchmarks/trajectory_serving.py
+    PYTHONPATH=src python benchmarks/trajectory_serving.py --tiny --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import steady_state  # noqa: E402
+
+from repro.configs.rtnerf import NeRFConfig  # noqa: E402
+from repro.core import occupancy as occ_lib  # noqa: E402
+from repro.core import train as nerf_train  # noqa: E402
+from repro.core.rendering import look_at_camera  # noqa: E402
+from repro.data import rays as rays_lib  # noqa: E402
+from repro.serving import RenderEngine  # noqa: E402
+
+
+def path_cams(n: int, res: int, *, radius: float = 4.0,
+              elevation: float = 0.5, step: float = 0.04):
+    """A smooth orbit segment: `step` radians of azimuth per frame at the
+    training orbit's radius/elevation (same look-at/focal convention as
+    data.rays.make_cameras, so gt renders are comparable)."""
+    cams = []
+    for i in range(n):
+        a = step * i
+        o = np.array([radius * np.cos(a) * np.cos(elevation),
+                      radius * np.sin(a) * np.cos(elevation),
+                      radius * np.sin(elevation)], np.float32)
+        cams.append(look_at_camera(o, [0, 0, 0], 1.2 * res, res, res))
+    return cams
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scene", default="lego")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--res", type=int, default=48)
+    ap.add_argument("--frames", type=int, default=24)
+    ap.add_argument("--keyframe-every", type=int, default=8)
+    ap.add_argument("--step-rad", type=float, default=0.04,
+                    help="azimuth step per frame along the orbit")
+    ap.add_argument("--prune", type=float, default=0.9)
+    ap.add_argument("--iters", type=int, default=2,
+                    help="steady-state timing iterations per pass "
+                         "(best-of; compile recorded separately)")
+    ap.add_argument("--out", default="BENCH_trajectory.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape: 20 steps, 32^2, 16 frames")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless delta-path effective FPS "
+                         ">= 2x full renders at <= 0.5 dB mean PSNR "
+                         "drift, keyframes bit-identical to submit")
+    args = ap.parse_args()
+    if args.tiny:
+        args.steps, args.res, args.frames = 20, 32, 16
+
+    if args.tiny:
+        cfg = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=320,
+                         r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                         max_samples_per_ray=64, train_rays=512)
+    else:
+        cfg = NeRFConfig(grid_res=40, occ_res=40, cube_size=4, max_cubes=768,
+                         r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                         max_samples_per_ray=112, train_rays=1024)
+
+    res_t = nerf_train.train_nerf(cfg, args.scene, steps=args.steps,
+                                  n_views=8, image_hw=args.res,
+                                  log_every=10_000, verbose=False)
+    field = res_t.field.prune(sparsity=args.prune)
+    occ = occ_lib.build_occupancy(field, cfg)
+    cubes = occ_lib.extract_cubes(occ, cfg)
+
+    cams = path_cams(args.frames, args.res, step=args.step_rad)
+    scene = rays_lib.make_scene(args.scene)
+    gts = [np.asarray(rays_lib.render_gt(scene, c)) for c in cams]
+
+    # one full frame is a handful of chunks, a delta frame ideally one —
+    # on CPU the jitted step cost is per *chunk*, so the chunk size IS the
+    # delta-ray granularity knob. adaptive_pair_budget off: a mid-pass
+    # budget resize rebuilds the jitted step and would break the
+    # keyframe-bit-identity contract between passes.
+    ray_chunk = max(args.res * args.res // 4, 64)
+    engine = RenderEngine(cfg, field, cubes, scene_name=args.scene,
+                          ray_chunk=ray_chunk,
+                          delta_ray_bucket=max(ray_chunk // 4, 32),
+                          order_mode="trajectory",
+                          adaptive_pair_budget=False,
+                          max_batch_views=10 ** 9)   # stream: explicit flush
+
+    def full_pass():
+        return [engine.submit(c).result() for c in cams]
+
+    def delta_pass():
+        out, prev = [], None
+        for i, c in enumerate(cams):
+            if i % args.keyframe_every == 0:
+                r = engine.submit_delta(c, prev=None).result()  # keyframe
+            else:
+                r = engine.submit_delta(c, prev=prev).result()
+            out.append(r)
+            prev = r
+        return out
+
+    # warm: compile the jitted step and populate the trajectory ordering
+    # cache over the whole path, so BOTH timed passes run against the same
+    # steady cache state (a pose that NN-hits a neighbour's schedule does
+    # so identically in either pass — keyframe bit-identity depends on it)
+    full_s, full_compile, full_out = steady_state(full_pass,
+                                                  iters=args.iters)
+    delta_s, delta_compile, delta_out = steady_state(delta_pass,
+                                                     iters=args.iters)
+    fps_full = args.frames / full_s
+    fps_delta = args.frames / delta_s
+    ratio = fps_delta / max(fps_full, 1e-9)
+
+    # quality: both passes vs gt; drift = how much the temporal tier loses
+    def p(img, ref):
+        mse = float(np.mean((np.clip(np.asarray(img), 0, 1)
+                             - np.asarray(ref)) ** 2))
+        return -10.0 * np.log10(max(mse, 1e-10))
+
+    psnr_full = [p(r.img, g) for r, g in zip(full_out, gts)]
+    psnr_delta = [p(r.img, g) for r, g in zip(delta_out, gts)]
+    psnr_delta_vs_full = [p(d.img, np.clip(np.asarray(f.img), 0, 1))
+                          for d, f in zip(delta_out, full_out)]
+    drift = float(np.mean(np.asarray(psnr_full) - np.asarray(psnr_delta)))
+
+    key_ids = list(range(0, args.frames, args.keyframe_every))
+    keyframes_identical = all(
+        np.array_equal(delta_out[i].img, full_out[i].img) for i in key_ids)
+    warp_fracs = [delta_out[i].warp_fraction for i in range(args.frames)]
+
+    es = engine.stats()
+    report = {
+        "scene": args.scene, "res": args.res, "frames": args.frames,
+        "keyframe_every": args.keyframe_every, "step_rad": args.step_rad,
+        "prune": args.prune, "iters": args.iters,
+        "ray_chunk": ray_chunk,
+        "delta_ray_bucket": engine.delta_ray_bucket,
+        "full": {"fps": fps_full, "total_s": full_s,
+                 "compile_s": full_compile,
+                 "psnr_mean": float(np.mean(psnr_full))},
+        "delta": {"fps_effective": fps_delta, "total_s": delta_s,
+                  "compile_s": delta_compile,
+                  "psnr_mean": float(np.mean(psnr_delta)),
+                  "warp_fraction_mean": float(np.mean(
+                      [w for i, w in enumerate(warp_fracs)
+                       if i not in key_ids] or [0.0])),
+                  "warp_fraction_min": float(np.min(
+                      [w for i, w in enumerate(warp_fracs)
+                       if i not in key_ids] or [0.0])),
+                  "engine": es["delta"]},
+        "speedup_effective": ratio,
+        "psnr_drift_db": drift,
+        "psnr_per_frame": [
+            {"frame": i, "keyframe": i in key_ids,
+             "psnr_full": round(psnr_full[i], 3),
+             "psnr_delta": round(psnr_delta[i], 3),
+             "psnr_delta_vs_full": round(psnr_delta_vs_full[i], 2),
+             "warp_fraction": round(warp_fracs[i], 4)}
+            for i in range(args.frames)],
+        "keyframes_bit_identical": bool(keyframes_identical),
+        "ordering_cache": es["ordering_cache"],
+        # per-stage wall-clock from the request tracer: warp/mask run on
+        # the submit thread, composite on the flush thread — this table is
+        # where the temporal tier's win (and its overhead) is itemised
+        "stages": engine.stage_breakdown(),
+    }
+    engine.close()
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps({k: v for k, v in report.items()
+                      if k not in ("psnr_per_frame", "stages")}, indent=2))
+    print(f"wrote {args.out}")
+
+    if args.check:
+        failures = []
+        if ratio < 2.0:
+            failures.append(
+                f"delta-path effective FPS ratio {ratio:.2f}x < 2x "
+                f"(full {fps_full:.3f} fps, delta {fps_delta:.3f} fps)")
+        if drift > 0.5:
+            failures.append(
+                f"mean PSNR drift {drift:.3f} dB > 0.5 dB "
+                f"(full {np.mean(psnr_full):.2f}, "
+                f"delta {np.mean(psnr_delta):.2f})")
+        if not keyframes_identical:
+            failures.append("keyframes not bit-identical to submit renders")
+        if es["ordering_cache"]["hits"] <= 0:
+            failures.append("trajectory ordering cache never hit along "
+                            "the path")
+        for st in ("warp", "mask", "render", "composite"):
+            if st not in report["stages"]:
+                failures.append(f"stage '{st}' missing from the trace-"
+                                f"derived breakdown")
+        if failures:
+            print("CHECK FAILED: " + "; ".join(failures))
+            sys.exit(1)
+        print(f"CHECK OK: {ratio:.2f}x effective FPS on the path "
+              f"(keyframe every {args.keyframe_every}), PSNR drift "
+              f"{drift:.3f} dB, keyframes bit-identical, warp fraction "
+              f"mean {report['delta']['warp_fraction_mean']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

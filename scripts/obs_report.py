@@ -25,10 +25,11 @@ import json
 import re
 import sys
 
-# canonical lifecycle order (mirrors repro.obs.tracing.STAGES without
-# importing repro — this script runs against a snapshot file alone)
-STAGES = ("submit", "queue", "group", "ordering", "compaction", "render",
-          "deliver")
+# canonical lifecycle order (mirrors repro.obs.tracing.REPORT_STAGES
+# without importing repro — this script runs against a snapshot file
+# alone); warp/mask/composite only appear on temporal-tier delta frames
+STAGES = ("warp", "mask", "submit", "queue", "group", "ordering",
+          "compaction", "render", "composite", "deliver")
 
 _LABELLED = re.compile(r"^(?P<name>[^{]+)\{(?P<labels>.*)\}$")
 

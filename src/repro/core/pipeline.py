@@ -67,7 +67,7 @@ def octant_rank(origin):
                                             kind="stable"))
 
 
-def ordering_key(origin, mode: str = "octant"):
+def ordering_key(origin, mode: str = "octant", quantum: float = 0.25):
     """Hashable cache key that determines `order_cubes`' output exactly.
 
     mode="octant": the permutation depends only on the octant ranking
@@ -78,9 +78,21 @@ def ordering_key(origin, mode: str = "octant"):
     different dominant axes rank the octants differently, and compositing
     disjoint segments out of order leaks occluded geometry.
 
+    mode="trajectory": the streaming key — the origin quantised to a
+    `quantum`-sized grid, so consecutive cameras on a smooth head-tracked
+    path share a key (and near-misses are caught by the OrderingCache's
+    nearest-neighbour fallback). The schedule itself is the octant
+    ordering (exact for the origin that computed it); reusing it from a
+    neighbouring pose is the trajectory-level approximation — bounded by
+    the quantum, and only ever wrong in the rare case a sub-quantum move
+    flips the octant ranking mid-cell.
+
     mode="distance": the per-cube sort depends on the full origin; key by
     its rounded coordinates (reuse only for effectively identical views).
     """
+    if mode == "trajectory":
+        o = np.asarray(origin, np.float64).reshape(-1)
+        return tuple(int(q) for q in np.round(o / float(quantum)))
     if mode != "octant":
         return tuple(np.round(np.asarray(origin, np.float64), 6).tolist())
     return octant_rank(origin)
@@ -100,42 +112,98 @@ class OrderingCache:
     finitely many keys anyway, but distance mode keys on the full origin
     and would otherwise grow without bound under a free camera stream.
 
+    mode="trajectory" is the streaming extension (ROADMAP "frame-coherent
+    AR/VR streaming"): keys are the origin quantised to `pose_quantum`,
+    and an exact-key miss falls back to the nearest cached pose within
+    `nn_radius` quanta before recomputing `order_cubes` — so a smooth
+    head-tracked path reuses one schedule per neighbourhood instead of
+    recomputing per frame. The NN tie-break is (distance, key), not
+    insertion order, so lookups are deterministic regardless of LRU churn.
+
     `scene` is an optional label (the serving SceneStore keys one cache per
     resident scene); `with_cubes(cubes)` is the rebuild path — a NEW cache
     over the new cube set that carries the hit/miss counters forward, so an
     in-flight render keeps its old cache consistent while telemetry stays
-    cumulative across occupancy rebuilds and field swaps.
+    cumulative across occupancy rebuilds and field swaps. When a metrics
+    `registry` is supplied, hits and misses are additionally exported as
+    `ordering_cache_hits`/`ordering_cache_misses` counters (labelled by
+    scene), so cache effectiveness is visible in the exposition endpoints
+    — not only in `stats()` polls.
     """
 
     def __init__(self, cubes: CubeSet, mode: str = "octant",
-                 max_entries: int = 64, scene: Optional[str] = None):
+                 max_entries: int = 64, scene: Optional[str] = None, *,
+                 pose_quantum: float = 0.25, nn_radius: float = 1.5,
+                 registry=None):
         import collections
 
         self.cubes = cubes
         self.mode = mode
         self.scene = scene
         self.max_entries = int(max_entries)
+        self.pose_quantum = float(pose_quantum)
+        self.nn_radius = float(nn_radius)
+        self.registry = registry
         self._entries = collections.OrderedDict()  # key -> (perm, ctr, vld)
         self.hits = 0
         self.misses = 0
+        self.nn_hits = 0            # subset of hits served by NN fallback
+        self._c_hits = self._c_misses = None
+        if registry is not None:
+            labels = {"scene": scene} if scene is not None else {}
+            self._c_hits = registry.counter("ordering_cache_hits", **labels)
+            self._c_misses = registry.counter("ordering_cache_misses",
+                                              **labels)
 
     def with_cubes(self, cubes: CubeSet) -> "OrderingCache":
         """Fresh (empty) cache over `cubes`, counters carried over — the
         cube-set-changed path (occupancy rebuild / field swap). A new object
         rather than invalidate-in-place so a snapshot taken before the swap
         keeps rendering from a consistent (cubes, ordering) pair."""
-        nxt = OrderingCache(cubes, self.mode, self.max_entries, self.scene)
-        nxt.hits, nxt.misses = self.hits, self.misses
+        nxt = OrderingCache(cubes, self.mode, self.max_entries, self.scene,
+                            pose_quantum=self.pose_quantum,
+                            nn_radius=self.nn_radius, registry=self.registry)
+        nxt.hits, nxt.misses, nxt.nn_hits = (self.hits, self.misses,
+                                             self.nn_hits)
         return nxt
 
     def key_for(self, origin) -> tuple:
-        return ordering_key(origin, self.mode)
+        return ordering_key(origin, self.mode, self.pose_quantum)
+
+    def _nearest(self, k: tuple):
+        """Nearest cached key within `nn_radius` quanta of `k`, or None.
+        Tie-break on (distance, key) so the winner doesn't depend on LRU
+        order — two passes over the same cache contents pick the same
+        entry."""
+        best = None
+        for k2 in self._entries:
+            d = math.dist(k, k2)
+            if d <= self.nn_radius and (best is None or (d, k2) < best):
+                best = (d, k2)
+        return None if best is None else best[1]
+
+    def _note(self, hit: bool, nn: bool = False):
+        if hit:
+            self.hits += 1
+            self.nn_hits += int(nn)
+            if self._c_hits is not None:
+                self._c_hits.inc()
+        else:
+            self.misses += 1
+            if self._c_misses is not None:
+                self._c_misses.inc()
 
     def _lookup(self, origin) -> tuple:
         k = self.key_for(origin)
         e = self._entries.get(k)
+        if e is None and self.mode == "trajectory":
+            k_nn = self._nearest(k)
+            if k_nn is not None:
+                self._note(hit=True, nn=True)
+                self._entries.move_to_end(k_nn)
+                return self._entries[k_nn]
         if e is None:
-            self.misses += 1
+            self._note(hit=False)
             perm = order_cubes(self.cubes,
                                jnp.asarray(origin, jnp.float32), self.mode)
             e = (perm, self.cubes.centers[perm], self.cubes.valid[perm])
@@ -143,7 +211,7 @@ class OrderingCache:
             while len(self._entries) > self.max_entries:
                 self._entries.popitem(last=False)      # evict LRU
         else:
-            self.hits += 1
+            self._note(hit=True)
             self._entries.move_to_end(k)
         return e
 
@@ -163,7 +231,7 @@ class OrderingCache:
 
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._entries)}
+                "nn_hits": self.nn_hits, "entries": len(self._entries)}
 
 
 def order_cubes(cubes: CubeSet, origin: jax.Array, mode: str = "octant"):
@@ -173,10 +241,12 @@ def order_cubes(cubes: CubeSet, origin: jax.Array, mode: str = "octant"):
     distance of their centers to the view origin (`octant_rank`, host-side:
     the origin is concrete at schedule-build time); cubes keep their fixed
     scan order within an octant (regular DRAM access pattern).
+    mode="trajectory": the octant schedule, cached under quantised-pose
+    keys by OrderingCache (the streaming tier's reuse mode).
     mode="distance": per-cube distance sort (finer; beyond-paper).
     """
     c = cubes.centers
-    if mode == "octant":
+    if mode in ("octant", "trajectory"):
         oct_id = ((c[:, 0] > 0).astype(jnp.int32) * 4
                   + (c[:, 1] > 0).astype(jnp.int32) * 2
                   + (c[:, 2] > 0).astype(jnp.int32))
@@ -268,6 +338,22 @@ def _cube_samples(cfg: NeRFConfig, cam: Camera, center, tile: int,
     return pix_id, d, pts, ts, s_mask
 
 
+def compact_select(flat_hit: jax.Array, budget: int) -> jax.Array:
+    """Deterministic active-pair selection: the indices of hitting pairs
+    first (in ascending pair order), cut to the static `budget`.
+
+    Sorting on the composite key `miss * n + index` makes every key unique,
+    so the result cannot depend on any backend's sort stability or
+    tie-breaking — the same hit mask selects the same pair set on CPU, TPU,
+    and under the numpy oracle (`np.argsort(~hits, kind="stable")`), which
+    is what makes dropped-pair choice (and with it the rendered image)
+    reproducible across jit invocations and backends."""
+    n = flat_hit.shape[0]
+    key = ((~flat_hit).astype(jnp.int32) * n
+           + jnp.arange(n, dtype=jnp.int32))
+    return jnp.argsort(key)[:budget]
+
+
 def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
                       pair_budget: int = None, white_bg: bool = True):
     """Ray-centric RT-NeRF renderer (serving path).
@@ -326,7 +412,7 @@ def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
         # profiler captures (serve --profile-dir) line up with the host-side
         # span stages in repro/obs/tracing.py (see docs/observability.md)
         def body(carry, xs):
-            log_t, color, processed, dropped, pairs_max = carry
+            log_t, color, depth, processed, dropped, pairs_max = carry
             ctr, vld = xs                                 # (chunk,3),(chunk,)
 
             # Step 2-1-d: line-slab intersection of every ray with each cube
@@ -346,7 +432,7 @@ def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
             # the static budget, evaluate the field only there
             with jax.named_scope("rtnerf.compact"):
                 flat_hit = hit.reshape(-1)                # (chunk*N,)
-                idx = jnp.argsort(~flat_hit)[:budget]     # hits lead
+                idx = compact_select(flat_hit, budget)    # hits lead
                 sel = flat_hit[idx]                       # (budget,)
                 ray_i = idx % n_rays
                 t0s = t0.reshape(-1)[idx]
@@ -380,6 +466,7 @@ def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
                 alpha = 1.0 - jnp.exp(-tau)
                 w = t_local * alpha
                 seg_rgb = jnp.sum(w[..., None] * rgb, axis=-2)  # (budget,3)
+                seg_d = jnp.sum(w * ts, axis=-1)                # (budget,)
                 seg_tau = jnp.where(sel, cum[..., -1], 0.0)     # (budget,)
 
             # scatter into the per-ray accumulators (pre-chunk T, exactly
@@ -389,24 +476,33 @@ def make_ray_renderer(cfg: NeRFConfig, *, chunk: int = 8,
                 contrib = jnp.where(sel[:, None],
                                     t_here[:, None] * seg_rgb, 0.0)
                 color = color.at[ray_i].add(contrib)
+                depth = depth.at[ray_i].add(
+                    jnp.where(sel, t_here * seg_d, 0.0))
                 log_t = log_t.at[ray_i].add(-seg_tau)
                 processed = processed + jnp.sum(s_mask.astype(jnp.float32))
                 n_hit = jnp.sum(flat_hit.astype(jnp.int32))
                 dropped = dropped + jnp.maximum(n_hit - budget, 0)
                 pairs_max = jnp.maximum(pairs_max, n_hit)
-            return (log_t, color, processed, dropped, pairs_max), None
+            return (log_t, color, depth, processed, dropped, pairs_max), None
 
         xs = (centers.reshape(n_chunks, chunk, 3),
               valid.reshape(n_chunks, chunk))
         init = (jnp.zeros((n_rays,), jnp.float32),
-                jnp.zeros((n_rays, 3), jnp.float32), jnp.float32(0),
+                jnp.zeros((n_rays, 3), jnp.float32),
+                jnp.zeros((n_rays,), jnp.float32), jnp.float32(0),
                 jnp.int32(0), jnp.int32(0))
-        (log_t, color, processed, dropped, pairs_max), _ = jax.lax.scan(
-            body, init, xs)
+        (log_t, color, depth, processed, dropped, pairs_max), _ = \
+            jax.lax.scan(body, init, xs)
         t_final = jnp.exp(log_t)
         if white_bg:
             color = color + t_final[:, None]
-        return color, {"t_final": t_final, "processed_samples": processed,
+        # depth is the opacity-weighted expected termination distance
+        # (sum_k w_k t_k); opacity = 1 - T_final. The serving temporal tier
+        # (serving/temporal.py) unprojects depth/opacity to forward-warp
+        # this frame's radiance to the next camera.
+        return color, {"t_final": t_final, "depth": depth,
+                       "opacity": 1.0 - t_final,
+                       "processed_samples": processed,
                        "dropped_pairs": dropped,
                        "active_pairs_max": pairs_max}
 

@@ -1,5 +1,6 @@
 from repro.obs.registry import (  # noqa: F401
     Counter, Gauge, Histogram, MetricsRegistry, get_registry)
-from repro.obs.tracing import Span, Tracer, ViewTrace, STAGES  # noqa: F401
+from repro.obs.tracing import (Span, Tracer, ViewTrace, STAGES,  # noqa: F401
+                               REPORT_STAGES)
 from repro.obs.exposition import (  # noqa: F401
     MetricsServer, StatsReporter, snapshot_json, to_prometheus)

@@ -46,9 +46,15 @@ from typing import Dict, List, Optional
 
 from repro.obs.registry import MetricsRegistry
 
-# canonical stage order of one request's lifecycle (doc + report order)
+# canonical stage order of one request's lifecycle (doc + report order).
+# Every request passes through all of STAGES; the temporal tier's stages
+# (engine.submit_delta: warp/mask on the submitting thread, composite on
+# the flush thread) only appear on delta frames, so reports iterate
+# REPORT_STAGES — the full lifecycle order — and skip empty stages.
 STAGES = ("submit", "queue", "group", "ordering", "compaction", "render",
           "deliver")
+REPORT_STAGES = ("warp", "mask", "submit", "queue", "group", "ordering",
+                 "compaction", "render", "composite", "deliver")
 
 
 @dataclasses.dataclass

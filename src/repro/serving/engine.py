@@ -67,6 +67,7 @@ from repro.core.rendering import Camera
 from repro.models.sharding import make_rules
 from repro.obs import MetricsRegistry, Tracer
 from repro.obs.tracing import ViewTrace
+from repro.serving import temporal
 from repro.serving.batching import group_requests, plan_microbatches
 from repro.serving.store import SceneSnapshot, SceneStore
 
@@ -82,6 +83,13 @@ class ViewResult:
     scene: str = ""                 # which resident scene rendered this
     trace: Optional[Dict] = None    # span tree (obs.ViewTrace.tree()), if
                                     # tracing was enabled at submit
+    depth: Optional[np.ndarray] = None    # (H*W,) accumulated E[w·t]
+    opacity: Optional[np.ndarray] = None  # (H*W,) 1 - final transmittance
+    cam: Optional[Camera] = None    # the camera this frame was rendered for
+                                    # (depth/opacity/cam feed submit_delta's
+                                    # radiance warp for the NEXT frame)
+    warp_fraction: float = 0.0      # fraction served by the temporal warp
+                                    # (0.0 = fully rendered / keyframe)
 
 
 class ViewFuture:
@@ -135,6 +143,8 @@ class _Request:                        # arrays, value-eq is ill-defined
     deadline: Optional[float] = None     # absolute perf_counter time
     scene: str = ""                      # routing key into the SceneStore
     trace: Optional[ViewTrace] = None    # span tree; None = tracing off
+    delta: Optional[temporal.DeltaPlan] = None  # sparse-ray work order;
+                                         # None = render the full frame
 
 
 FIELD_META = "field_meta.json"
@@ -235,6 +245,7 @@ class RenderEngine:
                  cube_chunk: int = 8, pair_budget: int = None,
                  adaptive_pair_budget: bool = True,
                  order_mode: str = "octant", max_batch_views: int = 8,
+                 delta_ray_bucket: Optional[int] = None,
                  auto_flush_interval: Optional[float] = None,
                  max_resident_bytes: Optional[int] = None,
                  spill_dir: Optional[str] = None,
@@ -290,6 +301,19 @@ class RenderEngine:
         self._m_latency = m.histogram("engine_latency_s", maxlen=65536)
         self._g_queue = m.gauge("engine_queue_depth")
         self._g_budget = m.gauge("engine_pair_budget")
+        # temporal tier (submit_delta): created eagerly so every metrics
+        # snapshot carries the warp schema even before the first delta
+        # frame — the CI metrics-smoke pins these names
+        self._m_warp_rays = m.counter("warp_rays_total")
+        self._m_delta_rays = m.counter("engine_delta_rays")
+        self._m_delta_views = m.counter("engine_delta_views")
+        self._m_delta_fallbacks = m.counter("engine_delta_full_fallbacks")
+        self._m_warp_frac = m.histogram("warp_fraction", maxlen=4096)
+        m.counter("render_dispatch_total", path="delta")
+        # fresh-ray counts are padded to this bucket so a delta frame's
+        # chunk count doesn't track the disocclusion count frame-to-frame
+        self.delta_ray_bucket = int(delta_ray_bucket if delta_ray_bucket
+                                    else max(self.ray_chunk // 8, 32))
 
         # ONE jitted step shared by every scene; the field is a pytree
         # argument, so swapped fields — and different scenes — with the
@@ -538,16 +562,31 @@ class RenderEngine:
         record stats, not for the render itself)."""
         key = self._scene_key(scene)
         self.store.ensure_resident(key)
+        return self._enqueue(cam, gt, key, deadline_s)
+
+    def _enqueue(self, cam: Camera, gt, key: str,
+                 deadline_s: Optional[float], *,
+                 delta: Optional[temporal.DeltaPlan] = None,
+                 t_start: Optional[float] = None,
+                 pre_spans: Sequence[tuple] = ()) -> ViewFuture:
+        """Shared tail of submit/submit_delta: queue one request under the
+        engine lock. `t_start` backdates the request (submit_delta's warp
+        runs on the caller's thread before the lock — that time is part of
+        the request's latency); `pre_spans` are (name, t0, t1, attrs)
+        stage spans measured by the caller before the trace existed."""
         with self._lock:
             fut = ViewFuture(self, self._next_id)
             now = time.perf_counter()
-            trace = self.tracer.start(self._next_id, key, t_submit=now)
+            t0 = now if t_start is None else t_start
+            trace = self.tracer.start(self._next_id, key, t_submit=t0)
             deadline = None if deadline_s is None else now + deadline_s
             self._queue.append(
-                _Request(cam, gt, fut, now, deadline, key, trace))
+                _Request(cam, gt, fut, t0, deadline, key, trace, delta))
             self._next_id += 1
             self._g_queue.set(len(self._queue))
             if trace is not None:
+                for name, s0, s1, attrs in pre_spans:
+                    trace.add(name, s0, s1, **attrs)
                 trace.add("submit", now, time.perf_counter())
             full = len(self._queue) >= self.max_batch_views
             if full and self._auto_flush_on():
@@ -556,6 +595,52 @@ class RenderEngine:
         if full:
             self.flush()
         return fut
+
+    def submit_delta(self, cam: Camera, prev: Optional[ViewResult] = None,
+                     gt=None, *, scene: Optional[str] = None,
+                     deadline_s: Optional[float] = None,
+                     max_delta_frac: float = 0.6) -> ViewFuture:
+        """Queue a frame-coherent novel-view request: warp `prev` (the
+        previous frame's ViewResult, carrying img/depth/opacity/cam) to
+        `cam`, and render only the rays the warp can't vouch for — the
+        composited full frame resolves through the returned future exactly
+        like `submit`'s, with `warp_fraction` telling how much of it was
+        reused. Falls back to a full render (bit-identical to `submit`)
+        when there is no usable `prev` (a keyframe, a timed-out prev, or
+        one rendered before the engine returned geometry) or when the
+        low-confidence set exceeds `max_delta_frac` of the frame — at that
+        point warping saves nothing over a clean render.
+
+        The warp + mask run on the submitting thread (traced as the
+        `warp`/`mask` stages): O(H*W) numpy pointer math that must not
+        serialize against the jitted render steps. Chain results —
+        `prev=last.result()` — for streaming; every Nth frame pass
+        `prev=None` to cut a keyframe and stop drift accumulation."""
+        key = self._scene_key(scene)
+        self.store.ensure_resident(key)
+        usable = (prev is not None and not prev.timed_out
+                  and prev.img is not None and prev.depth is not None
+                  and prev.opacity is not None and prev.cam is not None
+                  and int(prev.cam.h) == int(cam.h)
+                  and int(prev.cam.w) == int(cam.w))
+        if not usable:
+            return self._enqueue(cam, gt, key, deadline_s)
+        t_w0 = time.perf_counter()
+        warp = temporal.warp_radiance(prev.img, prev.cam, cam, prev.depth,
+                                      opacity=prev.opacity)
+        t_w1 = time.perf_counter()
+        plan = temporal.plan_delta(warp, bucket=self.delta_ray_bucket)
+        t_m1 = time.perf_counter()
+        n_pix = int(cam.h) * int(cam.w)
+        if plan.n_real > max_delta_frac * n_pix:
+            self._m_delta_fallbacks.inc()
+            return self._enqueue(cam, gt, key, deadline_s, t_start=t_w0)
+        spans = (("warp", t_w0, t_w1, {}),
+                 ("mask", t_w1, t_m1,
+                  {"fresh_rays": plan.n_rays,
+                   "warp_fraction": plan.warp_fraction}))
+        return self._enqueue(cam, gt, key, deadline_s, delta=plan,
+                             t_start=t_w0, pre_spans=spans)
 
     def flush(self) -> List[ViewResult]:
         """Render every queued view: group by (scene, ordering octant),
@@ -627,9 +712,12 @@ class RenderEngine:
             return results
 
         tg = time.perf_counter()
+        # delta requests batch separately from full frames: their ray sets
+        # are sparse index gathers, and mixing them would make the scatter
+        # ambiguous about which rays rebuild a full image
         groups = group_requests(
             live, lambda r: (r.scene, snaps[r.scene].ordering.key_for(
-                r.cam.origin)))
+                r.cam.origin), r.delta is not None))
         tg1 = time.perf_counter()
         for r in live:
             if r.trace is not None:
@@ -658,7 +746,7 @@ class RenderEngine:
                       results: List[ViewResult],
                       snaps: Dict[str, SceneSnapshot], render_fn,
                       flush_pairs: List[int], flush_dropped: List[int]):
-        for (scene, _okey), reqs_g in groups.items():
+        for (scene, _okey, is_delta), reqs_g in groups.items():
             snap = snaps[scene]
             ordering = snap.ordering
             traces = [r.trace for r in reqs_g if r.trace is not None]
@@ -678,12 +766,18 @@ class RenderEngine:
             batches = []
             for r in reqs_g:
                 o, d = rendering.camera_rays(r.cam)
-                batches.append((np.asarray(o), np.asarray(d)))
+                o, d = np.asarray(o), np.asarray(d)
+                if r.delta is not None:
+                    # only the low-confidence rays render; the rest of the
+                    # frame arrives pre-warped in r.delta.warp
+                    o, d = o[r.delta.idx], d[r.delta.idx]
+                batches.append((o, d))
             plan = plan_microbatches(batches, self.ray_chunk)
             t_plan = time.perf_counter()
             span_all("compaction", t_ord, t_plan, n_chunks=plan.n_chunks,
                      rays=plan.total)
             outs = []
+            geo_outs = []
             group_dropped = 0
             group_pairs_max = 0
             for i in range(plan.n_chunks):
@@ -692,6 +786,9 @@ class RenderEngine:
                     jnp.asarray(plan.rays_d[i]))
                 rgb, aux = render_fn(snap.field, centers, valid, ro, rd)
                 outs.append(np.asarray(rgb))
+                geo_outs.append(np.stack([np.asarray(aux["depth"]),
+                                          np.asarray(aux["opacity"])],
+                                         axis=-1))
                 group_dropped += int(aux["dropped_pairs"])
                 group_pairs_max = max(group_pairs_max,
                                       int(aux["active_pairs_max"]))
@@ -699,6 +796,7 @@ class RenderEngine:
             flush_pairs[0] = max(flush_pairs[0], group_pairs_max)
             flush_dropped[0] += group_dropped
             imgs = plan.scatter(outs)
+            geos = plan.scatter(geo_outs)
             t_done = time.perf_counter()
             # the render span covers the jitted steps AND the host
             # transfer (np.asarray blocks on the device); dispatch_path
@@ -706,17 +804,25 @@ class RenderEngine:
             span_all("render", t_plan, t_done,
                      dispatch_path=snap.field.dispatch_path(),
                      n_chunks=plan.n_chunks, dropped_pairs=group_dropped,
-                     active_pairs_max=group_pairs_max)
+                     active_pairs_max=group_pairs_max,
+                     path="delta" if is_delta else "full")
             group: List[tuple] = []
-            for r, img in zip(reqs_g, imgs):
+            for r, img, geo in zip(reqs_g, imgs, geos):
+                if r.delta is not None:
+                    img, geo, warp_frac = self._composite_delta(r, img, geo)
+                else:
+                    warp_frac = 0.0
                 psnr = None
                 if r.gt is not None:
                     psnr = float(rendering.psnr(
                         jnp.clip(jnp.asarray(img), 0, 1), jnp.asarray(r.gt)))
-                lat = t_done - r.t_submit
+                lat = time.perf_counter() - r.t_submit
                 group.append((r, ViewResult(
                     view_id=r.future._view_id, img=img, psnr=psnr,
-                    latency_s=lat, scene=scene, stats={
+                    latency_s=lat, scene=scene,
+                    depth=np.ascontiguousarray(geo[:, 0]),
+                    opacity=np.ascontiguousarray(geo[:, 1]), cam=r.cam,
+                    warp_fraction=warp_frac, stats={
                         "occ_accesses": float(snap.cubes.count),
                         "factor_bytes": float(snap.factor_bytes),
                         "factor_bytes_dense": float(snap.factor_bytes_dense),
@@ -741,6 +847,33 @@ class RenderEngine:
                     res.trace = r.trace.tree()
                 results.append(res)
                 r.future._set(res)
+
+    def _composite_delta(self, r: _Request, fresh_img: np.ndarray,
+                         fresh_geo: np.ndarray):
+        """Composite one delta request: overwrite the warped frame's
+        low-confidence pixels with the freshly rendered rays (pad entries
+        re-write pixel 0 with its own fresh value — idempotent), record
+        the temporal-tier telemetry, and return (img, geo, warp_fraction)
+        shaped exactly like a full render's."""
+        plan = r.delta
+        t_c0 = time.perf_counter()
+        warp = plan.warp
+        img = warp.rgb.astype(np.float32)
+        geo = np.stack([warp.depth, warp.opacity],
+                       axis=-1).astype(np.float32)
+        img[plan.idx] = fresh_img
+        geo[plan.idx] = fresh_geo
+        n_pix = warp.confidence.size
+        self._m_delta_views.inc()
+        self._m_delta_rays.inc(plan.n_real)
+        self._m_warp_rays.inc(n_pix - plan.n_real)
+        self._m_warp_frac.record(plan.warp_fraction)
+        self.metrics.counter("render_dispatch_total", path="delta").inc()
+        if r.trace is not None:
+            r.trace.add("composite", t_c0, time.perf_counter(),
+                        fresh_rays=plan.n_rays,
+                        warp_fraction=plan.warp_fraction)
+        return img, geo, plan.warp_fraction
 
     # -- adaptive pair budget ----------------------------------------------
 
@@ -818,6 +951,14 @@ class RenderEngine:
                 "ray_chunk": self.ray_chunk,
                 "cube_chunk": self.cube_chunk,
                 "n_devices": self.n_devices,
+                "delta": {
+                    "views": int(self._m_delta_views.value),
+                    "fresh_rays": int(self._m_delta_rays.value),
+                    "warped_rays": int(self._m_warp_rays.value),
+                    "full_fallbacks": int(self._m_delta_fallbacks.value),
+                    "warp_fraction_mean": self._m_warp_frac.mean(),
+                    "ray_bucket": self.delta_ray_bucket,
+                },
             }
         ss = self.store.stats()
         scenes = ss["scenes"]
@@ -839,6 +980,8 @@ class RenderEngine:
                             for s in scenes.values()),
                 "misses": sum(s["ordering_cache"]["misses"]
                               for s in scenes.values()),
+                "nn_hits": sum(s["ordering_cache"].get("nn_hits", 0)
+                               for s in scenes.values()),
                 "entries": sum(s["ordering_cache"]["entries"]
                                for s in scenes.values()),
             },
@@ -861,11 +1004,12 @@ class RenderEngine:
         the `request_stage_s{stage=...}` histograms the tracer folds every
         finished request into. Benchmarks record this as their
         stage-breakdown columns; `scripts/obs_report.py` renders it from
-        an exposition snapshot instead."""
-        from repro.obs.tracing import STAGES
+        an exposition snapshot instead. Temporal-tier stages (warp, mask,
+        composite) appear once the workload sends delta frames."""
+        from repro.obs.tracing import REPORT_STAGES
 
         out = {}
-        for st in STAGES:
+        for st in REPORT_STAGES:
             h = self.metrics.histogram("request_stage_s", stage=st)
             if h.count:
                 out[st] = {"count": h.count, "p50_s": h.percentile(50),

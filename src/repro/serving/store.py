@@ -119,6 +119,7 @@ class SceneRecord:
     last_used: int = 0
     _ord_hits: int = 0            # ordering counters parked while evicted
     _ord_misses: int = 0
+    _ord_nn_hits: int = 0
 
 
 class SceneStore:
@@ -231,9 +232,10 @@ class SceneStore:
             rec.ordering = rec.ordering.with_cubes(cubes)
         else:
             rec.ordering = rt_pipe.OrderingCache(cubes, self.order_mode,
-                                                 scene=rec.name)
-            rec.ordering.hits, rec.ordering.misses = (rec._ord_hits,
-                                                      rec._ord_misses)
+                                                 scene=rec.name,
+                                                 registry=self.metrics)
+            rec.ordering.hits, rec.ordering.misses, rec.ordering.nn_hits = \
+                (rec._ord_hits, rec._ord_misses, rec._ord_nn_hits)
         rec.factor_bytes = field.factor_bytes()
         rec.factor_bytes_dense = field.dense_factor_bytes()
         rec.resident = True
@@ -330,6 +332,7 @@ class SceneStore:
                      radius=c.radius, occ=np.asarray(c.occ))
             rec._ord_hits = rec.ordering.hits
             rec._ord_misses = rec.ordering.misses
+            rec._ord_nn_hits = rec.ordering.nn_hits
             rec.field = rec.cubes = rec.ordering = None
             rec.spill_path = path
             rec.resident = False
@@ -392,7 +395,7 @@ class SceneStore:
         views, render_s = int(m.views_served.value), m.render_s.value
         ordering = (rec.ordering.stats() if rec.ordering is not None
                     else {"hits": rec._ord_hits, "misses": rec._ord_misses,
-                          "entries": 0})
+                          "nn_hits": rec._ord_nn_hits, "entries": 0})
         return {
             "scene": rec.name,
             "resident": rec.resident,

@@ -341,6 +341,67 @@ def test_adaptive_pair_budget_shrinks_with_hysteresis(tmp_path):
     assert pinned.stats()["pair_budget_resizes"] == 0
 
 
+# -- ordering-cache counter continuity -------------------------------------
+
+
+def test_ordering_counters_survive_update_cubes(tmp_path):
+    """`update_cubes` rebuilds the ordering cache via `with_cubes`: entries
+    restart empty over the new cube set, but hit/miss/nn_hit counters and
+    the scene-labelled registry counters stay cumulative."""
+    store = _store(tmp_path, order_mode="trajectory")
+    f, c = _field_and_cubes(seed=0)
+    store.register("a", f, c)
+    oc = store.snapshot("a").ordering
+    o0 = np.array([4.0, 0.0, 1.0])
+    oc.get(o0)                                           # miss
+    oc.get(o0)                                           # exact hit
+    oc.get(o0 + np.array([0.3, 0.0, 0.0]))               # NN hit
+    assert oc.stats() == {"hits": 2, "misses": 1, "nn_hits": 1,
+                          "entries": 1}
+
+    _, c2 = _field_and_cubes(seed=1)
+    store.update_cubes("a", c2)
+    oc2 = store.snapshot("a").ordering
+    assert oc2 is not oc and oc2.cubes is c2
+    assert oc2.scene == "a"
+    s = oc2.stats()
+    assert (s["hits"], s["misses"], s["nn_hits"]) == (2, 1, 1)
+    assert s["entries"] == 0                             # schedules dropped
+    oc2.get(o0)                                          # miss in new cache
+    m = store.metrics
+    assert m.counter("ordering_cache_hits", scene="a").value == 2
+    assert m.counter("ordering_cache_misses", scene="a").value == 2
+
+
+def test_ordering_counters_survive_evict_revive(tmp_path):
+    """Evicting a scene parks its ordering counters (still visible in
+    stats under field_kind=evicted, including nn_hits); revival restores
+    them into the fresh cache and the registry keeps counting forward."""
+    store = _store(tmp_path, order_mode="trajectory")
+    f, c = _field_and_cubes(seed=0)
+    store.register("a", f, c)
+    oc = store.snapshot("a").ordering
+    o0 = np.array([4.0, 0.0, 1.0])
+    oc.get(o0)
+    oc.get(o0)
+    oc.get(o0 + np.array([0.3, 0.0, 0.0]))
+
+    store.evict("a")
+    parked = store.stats("a")["ordering_cache"]
+    assert parked == {"hits": 2, "misses": 1, "nn_hits": 1, "entries": 0}
+
+    oc2 = store.snapshot("a").ordering                   # transparent revive
+    s = oc2.stats()
+    assert (s["hits"], s["misses"], s["nn_hits"]) == (2, 1, 1)
+    oc2.get(o0)                                          # fresh cache: miss
+    oc2.get(o0)                                          # then exact hit
+    s = store.stats("a")["ordering_cache"]
+    assert (s["hits"], s["misses"], s["nn_hits"]) == (3, 2, 1)
+    m = store.metrics
+    assert m.counter("ordering_cache_hits", scene="a").value == 3
+    assert m.counter("ordering_cache_misses", scene="a").value == 2
+
+
 # -- stats surface ---------------------------------------------------------
 
 

@@ -1,0 +1,255 @@
+"""Temporal tier: radiance warping (serving/temporal.py), delta planning,
+deterministic active-pair compaction, trajectory-mode ordering cache, and
+the engine's frame-coherent `submit_delta` path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.rtnerf import NeRFConfig
+from repro.core import field as field_lib
+from repro.core import occupancy as occ_lib
+from repro.core import pipeline as rt_pipe
+from repro.core import rendering, tensorf
+from repro.core.rendering import look_at_camera
+from repro.obs import MetricsRegistry
+from repro.serving import RenderEngine
+from repro.serving import temporal
+
+CFG = NeRFConfig(grid_res=24, occ_res=24, cube_size=4, max_cubes=256,
+                 r_sigma=4, r_color=8, app_dim=8, mlp_hidden=16,
+                 max_samples_per_ray=64, train_rays=256)
+
+
+def _field_and_cubes(target=0.9, seed=0):
+    params = tensorf.init_field(CFG, jax.random.PRNGKey(seed))
+    field = field_lib.DenseField(params, CFG).prune(sparsity=target)
+    occ = occ_lib.build_occupancy(field, CFG, sigma_thresh=0.01)
+    cubes = occ_lib.extract_cubes(occ, CFG)
+    assert cubes.count > 0
+    return field, cubes
+
+
+def _smooth_frame(h, w, depth0=3.0, seed=0):
+    """A synthetic rendered frame: random radiance over a smooth (edge-free)
+    depth field — gradients far below the 0.15 relative edge threshold."""
+    rng = np.random.RandomState(seed)
+    rgb = rng.rand(h * w, 3)
+    yy, xx = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+    depth = (depth0 + 0.01 * (xx + yy)).reshape(-1).astype(np.float64)
+    return rgb, depth
+
+
+# -- warp_radiance ---------------------------------------------------------
+
+
+def test_warp_identity_reproduces_frame():
+    """Warping to the SAME camera is a no-op: every pixel lands back on
+    itself, radiance and surface depth survive, confidence is full."""
+    cam = look_at_camera([4.0, 0.0, 1.0], [0, 0, 0], 1.2 * 16, 16, 16)
+    rgb, depth = _smooth_frame(16, 16)
+    wr = temporal.warp_radiance(rgb, cam, cam, depth)
+    assert wr.confidence.all()
+    assert wr.warp_fraction == 1.0
+    np.testing.assert_allclose(wr.rgb, rgb, atol=1e-9)
+    np.testing.assert_allclose(wr.depth, depth, rtol=1e-6)
+    np.testing.assert_allclose(wr.opacity, 1.0)
+
+
+def test_warp_translation_flags_disocclusions():
+    """A real camera move leaves uncovered target pixels (disocclusion /
+    entered the frustum) flagged low-confidence; covered pixels carry
+    radiance that exists in the source frame (splat, not resample)."""
+    cam0 = look_at_camera([4.0, 0.0, 1.0], [0, 0, 0], 1.2 * 16, 16, 16)
+    cam1 = look_at_camera([3.6, 1.2, 1.0], [0, 0, 0], 1.2 * 16, 16, 16)
+    rgb, depth = _smooth_frame(16, 16)
+    wr = temporal.warp_radiance(rgb, cam0, cam1, depth)
+    assert 0.0 < wr.warp_fraction < 1.0
+    # every non-white warped pixel is a verbatim copy of SOME source pixel
+    warped = wr.rgb[np.any(wr.rgb != 1.0, axis=-1)]
+    src_set = {tuple(np.round(p, 12)) for p in rgb}
+    assert all(tuple(np.round(p, 12)) in src_set for p in warped)
+
+
+def test_warp_depth_edges_masked():
+    """A depth step (silhouette) poisons confidence around the edge even
+    under an identity warp — both sides of a discontinuity may hide a
+    disocclusion after any real motion."""
+    cam = look_at_camera([4.0, 0.0, 1.0], [0, 0, 0], 1.2 * 16, 16, 16)
+    rng = np.random.RandomState(1)
+    rgb = rng.rand(256, 3)
+    depth = np.full((16, 16), 2.0)
+    depth[:, 8:] = 4.0                       # step >> 0.15 relative thresh
+    wr = temporal.warp_radiance(rgb, cam, cam, depth.reshape(-1))
+    conf = wr.confidence.reshape(16, 16)
+    assert not conf[:, 6:10].any()           # edge columns + dilation
+    assert conf[:, :5].all() and conf[:, 11:].all()   # far columns clean
+
+
+def test_warp_background_rides_far_plane():
+    """Low-opacity pixels are background: they warp on the far plane and
+    keep zero opacity/depth so a chained warp still sees them as empty."""
+    cam = look_at_camera([4.0, 0.0, 1.0], [0, 0, 0], 1.2 * 16, 16, 16)
+    rgb, depth = _smooth_frame(16, 16)
+    op = np.ones(256)
+    op[:64] = 0.0                            # first rows: background
+    wr = temporal.warp_radiance(rgb, cam, cam, depth * op, opacity=op)
+    assert (wr.opacity[:64] == 0.0).all()
+    assert (wr.depth[:64] == 0.0).all()
+    assert (wr.opacity[64:] > 0.0).all()
+
+
+def test_warp_offscreen_everything_low_confidence():
+    """A camera that looks away from the scene gets no splats: white
+    frame, zero warp fraction — submit_delta would fall back to full."""
+    cam0 = look_at_camera([4.0, 0.0, 1.0], [0, 0, 0], 1.2 * 16, 16, 16)
+    away = look_at_camera([4.0, 0.0, 1.0], [4.0, 0.0, 100.0],
+                          1.2 * 16, 16, 16)
+    rgb, depth = _smooth_frame(16, 16)
+    wr = temporal.warp_radiance(rgb, cam0, away, depth)
+    assert wr.warp_fraction == 0.0
+    assert np.mean(wr.rgb == 1.0) > 0.95     # a stray splat may land; the
+    assert not wr.confidence.any()           # mask still trusts none of it
+
+
+# -- plan_delta ------------------------------------------------------------
+
+
+def test_plan_delta_buckets_and_pads():
+    conf = np.ones(64, bool)
+    conf[[3, 10, 11, 40, 63]] = False
+    wr = temporal.WarpResult(rgb=np.ones((64, 3)), depth=np.zeros(64),
+                             opacity=np.ones(64), confidence=conf, h=8, w=8)
+    plan = temporal.plan_delta(wr, bucket=16)
+    assert plan.n_real == 5
+    assert plan.n_rays == 16                 # rounded up to one bucket
+    np.testing.assert_array_equal(plan.idx[:5], [3, 10, 11, 40, 63])
+    assert (plan.idx[5:] == 0).all()         # pad points at pixel 0
+    assert plan.warp_fraction == pytest.approx(1.0 - 5 / 64)
+
+    # fully confident still emits one bucket (shape-stable flush)
+    wr_all = temporal.WarpResult(rgb=np.ones((64, 3)), depth=np.zeros(64),
+                                 opacity=np.ones(64),
+                                 confidence=np.ones(64, bool), h=8, w=8)
+    assert temporal.plan_delta(wr_all, bucket=16).n_rays == 16
+    with pytest.raises(ValueError):
+        temporal.plan_delta(wr, bucket=0)
+
+
+# -- deterministic active-pair compaction ----------------------------------
+
+
+def test_compact_select_matches_numpy_stable_oracle():
+    """The jitted compaction must equal numpy's stable argsort oracle —
+    hit pairs first in scan order, losers in scan order — and repeat
+    bit-identically across two separate jit invocations (fresh traces)."""
+    budget = 7
+    rng = np.random.RandomState(3)
+    for trial in range(2):                    # two distinct jit objects
+        f = jax.jit(lambda h: rt_pipe.compact_select(h, budget))
+        hit = rng.rand(40) < 0.3
+        got1 = np.asarray(f(jnp.asarray(hit)))
+        got2 = np.asarray(f(jnp.asarray(hit)))
+        oracle = np.argsort(~hit, kind="stable")[:budget]
+        np.testing.assert_array_equal(got1, oracle)
+        np.testing.assert_array_equal(got2, got1)
+
+
+# -- trajectory-mode ordering cache ----------------------------------------
+
+
+def test_ordering_cache_trajectory_exact_nn_and_miss():
+    """Quantised-pose keys: same cell -> exact hit, neighbouring cell
+    within nn_radius -> NN hit (same schedule object), far pose -> miss;
+    counters land in stats() AND the scene-labelled registry counters."""
+    _, cubes = _field_and_cubes()
+    reg = MetricsRegistry()
+    oc = rt_pipe.OrderingCache(cubes, mode="trajectory", scene="s",
+                               pose_quantum=0.25, nn_radius=1.5,
+                               registry=reg)
+    o0 = np.array([4.0, 0.0, 1.0])
+    p0 = oc.get(o0)                                      # miss
+    p_same = oc.get(o0 + 0.01)                           # same cell: exact
+    p_nn = oc.get(o0 + np.array([0.3, 0.0, 0.0]))        # next cell: NN
+    oc.get(np.array([-4.0, -4.0, -4.0]))                 # far: miss
+    assert oc.stats() == {"hits": 2, "misses": 2, "nn_hits": 1,
+                          "entries": 2}
+    np.testing.assert_array_equal(np.asarray(p_same), np.asarray(p0))
+    np.testing.assert_array_equal(np.asarray(p_nn), np.asarray(p0))
+    assert reg.counter("ordering_cache_hits", scene="s").value == 2
+    assert reg.counter("ordering_cache_misses", scene="s").value == 2
+
+    # with_cubes: fresh entries, counters (and registry wiring) carried
+    oc2 = oc.with_cubes(cubes)
+    assert oc2.stats()["entries"] == 0
+    assert (oc2.hits, oc2.misses, oc2.nn_hits) == (2, 2, 1)
+    oc2.get(o0)                                          # miss in new cache
+    assert oc2.stats()["misses"] == 3
+    assert reg.counter("ordering_cache_misses", scene="s").value == 3
+
+
+def test_ordering_cache_nn_deterministic_tie_break():
+    """Two cached keys equidistant from the probe: the (distance, key)
+    tie-break picks the lexicographically smaller key regardless of
+    insertion order."""
+    _, cubes = _field_and_cubes()
+    a = rt_pipe.OrderingCache(cubes, mode="trajectory", pose_quantum=1.0)
+    b = rt_pipe.OrderingCache(cubes, mode="trajectory", pose_quantum=1.0)
+    lo, hi = np.array([3.0, 0.0, 0.0]), np.array([5.0, 0.0, 0.0])
+    a.get(lo), a.get(hi)
+    b.get(hi), b.get(lo)                     # reversed insertion
+    probe = np.array([4.0, 0.0, 0.0])        # equidistant from both keys
+    assert a._nearest(a.key_for(probe)) == b._nearest(b.key_for(probe)) \
+        == (3, 0, 0)
+
+
+# -- engine delta path -----------------------------------------------------
+
+
+def test_engine_submit_delta_end_to_end():
+    """The frame-coherent path: keyframes (prev=None) are bit-identical to
+    `submit`; a delta frame composites warped + fresh into a full frame
+    close to the full render, with telemetry on the shared registry and
+    warp/mask/composite visible in the trace-derived breakdown."""
+    field, cubes = _field_and_cubes()
+    engine = RenderEngine(CFG, field, cubes, ray_chunk=64,
+                          delta_ray_bucket=32, order_mode="trajectory",
+                          adaptive_pair_budget=False)
+    cams = [look_at_camera([4.0 * np.cos(a), 4.0 * np.sin(a), 1.0],
+                           [0, 0, 0], 1.2 * 16, 16, 16)
+            for a in (0.0, 0.05, 0.10)]
+
+    ref0 = engine.submit(cams[0]).result()
+    key0 = engine.submit_delta(cams[0], prev=None).result()   # keyframe
+    np.testing.assert_array_equal(np.asarray(key0.img),
+                                  np.asarray(ref0.img))
+    assert key0.depth is not None and key0.opacity is not None
+    assert key0.warp_fraction == 0.0
+
+    d1 = engine.submit_delta(cams[1], prev=key0).result()
+    assert 0.0 < d1.warp_fraction < 1.0
+    full1 = engine.submit(cams[1]).result()
+    psnr = float(rendering.psnr(jnp.clip(jnp.asarray(d1.img), 0, 1),
+                                jnp.clip(jnp.asarray(full1.img), 0, 1)))
+    assert psnr >= 35.0, psnr
+
+    d2 = engine.submit_delta(cams[2], prev=d1).result()       # chained
+    assert np.isfinite(d2.depth).all() and 0.0 < d2.warp_fraction <= 1.0
+
+    s = engine.stats()["delta"]
+    assert s["views"] == 2 and s["fresh_rays"] > 0 and s["warped_rays"] > 0
+    m = engine.metrics
+    assert m.counter("warp_rays_total").value == s["warped_rays"]
+    assert m.counter("render_dispatch_total", path="delta").value == 2
+    assert m.histogram("warp_fraction").snapshot()["count"] == 2
+    stages = engine.stage_breakdown()
+    for st in ("warp", "mask", "render", "composite"):
+        assert st in stages, st
+
+    # a max_delta_frac no mask can meet forces a clean full render
+    fb = engine.submit_delta(cams[0], prev=d2,
+                             max_delta_frac=-1.0).result()
+    np.testing.assert_array_equal(np.asarray(fb.img), np.asarray(ref0.img))
+    assert fb.warp_fraction == 0.0
+    assert engine.stats()["delta"]["full_fallbacks"] == 1
+    engine.close()
