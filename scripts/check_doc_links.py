@@ -11,10 +11,13 @@ network. Exit non-zero listing every broken link.
 `--require FILE` (repeatable) additionally fails if FILE is absent —
 docs/*.md is a glob, so a deleted guide would otherwise just silently
 drop out of the check. CI pins the load-bearing guides this way.
+`--require FILE.md#anchor` further pins a heading inside the file
+(GitHub slug rules), so a renamed section breaks the build instead of
+silently orphaning the runbooks that deep-link it.
 
     python scripts/check_doc_links.py [files...]
     python scripts/check_doc_links.py --require docs/kernels.md \
-        --require docs/benchmarks.md
+        --require docs/architecture.md#fleet-tier
 """
 from __future__ import annotations
 
@@ -81,19 +84,30 @@ def main(argv) -> int:
     ap.add_argument("files", nargs="*")
     ap.add_argument("--require", action="append", default=[],
                     help="repo-relative file that must exist (repeatable); "
-                         "required .md files also join the checked set")
+                         "required .md files also join the checked set; "
+                         "FILE.md#anchor additionally requires a matching "
+                         "heading in the file")
     args = ap.parse_args(argv[1:])
     files = args.files or ["README.md"] + sorted(
         glob.glob(os.path.join(root, "docs", "*.md")))
     errors = []
     checked = {os.path.abspath(x if os.path.isabs(x)
                                else os.path.join(root, x)) for x in files}
-    for f in args.require:
+    for req in args.require:
+        f, _, frag = req.partition("#")
         path = os.path.abspath(f if os.path.isabs(f)
                                else os.path.join(root, f))
         if not os.path.exists(path):
             errors.append(f"{f}: required doc is missing")
-        elif f.endswith(".md") and path not in checked:
+            continue
+        if frag:
+            if not f.endswith(".md"):
+                errors.append(f"{req}: anchor requires a .md file")
+            elif slugify(frag) not in anchors_of(path):
+                errors.append(f"{req}: required anchor missing "
+                              f"(no heading #{frag} in {f})")
+        if f.endswith(".md") and path not in checked:
+            checked.add(path)
             files.append(f)
     for f in files:
         path = f if os.path.isabs(f) else os.path.join(root, f)

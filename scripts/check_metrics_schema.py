@@ -14,15 +14,22 @@ docs/observability.md:
     (when the window is non-empty);
   * flat names parse as `name` or `name{k=v,...}`.
 
-`--expect-counter NAME` / `--expect-histogram NAME` (repeatable) assert a
-metric of that base name exists — CI uses them to pin the serving-stack
-names (engine_views_served, request_stage_s, ...) so a rename cannot land
-without updating the docs and this gate. Exits non-zero with a pointed
-message on the first violation.
+`--expect-counter NAME` / `--expect-gauge NAME` / `--expect-histogram
+NAME` (repeatable) assert a metric of that base name exists — CI uses
+them to pin the serving-stack names (engine_views_served,
+request_stage_s, fleet_requests_total, ...) so a rename cannot land
+without updating the docs and this gate. `--expect-prefix-complete
+PREFIX` additionally flags metrics under that prefix that are NOT
+pinned — so a new fleet_* family cannot land undocumented either.
+Pin violations are collected and reported as one readable diff
+(`- missing ...` / `+ unexpected ...`), not a bare first-failure assert;
+structural envelope violations still exit on first hit.
 
     python scripts/check_metrics_schema.py /tmp/obs.json \
         --expect-counter engine_views_served \
-        --expect-histogram engine_latency_s
+        --expect-histogram engine_latency_s \
+        --expect-counter fleet_requests_total \
+        --expect-prefix-complete fleet_
 """
 from __future__ import annotations
 
@@ -51,7 +58,8 @@ def need_num(obj, key, where, *, integer=False):
     return v
 
 
-def check(snap, expect_counters, expect_histograms):
+def check(snap, expect_counters, expect_gauges, expect_histograms,
+          prefix_complete):
     if snap.get("schema") != "repro.obs/v1":
         fail(f"schema must be 'repro.obs/v1', got {snap.get('schema')!r}")
     need_num(snap, "ts_unix_s", "envelope")
@@ -89,16 +97,29 @@ def check(snap, expect_counters, expect_histograms):
                  f"(p50={h['p50']} p95={h['p95']} p99={h['p99']} "
                  f"max={h['max']})")
 
-    counters = {base_name(f) for f in metrics["counters"]}
-    hists = {base_name(f) for f in metrics["histograms"]}
-    for name in expect_counters:
-        if name not in counters:
-            fail(f"expected counter '{name}' missing "
-                 f"(have: {sorted(counters)})")
-    for name in expect_histograms:
-        if name not in hists:
-            fail(f"expected histogram '{name}' missing "
-                 f"(have: {sorted(hists)})")
+    # -- name pins: collect everything, fail once with a readable diff --
+    have = {kind: {base_name(f) for f in metrics[kind]}
+            for kind in ("counters", "gauges", "histograms")}
+    expected = {"counters": set(expect_counters),
+                "gauges": set(expect_gauges),
+                "histograms": set(expect_histograms)}
+    diff = []
+    for kind in ("counters", "gauges", "histograms"):
+        for name in sorted(expected[kind] - have[kind]):
+            diff.append(f"- missing {kind[:-1]} {name}")
+    pinned = set().union(*expected.values())
+    for prefix in prefix_complete:
+        for kind in ("counters", "gauges", "histograms"):
+            for name in sorted(have[kind]):
+                if name.startswith(prefix) and name not in pinned:
+                    diff.append(f"+ unexpected {kind[:-1]} {name} "
+                                f"(matches --expect-prefix-complete "
+                                f"{prefix!r} but is not pinned)")
+    if diff:
+        sys.exit("metrics schema violation: pinned names do not match "
+                 "the snapshot:\n  " + "\n  ".join(diff)
+                 + "\n(update the --expect-* pins AND "
+                 "docs/observability.md together)")
 
 
 def main():
@@ -107,16 +128,24 @@ def main():
     ap.add_argument("--expect-counter", action="append", default=[],
                     metavar="NAME", help="require a counter of this base "
                     "name (repeatable)")
+    ap.add_argument("--expect-gauge", action="append", default=[],
+                    metavar="NAME", help="require a gauge of this base "
+                    "name (repeatable)")
     ap.add_argument("--expect-histogram", action="append", default=[],
                     metavar="NAME", help="require a histogram of this base "
                     "name (repeatable)")
+    ap.add_argument("--expect-prefix-complete", action="append",
+                    default=[], metavar="PREFIX",
+                    help="flag metrics under PREFIX that are not pinned "
+                    "by an --expect-* flag (repeatable)")
     args = ap.parse_args()
     if args.snapshot == "-":
         snap = json.load(sys.stdin)
     else:
         with open(args.snapshot) as f:
             snap = json.load(f)
-    check(snap, args.expect_counter, args.expect_histogram)
+    check(snap, args.expect_counter, args.expect_gauge,
+          args.expect_histogram, args.expect_prefix_complete)
     n = sum(len(snap["metrics"][k]) for k in ("counters", "gauges",
                                               "histograms"))
     print(f"ok: repro.obs/v1 snapshot with {n} metrics "

@@ -10,6 +10,8 @@ novel-view rendering (rtnerf).
         --scene lego --finetune-steps 200 --finetune-every 50
     PYTHONPATH=src python -m repro.launch.serve --arch rtnerf \
         --scenes lego,chair,mic --max-resident-mb 2 --finetune-steps 100
+    PYTHONPATH=src python -m repro.launch.serve --arch rtnerf \
+        --scenes lego,chair,mic --fleet-workers 2 --max-resident-mb 2
 """
 from __future__ import annotations
 
@@ -235,6 +237,141 @@ def serve_nerf(args):
         mserver.close()
 
 
+def serve_fleet(args):
+    """Fleet tier: shard --scenes across --fleet-workers worker processes
+    by consistent hashing (serving.FleetRouter).
+
+    Each worker is a full RenderEngine in its own process; scenes are
+    trained/restored once in the launcher (same --ckpt-dir contract as the
+    single-process path), exported in encoded form, and registered lazily
+    on their owning worker. --max-resident-mb applies PER WORKER — the
+    point of sharding on a memory-bounded box is that each worker's ~1/K
+    shard stays resident instead of one engine LRU-thrashing across all
+    scenes. --fleet-replicas R pins the first scene (the designated hot
+    scene) on R workers behind one key; the router picks the least-loaded
+    replica per request. --deadline, --metrics-port and --metrics-dump
+    behave as in the single-process path, with the fleet_* metric
+    families layered on top (docs/observability.md).
+    """
+    import contextlib
+    import json
+    import os
+    import shutil
+    import tempfile
+
+    from repro.configs.base import mib_to_bytes
+    from repro.configs.rtnerf import NeRFConfig
+    from repro.data import rays as rays_lib
+    from repro.obs import MetricsRegistry, MetricsServer, snapshot_json
+    from repro.serving import FleetRouter, export_scene, prepare_field
+
+    if args.finetune_steps:
+        raise SystemExit(
+            "--fleet-workers does not combine with --finetune-steps yet: "
+            "fleet workers own their engines, so the fine-tune loop would "
+            "train a field no worker serves (ROADMAP: fleet fine-tuning)")
+    scenes = [s for s in args.scenes.split(",") if s] if args.scenes \
+        else [args.scene]
+    cfg = NeRFConfig(grid_res=48, occ_res=48, cube_size=4, max_cubes=1024,
+                     r_sigma=8, r_color=16, app_dim=12, mlp_hidden=32,
+                     max_samples_per_ray=128, train_rays=1024,
+                     max_resident_bytes=mib_to_bytes(args.max_resident_mb))
+
+    registry = MetricsRegistry()
+    holder = {"router": None}
+
+    def _extra_stats():
+        r = holder["router"]
+        return r.stats() if r is not None else {"phase": "loading"}
+
+    mserver = None
+    if args.metrics_port is not None:
+        mserver = MetricsServer(registry, port=args.metrics_port,
+                                extra=_extra_stats)
+        print(f"[obs] metrics: http://127.0.0.1:{mserver.port}/metrics "
+              f"(Prometheus) and /metrics.json (snapshot)", flush=True)
+
+    # Train/restore in the launcher (one jit, reuses --ckpt-dir exactly
+    # like the single-process path), then export each scene's encoded
+    # streams + cubes once; workers register from these paths, so every
+    # replica and every post-crash re-registration serves the identical
+    # representation.
+    export_root = tempfile.mkdtemp(prefix="repro-fleet-")
+    paths = {}
+    for name in scenes:
+        ckpt = os.path.join(args.ckpt_dir, name) if args.ckpt_dir else None
+        field = prepare_field(cfg, name, ckpt_dir=ckpt,
+                              train_steps=args.train_steps, n_views=8,
+                              image_hw=args.res)
+        if args.prune_sparsity > 0.0:
+            field = field.prune(sparsity=args.prune_sparsity)
+        paths[name] = export_scene(os.path.join(export_root, name),
+                                   field, cfg=cfg, scene=name)
+
+    router = FleetRouter(
+        cfg, paths, n_workers=args.fleet_workers,
+        engine_kwargs=dict(ray_chunk=args.res * args.res,
+                           max_batch_views=args.views),
+        registry=registry)
+    holder["router"] = router
+    try:
+        for name in scenes:
+            print(f"scene '{name}' -> worker {router.owner_of(name)}")
+        if args.fleet_replicas > 1:
+            hot = scenes[0]
+            router.set_replicas(hot, args.fleet_replicas)
+            print(f"hot scene '{hot}' replicated on "
+                  f"{router.replica_workers(hot)}")
+
+        gt_scenes = {name: rays_lib.make_scene(name) for name in scenes}
+        cams = rays_lib.make_cameras(args.views, args.res, args.res)
+        gts = {name: [rays_lib.render_gt(gt_scenes[name], cam)
+                      for cam in cams] for name in scenes}
+        prof = (jax.profiler.trace(args.profile_dir) if args.profile_dir
+                else contextlib.nullcontext())
+        with prof:
+            futures = [(name, router.submit(cam, gt, scene=name,
+                                            deadline_s=args.deadline))
+                       for name in scenes
+                       for cam, gt in zip(cams, gts[name])]
+            for i, (name, fut) in enumerate(futures):
+                r = fut.result()
+                if r.timed_out:
+                    print(f"{name} view {i}: TIMED OUT after "
+                          f"{r.latency_s:.2f}s")
+                    continue
+                print(f"{name} view {i}: psnr={r.psnr:.2f} "
+                      f"latency={r.latency_s:.2f}s worker={r.worker}"
+                      f"{' (replayed)' if r.replayed else ''}")
+        if args.profile_dir:
+            print(f"[obs] XLA profile written to {args.profile_dir}")
+
+        s = router.stats()
+        print(f"fleet: {s['results_total']} results over "
+              f"{len(scenes)} scenes / {s['workers_alive']} workers, "
+              f"p95={s['latency_p95_s']:.2f}s, "
+              f"timeouts={s['timeouts_total']}, "
+              f"replays={s['replays_total']}, "
+              f"deaths={s['worker_deaths']}, "
+              f"routing v{s['routing_version']}")
+        for wname, ws in sorted(s["workers"].items()):
+            print(f"  {wname}: views={ws.get('views_served', 0)} "
+                  f"fps={ws.get('fps', 0.0):.3f} "
+                  f"resident={ws.get('resident_scenes', [])} "
+                  f"evictions={ws.get('evictions', 0)} "
+                  f"revivals={ws.get('revivals', 0)}")
+        if args.metrics_dump:
+            snap = snapshot_json(registry, extra=s)
+            with open(args.metrics_dump, "w") as f:
+                json.dump(snap, f, indent=2)
+            print(f"[obs] metrics snapshot written to {args.metrics_dump}")
+    finally:
+        router.close()
+        shutil.rmtree(export_root, ignore_errors=True)
+        if mserver is not None:
+            mserver.close()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True,
@@ -255,6 +392,17 @@ def main():
                          "scenes are LRU-evicted to encoded checkpoints "
                          "and revived on their next request (default: "
                          "unlimited)")
+    ap.add_argument("--fleet-workers", type=int, default=0,
+                    help="rtnerf only: serve through K worker processes "
+                         "sharded by consistent hashing instead of one "
+                         "in-process engine (serving.FleetRouter); "
+                         "--max-resident-mb then applies per worker "
+                         "(0 = single-process path)")
+    ap.add_argument("--fleet-replicas", type=int, default=1,
+                    help="rtnerf only, with --fleet-workers: replicate the "
+                         "first --scenes entry (the hot scene) on this many "
+                         "workers behind one key; the router load-balances "
+                         "across the replicas")
     ap.add_argument("--views", type=int, default=2)
     ap.add_argument("--res", type=int, default=64)
     ap.add_argument("--train-steps", type=int, default=200)
@@ -304,8 +452,13 @@ def main():
                          "there (repeated serves reuse them instead of "
                          "retraining)")
     args = ap.parse_args()
+    if args.fleet_workers and args.arch != "rtnerf":
+        ap.error("--fleet-workers requires --arch rtnerf")
     if args.arch == "rtnerf":
-        serve_nerf(args)
+        if args.fleet_workers:
+            serve_fleet(args)
+        else:
+            serve_nerf(args)
     else:
         serve_lm(args)
 

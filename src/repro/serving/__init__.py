@@ -5,3 +5,7 @@ from repro.serving.batching import (  # noqa: F401
 from repro.serving.store import (  # noqa: F401
     SceneRecord, SceneSnapshot, SceneStore)
 from repro.serving.finetune import FineTuneLoop  # noqa: F401
+from repro.serving.fleet import (  # noqa: F401
+    export_scene, load_scene)
+from repro.serving.router import (  # noqa: F401
+    FleetError, FleetFuture, FleetResult, FleetRouter, HashRing)

@@ -366,6 +366,13 @@ class RenderEngine:
         histogram the old deque became)."""
         return self._m_latency.window()
 
+    def queue_depth(self) -> int:
+        """Requests currently queued (not yet claimed by a flush) — the
+        fleet worker reports this in its `stats` reply so the router's
+        `fleet_worker_queue_depth{worker=}` gauge tracks real backlog."""
+        with self._lock:
+            return len(self._queue)
+
     def set_tracing(self, enabled: bool):
         """Toggle per-request span tracing (metrics counters always run).
         Requests already queued keep the tracing mode they were submitted

@@ -1,0 +1,391 @@
+"""Fleet tier, worker side: one process = one `SceneStore`-backed
+`RenderEngine`, driven over a pipe by `serving.router.FleetRouter`.
+
+The ROADMAP's "millions of users" story needs many hosts, and RT-NeRF's
+hybrid encodings only pay off at scale when hot scenes stay *resident*
+near the requests that need them: a single host serving an interleaved
+multi-user stream across more scenes than its device memory holds spends
+its time spilling and reviving encoded checkpoints instead of rendering.
+The fleet tier restores that locality by sharding scenes across worker
+processes with scene-affinity routing (`router.HashRing`) so each
+worker's working set fits its budget.
+
+This module owns everything that crosses the process boundary:
+
+  * **Wire format** (`pack_msg`/`unpack_msg`): length-prefixed framing —
+    a 4-byte big-endian JSON-header length, the UTF-8 JSON header, then
+    for each array an 8-byte length prefix and its raw C-order bytes
+    (dtype/shape carried in the header's ``_arrays`` table). No pickle:
+    the protocol is explicit and versioned (``_v``), so a router and a
+    worker from different builds fail loudly instead of silently
+    mis-decoding. Messages travel over `multiprocessing.Pipe`
+    connections via ``send_bytes``/``recv_bytes``.
+  * **Scene export** (`export_scene`/`load_scene`): a scene's source of
+    truth on shared storage — the encoded field (`ckpt.spill_field`,
+    bitmap/COO streams as-is) plus its cube set
+    (`store.save_cubes`). The router registers scenes on workers by
+    path; a worker loads and registers bit-identically, which is what
+    makes replicated hot scenes serve bit-identical frames from every
+    replica and makes post-crash re-registration safe.
+  * **Worker loop** (`worker_main`): drains all queued messages each
+    cycle (so a burst micro-batches through one engine flush), answers
+    control ops inline (register / evict / prefetch / pin / stats /
+    inject / ping / shutdown), and resolves render ops through
+    `RenderEngine.submit(...deadline_s=...)` — the engine's existing
+    deadline semantics fail stale requests with a timed-out result
+    instead of rendering them late, fleet or no fleet.
+
+Fault injection is part of the protocol, not test monkey-patching: the
+``inject`` op plants an artificial pre-flush stall in the worker, which
+is how the test suite builds slow/stalled workers that still speak the
+protocol (`tests/conftest.py::fleet_faults`). Worker death needs no
+cooperation at all — a SIGKILLed worker's pipe EOFs and the router
+re-hashes (`router.FleetRouter._on_worker_death`).
+
+Prefetch-revival (`prefetch` op) runs `SceneStore.ensure_resident` on a
+background thread so a predicted-next scene's disk I/O never blocks the
+serving loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+WIRE_VERSION = 1
+
+# header-length prefix (u32) / per-array length prefix (u64)
+_HDR_LEN = struct.Struct(">I")
+_ARR_LEN = struct.Struct(">Q")
+
+
+class WireError(ValueError):
+    """A frame that does not decode under this protocol version."""
+
+
+def pack_msg(msg: Dict) -> bytes:
+    """Encode one message: JSON-able fields go in the header, top-level
+    numpy arrays are hoisted into length-prefixed raw buffers described by
+    the header's ``_arrays`` table. `unpack_msg` is the exact inverse."""
+    head, arrays = {}, []
+    for k, v in msg.items():
+        if isinstance(v, np.ndarray):
+            arrays.append((k, np.ascontiguousarray(v)))
+        else:
+            head[k] = v
+    head["_v"] = WIRE_VERSION
+    head["_arrays"] = [{"key": k, "dtype": str(a.dtype),
+                        "shape": list(a.shape)} for k, a in arrays]
+    hb = json.dumps(head).encode("utf-8")
+    parts = [_HDR_LEN.pack(len(hb)), hb]
+    for _, a in arrays:
+        b = a.tobytes()
+        parts.append(_ARR_LEN.pack(len(b)))
+        parts.append(b)
+    return b"".join(parts)
+
+
+def unpack_msg(buf: bytes) -> Dict:
+    """Decode one `pack_msg` frame back into a dict (arrays as numpy)."""
+    if len(buf) < _HDR_LEN.size:
+        raise WireError(f"frame too short ({len(buf)} bytes)")
+    (hlen,) = _HDR_LEN.unpack_from(buf, 0)
+    off = _HDR_LEN.size
+    if len(buf) < off + hlen:
+        raise WireError("truncated header")
+    head = json.loads(buf[off:off + hlen].decode("utf-8"))
+    off += hlen
+    if head.get("_v") != WIRE_VERSION:
+        raise WireError(f"wire version {head.get('_v')!r}, "
+                        f"expected {WIRE_VERSION}")
+    msg = {k: v for k, v in head.items() if k not in ("_v", "_arrays")}
+    for spec in head["_arrays"]:
+        (alen,) = _ARR_LEN.unpack_from(buf, off)
+        off += _ARR_LEN.size
+        raw = buf[off:off + alen]
+        if len(raw) != alen:
+            raise WireError(f"truncated array '{spec['key']}'")
+        off += alen
+        msg[spec["key"]] = np.frombuffer(
+            raw, dtype=np.dtype(spec["dtype"])).reshape(spec["shape"]).copy()
+    return msg
+
+
+def cam_to_wire(cam) -> Dict:
+    """Flatten a `rendering.Camera` into wire fields (prefix `cam_`)."""
+    return {"cam_c2w": np.asarray(cam.c2w, np.float32),
+            "cam_origin": np.asarray(cam.origin, np.float32),
+            "cam_focal": float(cam.focal),
+            "cam_h": int(cam.h), "cam_w": int(cam.w)}
+
+
+def cam_from_wire(msg: Dict):
+    import jax.numpy as jnp
+
+    from repro.core.rendering import Camera
+
+    return Camera(jnp.asarray(msg["cam_c2w"]), jnp.asarray(msg["cam_origin"]),
+                  float(msg["cam_focal"]), int(msg["cam_h"]),
+                  int(msg["cam_w"]))
+
+
+# -- scene export (shared-storage source of truth) -------------------------
+
+
+def export_scene(path: str, field, cubes=None, *, cfg=None,
+                 scene: str = "") -> str:
+    """Write a scene's registration source: the encoded field streams
+    (`ckpt.spill_field`, bit-for-bit) + its cube set. Workers register
+    from this path (`load_scene`), so every replica — and every post-crash
+    re-registration — serves the identical representation. Cubes are
+    rebuilt here once when not supplied (needs `cfg`)."""
+    from repro.ckpt import checkpoint as ckpt_lib
+    from repro.core import field as field_lib
+    from repro.core import occupancy as occ_lib
+    from repro.serving import store as store_lib
+
+    if cfg is not None:
+        field = field_lib.as_backend(field, cfg).encode()
+    if cubes is None:
+        if cfg is None:
+            raise ValueError("export_scene needs cubes or cfg to build them")
+        occ = occ_lib.build_occupancy(field, cfg)
+        cubes = occ_lib.extract_cubes(occ, cfg)
+    os.makedirs(path, exist_ok=True)
+    ckpt_lib.spill_field(path, field, extra_meta={"scene": scene})
+    store_lib.save_cubes(path, cubes)
+    return path
+
+
+def load_scene(path: str, cfg) -> Tuple[object, object]:
+    """-> (FieldBackend, CubeSet): the exact representation `export_scene`
+    wrote (same formats, packed bytes, cube geometry)."""
+    from repro.ckpt import checkpoint as ckpt_lib
+    from repro.serving import store as store_lib
+
+    field, _ = ckpt_lib.unspill_field(path, cfg)
+    return field, store_lib.load_cubes(path)
+
+
+# -- worker process --------------------------------------------------------
+
+
+class _Worker:
+    """One worker's serving state: engine + store + injected faults."""
+
+    def __init__(self, name: str, cfg, engine_kwargs: Dict):
+        from repro.serving.engine import RenderEngine
+
+        self.name = name
+        self.cfg = cfg
+        self.engine = RenderEngine(cfg, **engine_kwargs)
+        self.stall_s = 0.0            # fault injection: pre-flush sleep
+        self._prefetches = 0
+        self._prefetch_lock = threading.Lock()
+        self._prefetch_threads = []
+
+    def register(self, scene: str, path: str, *, pin: bool = False,
+                 priority: int = 0):
+        field, cubes = load_scene(path, self.cfg)
+        self.engine.register_scene(scene, field, cubes)
+        store = self.engine.store
+        if pin:
+            store.pin(scene, True)
+        if priority:
+            store.set_priority(scene, priority)
+
+    def prefetch(self, scene: str):
+        """Async revival of a predicted-next scene: the disk I/O runs on a
+        background thread so the serving loop never waits behind it."""
+        def work():
+            try:
+                self.engine.store.ensure_resident(scene)
+            except Exception:
+                pass                  # scene may have been dropped meanwhile
+            with self._prefetch_lock:
+                self._prefetches += 1
+        t = threading.Thread(target=work, name=f"{self.name}-prefetch",
+                             daemon=True)
+        t.start()
+        self._prefetch_threads = [x for x in self._prefetch_threads
+                                  if x.is_alive()] + [t]
+
+    def stats(self) -> Dict:
+        s = self.engine.stats()
+        with self._prefetch_lock:
+            prefetches = self._prefetches
+        return {
+            "worker": self.name,
+            "views_served": s["views_served"],
+            "fps": s["fps"],
+            "latency_p50_s": s["latency_p50_s"],
+            "latency_p95_s": s["latency_p95_s"],
+            "timeouts": s["timeouts"],
+            "queue_depth": self.engine.queue_depth(),
+            "n_scenes": s["n_scenes"],
+            "resident_scenes": s["resident_scenes"],
+            "resident_bytes": s["resident_bytes"],
+            "evictions": s["evictions"],
+            "revivals": s["revivals"],
+            "prefetches": prefetches,
+            "scene_views": {n: sc["views_served"]
+                            for n, sc in s["scenes"].items()},
+        }
+
+
+def worker_main(conn, name: str, cfg_fields: Dict, engine_kwargs: Dict):
+    """Entry point of one fleet worker process (spawn-safe: module level,
+    everything it needs arrives as plain dicts). Speaks the `pack_msg`
+    protocol on `conn` until EOF or a ``shutdown`` op.
+
+    Per cycle it drains every queued message in arrival order — control
+    ops execute inline (pipe FIFO means a ``register`` sent ahead of the
+    first ``render`` for a scene lands first), render ops queue into the
+    engine and flush once as a micro-batch. A per-message failure answers
+    that message with an ``err`` reply instead of killing the worker."""
+    from repro.configs.rtnerf import NeRFConfig
+
+    cfg = NeRFConfig(**cfg_fields)
+    w = _Worker(name, cfg, engine_kwargs)
+
+    def send(msg: Dict):
+        conn.send_bytes(pack_msg(msg))
+
+    running = True
+    while running:
+        try:
+            frames = [conn.recv_bytes()]
+        except (EOFError, OSError):
+            break
+        while conn.poll(0):
+            try:
+                frames.append(conn.recv_bytes())
+            except (EOFError, OSError):
+                running = False
+                break
+        renders = []
+        for raw in frames:
+            try:
+                m = unpack_msg(raw)
+                op = m.get("op")
+                if op == "render":
+                    cam = cam_from_wire(m)
+                    gt = m.get("gt")
+                    fut = w.engine.submit(cam, gt, scene=m["scene"],
+                                          deadline_s=m.get("deadline_s"))
+                    renders.append((m["req"], m["scene"], fut,
+                                    time.perf_counter()))
+                elif op == "register":
+                    w.register(m["scene"], m["path"],
+                               pin=bool(m.get("pin", False)),
+                               priority=int(m.get("priority", 0)))
+                    send({"op": "ok", "req": m.get("req")})
+                elif op == "evict":
+                    w.engine.store.evict(m["scene"])
+                    send({"op": "ok", "req": m.get("req")})
+                elif op == "prefetch":
+                    w.prefetch(m["scene"])
+                    send({"op": "ok", "req": m.get("req")})
+                elif op == "pin":
+                    store = w.engine.store
+                    store.pin(m["scene"], bool(m.get("pinned", True)))
+                    if "priority" in m:
+                        store.set_priority(m["scene"], int(m["priority"]))
+                    send({"op": "ok", "req": m.get("req")})
+                elif op == "inject":
+                    w.stall_s = float(m.get("stall_s", 0.0))
+                    send({"op": "ok", "req": m.get("req")})
+                elif op == "stats":
+                    send({"op": "stats", "req": m.get("req"),
+                          "stats": w.stats()})
+                elif op == "ping":
+                    send({"op": "pong", "req": m.get("req")})
+                elif op == "shutdown":
+                    running = False
+                else:
+                    raise WireError(f"unknown op {op!r}")
+            except (EOFError, OSError, BrokenPipeError):
+                running = False
+                break
+            except Exception as e:       # answer THIS message, keep serving
+                try:
+                    req = unpack_msg(raw).get("req")
+                except Exception:
+                    req = None
+                try:
+                    send({"op": "err", "req": req,
+                          "error": f"{type(e).__name__}: {e}"})
+                except (OSError, BrokenPipeError):
+                    running = False
+                    break
+        if w.stall_s > 0:                # injected fault: stalled worker
+            time.sleep(w.stall_s)
+        if renders:
+            try:
+                w.engine.flush()
+            except Exception as e:
+                for req, scene, fut, _ in renders:
+                    try:
+                        send({"op": "err", "req": req,
+                              "error": f"{type(e).__name__}: {e}"})
+                    except (OSError, BrokenPipeError):
+                        running = False
+                renders = []
+            for req, scene, fut, t0 in renders:
+                try:
+                    r = fut.result(timeout=60.0)
+                except Exception as e:
+                    send({"op": "err", "req": req,
+                          "error": f"{type(e).__name__}: {e}"})
+                    continue
+                out = {"op": "result", "req": req, "scene": r.scene,
+                       "worker": name, "timed_out": bool(r.timed_out),
+                       "psnr": (None if r.psnr is None else float(r.psnr)),
+                       "worker_latency_s": time.perf_counter() - t0}
+                if r.img is not None:
+                    out["img"] = np.asarray(r.img, np.float32)
+                try:
+                    send(out)
+                except (OSError, BrokenPipeError):
+                    running = False
+                    break
+    try:
+        w.engine.close()
+    except Exception:
+        pass
+    try:
+        conn.close()
+    except Exception:
+        pass
+
+
+def cfg_to_fields(cfg) -> Dict:
+    """NeRFConfig -> plain dict for the spawn boundary."""
+    import dataclasses
+
+    return dataclasses.asdict(cfg)
+
+
+def spawn_worker(ctx, name: str, cfg, engine_kwargs: Dict,
+                 *, daemon: bool = False):
+    """-> (Process, parent Connection). The child runs `worker_main`."""
+    import multiprocessing as mp  # noqa: F401  (ctx carries the API)
+
+    parent, child = ctx.Pipe(duplex=True)
+    proc = ctx.Process(target=worker_main,
+                       args=(child, name, cfg_to_fields(cfg),
+                             dict(engine_kwargs)),
+                       name=f"fleet-{name}", daemon=daemon)
+    proc.start()
+    child.close()
+    return proc, parent
+
+
+__all__ = ["WIRE_VERSION", "WireError", "pack_msg", "unpack_msg",
+           "cam_to_wire", "cam_from_wire", "export_scene", "load_scene",
+           "worker_main", "spawn_worker", "cfg_to_fields"]

@@ -61,6 +61,25 @@ from repro.obs import Counter, Histogram, MetricsRegistry
 CUBES_FILE = "cubes.npz"
 
 
+def save_cubes(directory: str, cubes: CubeSet):
+    """Persist a CubeSet next to a spilled/exported field (`CUBES_FILE`)
+    so revival reloads the exact geometry instead of rebuilding it. Shared
+    by the store's eviction path and the fleet tier's scene export
+    (`serving.fleet.export_scene`)."""
+    np.savez(os.path.join(directory, CUBES_FILE),
+             centers=np.asarray(cubes.centers),
+             valid=np.asarray(cubes.valid), count=cubes.count,
+             radius=cubes.radius, occ=np.asarray(cubes.occ))
+
+
+def load_cubes(directory: str) -> CubeSet:
+    """Inverse of `save_cubes` (reloaded, never rebuilt)."""
+    with np.load(os.path.join(directory, CUBES_FILE)) as z:
+        return CubeSet(jnp.asarray(z["centers"]), jnp.asarray(z["valid"]),
+                       int(z["count"]), float(z["radius"]),
+                       jnp.asarray(z["occ"]))
+
+
 class SceneSnapshot(NamedTuple):
     """A consistent per-scene view for one flush: renders read this, never
     the live record, so publishes/evictions mid-render can't tear it."""
@@ -117,6 +136,8 @@ class SceneRecord:
     resident: bool = False
     spill_path: Optional[str] = None
     last_used: int = 0
+    pinned: bool = False          # never LRU-evicted while pinned
+    priority: int = 0             # higher survives budget pressure longer
     _ord_hits: int = 0            # ordering counters parked while evicted
     _ord_misses: int = 0
     _ord_nn_hits: int = 0
@@ -298,20 +319,41 @@ class SceneStore:
             return sum(r.factor_bytes for r in self._records.values()
                        if r.resident)
 
+    # -- pin / priority (fleet-tier hooks) ---------------------------------
+
+    def pin(self, name: str, pinned: bool = True):
+        """Pin a scene against LRU eviction: a pinned scene is never chosen
+        as a budget victim (explicit `evict()` still works — the caller is
+        being deliberate there). The fleet router pins a worker's share of
+        replicated hot scenes so popularity spikes on cold scenes can't
+        evict them."""
+        with self._lock:
+            self._get(name).pinned = bool(pinned)
+
+    def set_priority(self, name: str, priority: int):
+        """Eviction priority: under budget pressure the LOWEST-priority
+        resident scene is evicted first (ties broken by LRU clock).
+        Default 0; the router maps scene popularity onto this."""
+        with self._lock:
+            self._get(name).priority = int(priority)
+
     # -- eviction / revival ------------------------------------------------
 
     def _enforce_budget(self, protect: Optional[str] = None):
-        """LRU-evict resident scenes (never `protect`, never the last one
-        standing if it alone exceeds the budget — an unserveable store
-        would be worse than an over-budget one) until under budget."""
+        """Evict resident scenes until under budget. Victim order: lowest
+        priority first, then least-recently-used. Never evicts `protect`,
+        pinned scenes, or the last one standing if it alone exceeds the
+        budget — an unserveable store would be worse than an over-budget
+        one."""
         if self.max_resident_bytes is None:
             return
         while self.resident_bytes() > self.max_resident_bytes:
             victims = [r for r in self._records.values()
-                       if r.resident and r.name != protect]
+                       if r.resident and r.name != protect and not r.pinned]
             if not victims:
                 break
-            self.evict(min(victims, key=lambda r: r.last_used).name)
+            self.evict(min(victims,
+                           key=lambda r: (r.priority, r.last_used)).name)
 
     def evict(self, name: str):
         """Demote a resident scene to its encoded checkpoint: spill the
@@ -325,11 +367,7 @@ class SceneStore:
             path = os.path.join(self.spill_dir, name)
             ckpt_lib.spill_field(path, rec.field,
                                  extra_meta={"scene": name})
-            c = rec.cubes
-            np.savez(os.path.join(path, CUBES_FILE),
-                     centers=np.asarray(c.centers),
-                     valid=np.asarray(c.valid), count=c.count,
-                     radius=c.radius, occ=np.asarray(c.occ))
+            save_cubes(path, rec.cubes)
             rec._ord_hits = rec.ordering.hits
             rec._ord_misses = rec.ordering.misses
             rec._ord_nn_hits = rec.ordering.nn_hits
@@ -347,11 +385,7 @@ class SceneStore:
             rec = self._get(name)
             if not rec.resident:
                 field, _ = ckpt_lib.unspill_field(rec.spill_path, self.cfg)
-                with np.load(os.path.join(rec.spill_path, CUBES_FILE)) as z:
-                    cubes = CubeSet(jnp.asarray(z["centers"]),
-                                    jnp.asarray(z["valid"]),
-                                    int(z["count"]), float(z["radius"]),
-                                    jnp.asarray(z["occ"]))
+                cubes = load_cubes(rec.spill_path)
                 # placement only — the representation is already encoded
                 field = distributed.place_field(
                     field_lib.as_backend(field, self.cfg), self.rules)
@@ -412,6 +446,8 @@ class SceneStore:
             "field_kind": (rec.field.kind if rec.resident else "evicted"),
             "occ_accesses_per_view": (float(rec.cubes.count)
                                       if rec.resident else 0.0),
+            "pinned": rec.pinned,
+            "priority": rec.priority,
             "swaps": int(m.swaps.value),
             "swap_latency_s_last": m.swap_latencies.last,
             "swap_latency_s_max": m.swap_latencies.max,   # all-time

@@ -74,3 +74,108 @@ except ModuleNotFoundError:                       # degrade, don't die
     _hyp.HealthCheck = _HealthCheck
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+
+# -- fleet marker ----------------------------------------------------------
+# Multi-process fleet tests spawn worker processes that each pay a jit
+# warm-up, which would dominate the tier-1 wall clock. They run when asked
+# for explicitly: `pytest --fleet`, REPRO_FLEET=1, or a direct
+# `pytest tests/test_fleet.py` invocation (the CI fleet-smoke job).
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--fleet", action="store_true", default=False,
+        help="run multi-process fleet tests (@pytest.mark.fleet)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "fleet: multi-process fleet-tier test (skipped unless --fleet, "
+        "REPRO_FLEET=1, or test_fleet.py is invoked directly)")
+
+
+def _fleet_enabled(config) -> bool:
+    if config.getoption("--fleet") or os.environ.get("REPRO_FLEET") == "1":
+        return True
+    return any("test_fleet" in str(a) for a in config.invocation_params.args)
+
+
+def pytest_collection_modifyitems(config, items):
+    if _fleet_enabled(config):
+        return
+    skip = pytest.mark.skip(
+        reason="fleet test: needs --fleet / REPRO_FLEET=1")
+    for item in items:
+        if "fleet" in item.keywords:
+            item.add_marker(skip)
+
+
+# -- fault injection -------------------------------------------------------
+
+
+class _StallHandle:
+    """Handle for an in-engine render stall: `entered` fires when a flush
+    has called into the (wrapped) render and is now sleeping."""
+
+    def __init__(self):
+        import threading
+        self.entered = threading.Event()
+        self.delay_s = 0.0
+        self.calls = 0
+
+
+@pytest.fixture
+def stall_render():
+    """Artificially delay an engine's flush thread: wraps `engine._render`
+    so each call signals `handle.entered`, sleeps `handle.delay_s`, then
+    renders normally. Models a slow/stalled flush without touching engine
+    code — used to assert deadline semantics still fire (test_serving) and
+    to build slow workers (fleet tests use the protocol-level `inject` op
+    instead, since the engine lives in another process)."""
+    import time as _time
+
+    patched = []
+
+    def arm(engine, delay_s):
+        handle = _StallHandle()
+        handle.delay_s = float(delay_s)
+        inner = engine._render
+
+        def stalled(*a, **kw):
+            handle.calls += 1
+            handle.entered.set()
+            _time.sleep(handle.delay_s)
+            return inner(*a, **kw)
+
+        engine._render = stalled
+        patched.append((engine, inner))
+        return handle
+
+    yield arm
+    for engine, inner in patched:
+        engine._render = inner
+
+
+@pytest.fixture
+def fleet_faults():
+    """Fault injectors against a live `FleetRouter`:
+
+      * `kill(router, worker)` — SIGKILL the worker process (hard crash:
+        no goodbye on the pipe, the router finds out from EOF).
+      * `stall(router, worker, stall_s)` — plant a pre-flush sleep via
+        the wire-level `inject` op (slow-worker, still protocol-alive).
+    """
+    import signal
+    import types as types_lib
+
+    def kill(router, worker):
+        os.kill(router.worker_pid(worker), signal.SIGKILL)
+
+    def stall(router, worker, stall_s):
+        router.inject(worker, stall_s=float(stall_s))
+
+    return types_lib.SimpleNamespace(kill=kill, stall=stall)

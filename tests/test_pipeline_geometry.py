@@ -137,7 +137,8 @@ def test_ordering_cache_hits_by_octant_ranking():
     cache = rt_pipe.OrderingCache(cubes)
     p1 = cache.get([4.0, 1.0, 1.5])
     p2 = cache.get([3.9, 0.9, 1.4])          # same octant ranking -> hit
-    assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
+    assert cache.stats() == {"hits": 1, "misses": 1, "nn_hits": 0,
+                             "entries": 1}
     np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
     # same octant (+,+,+) but different dominant axis -> different ranking
     # -> MISS (reusing here would composite near cubes after far ones)

@@ -237,6 +237,32 @@ def test_engine_no_deadline_never_times_out():
     assert engine.stats()["timeouts"] == 0
 
 
+def test_engine_deadline_fires_during_stalled_flush(stall_render):
+    """Deadlines must hold even when the flush thread itself is slow: with
+    the render artificially stalled (conftest `stall_render` fault
+    injector), a short-deadline request queued behind the stalled flush
+    still resolves as a timeout at the next cycle — it is never rendered
+    late and never hangs."""
+    field, cubes = _field_and_cubes()
+    engine = RenderEngine(CFG, field, cubes, ray_chunk=16 * 16,
+                          auto_flush_interval=0.05)
+    try:
+        cams = rays_lib.make_cameras(3, 16, 16)
+        engine.submit(cams[0]).result(timeout=120.0)   # warm the jit path
+        handle = stall_render(engine, delay_s=0.8)
+        slow = engine.submit(cams[1])                  # no deadline
+        assert handle.entered.wait(30.0)               # flush is stalling
+        stale = engine.submit(cams[2], deadline_s=0.05)
+        r_stale = stale.result(timeout=60.0)
+        r_slow = slow.result(timeout=60.0)
+        assert r_stale.timed_out and r_stale.img is None
+        assert not r_slow.timed_out
+        assert np.isfinite(r_slow.img).all()
+        assert engine.stats()["timeouts"] == 1
+    finally:
+        engine.close()
+
+
 # -- live field hot-swap ---------------------------------------------------
 
 

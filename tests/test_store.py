@@ -423,3 +423,104 @@ def test_engine_stats_scene_keyed(tmp_path):
     assert engine.stats(scene="a")["views_served"] == 0
     with pytest.raises(KeyError):
         engine.stats(scene="zzz")
+
+
+# -- eviction vs concurrent revival (lock-ordering contract) ---------------
+
+
+def test_store_concurrent_revival_races_single_unspill(tmp_path,
+                                                       monkeypatch):
+    """Two threads touch an evicted scene at the same instant: the store
+    lock admits exactly one unspill (the second toucher finds the record
+    already revived), and both renders are bit-identical to the
+    pre-eviction frame — the lock-ordering contract from the PR 5 docs,
+    finally under test."""
+    import time
+
+    from repro.serving import store as store_mod
+
+    f, c = _field_and_cubes()
+    engine = RenderEngine(CFG, f, c, scene_name="s", ray_chunk=16 * 16,
+                          spill_dir=str(tmp_path / "spill"))
+    cam = rays_lib.make_cameras(1, 16, 16)[0]
+    fut = engine.submit(cam, scene="s")
+    engine.flush()
+    baseline = np.asarray(fut.result().img)
+    engine.store.evict("s")
+
+    real = store_mod.ckpt_lib.unspill_field
+    unspills = []
+
+    def slow_unspill(path, cfg):
+        unspills.append(path)
+        time.sleep(0.2)                       # widen the race window
+        return real(path, cfg)
+
+    monkeypatch.setattr(store_mod.ckpt_lib, "unspill_field", slow_unspill)
+
+    barrier = threading.Barrier(2)
+    out, errs = [None, None], []
+
+    def toucher(i):
+        try:
+            barrier.wait()                    # line both touches up
+            fi = engine.submit(cam, scene="s")
+            engine.flush()
+            out[i] = np.asarray(fi.result(timeout=120.0).img)
+        except BaseException as e:            # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=toucher, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert not errs
+    assert len(unspills) == 1                 # exactly one unspill ran
+    assert engine.store.stats("s")["revivals"] == 1
+    np.testing.assert_array_equal(out[0], baseline)
+    np.testing.assert_array_equal(out[1], baseline)
+
+
+# -- pin / priority (fleet-tier budget hooks) ------------------------------
+
+
+def test_store_pin_blocks_budget_eviction(tmp_path):
+    """A pinned scene is never a budget victim — pressure falls on the
+    next candidate — and unpinning re-exposes it to LRU."""
+    f1, c1 = _field_and_cubes(seed=0)
+    f2, c2 = _field_and_cubes(seed=1)
+    f3, c3 = _field_and_cubes(seed=2)
+    one = field_lib.as_backend(f1, CFG).encode().factor_bytes()
+    store = _store(tmp_path, budget=int(2.5 * one))
+    store.register("a", f1, c1)
+    store.register("b", f2, c2)
+    store.pin("a")                             # a is the LRU candidate...
+    store.register("c", f3, c3)                # ...but pressure skips it
+    assert "a" in store.resident_scenes()
+    assert "b" not in store.resident_scenes()
+    assert store.stats("a")["pinned"]
+
+    store.pin("a", False)                      # unpin -> plain LRU again
+    store.snapshot("c")
+    store.snapshot("b")                        # revive b -> evict coldest=a
+    assert "a" not in store.resident_scenes()
+
+
+def test_store_priority_orders_budget_victims(tmp_path):
+    """Under pressure the lowest-priority resident goes first, even when
+    it is the most recently used."""
+    f1, c1 = _field_and_cubes(seed=0)
+    f2, c2 = _field_and_cubes(seed=1)
+    f3, c3 = _field_and_cubes(seed=2)
+    one = field_lib.as_backend(f1, CFG).encode().factor_bytes()
+    store = _store(tmp_path, budget=int(2.5 * one))
+    store.register("a", f1, c1)
+    store.register("b", f2, c2)
+    store.set_priority("b", 5)
+    store.snapshot("a")                        # a is warmest but priority 0
+    store.register("c", f3, c3)
+    assert "a" not in store.resident_scenes()  # lowest priority lost
+    assert "b" in store.resident_scenes()
+    assert store.stats("b")["priority"] == 5
