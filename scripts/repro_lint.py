@@ -1,0 +1,78 @@
+"""repro-lint CLI — AST invariant checks for concurrency + JIT contracts.
+
+    python scripts/repro_lint.py src/              # what CI runs
+    python scripts/repro_lint.py src/repro/serving # narrow to a subtree
+    python scripts/repro_lint.py src/ --rule lock-discipline
+    python scripts/repro_lint.py src/ --write-baseline  # grandfather all
+
+Exits 0 iff there are no unwaived, un-baselined findings. The baseline
+(lint_baseline.json at the repo root, auto-loaded when present) holds
+grandfathered findings by line-stable fingerprint; inline waivers use
+``# lint: waive(<rule>) — <reason>`` and require a reason.
+
+Stdlib only — no dependencies beyond the Python that runs the tests.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.analysis import base, runner  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "lint_baseline.json")
+
+
+def main(argv) -> int:
+    ap = argparse.ArgumentParser(prog="repro_lint")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to check (default: src)")
+    ap.add_argument("--rule", action="append", dest="rules",
+                    choices=list(base.ALL_RULES),
+                    help="restrict to the given rule id (repeatable)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file (default: lint_baseline.json at "
+                         "the repo root, when it exists)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current unwaived findings to the baseline "
+                         "and exit 0")
+    ap.add_argument("--show-waived", action="store_true",
+                    help="also print waived/baselined findings")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv[1:])
+
+    if args.list_rules:
+        for r in base.ALL_RULES:
+            print(r)
+        return 0
+
+    baseline = None
+    if not args.no_baseline and not args.write_baseline:
+        baseline = args.baseline or (
+            DEFAULT_BASELINE if os.path.exists(DEFAULT_BASELINE) else None)
+
+    # Relative paths resolve against the caller's cwd (standard CLI
+    # behavior); display paths and baseline fingerprints are cwd-relative,
+    # which equals repo-relative for the canonical `repro_lint.py src/`
+    # invocation from the repo root.
+    report = runner.run(args.paths or ["src"], root=os.getcwd(),
+                        baseline=baseline, rules=args.rules)
+
+    if args.write_baseline:
+        path = args.baseline or DEFAULT_BASELINE
+        n = base.write_baseline(path, report.findings)
+        print(f"repro-lint: wrote {n} fingerprint(s) to "
+              f"{os.path.relpath(path, REPO_ROOT)}")
+        return 0
+
+    print(report.format(show_waived=args.show_waived))
+    return 1 if report.gating else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

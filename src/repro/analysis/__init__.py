@@ -1,0 +1,6 @@
+"""repro-lint: stdlib-ast static analysis for the repo's concurrency and
+JIT contracts. See docs/static_analysis.md for the rule catalogue and
+scripts/repro_lint.py for the CLI."""
+from repro.analysis.base import (ALL_RULES, Finding, Module,  # noqa: F401
+                                 load_baseline, write_baseline)
+from repro.analysis.runner import CHECKERS, Report, run  # noqa: F401

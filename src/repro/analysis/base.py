@@ -1,0 +1,321 @@
+"""Shared plumbing for the repro-lint AST checkers.
+
+Everything here is stdlib-only (``ast`` + ``tokenize``): the lint suite
+must run in CI images and dev sandboxes that have nothing beyond the
+runtime deps installed.
+
+Core pieces:
+
+* :class:`Finding` — one diagnostic (rule id, file:line, message, hint).
+* :class:`Module` — a parsed source file plus the per-line waiver table
+  extracted from ``# lint: waive(<rule>) — <reason>`` comments.
+* module-level convention readers (``GUARDED_BY``, ``LOCK_ATTR_CLASSES``,
+  ``LINT_JIT_ENTRYPOINTS``, ``WIRE_DTYPES``) used by individual checkers.
+* a tiny taint helper shared by the jit-purity and recompile checkers to
+  decide whether an expression can carry a tracer value.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# Rule ids — the public vocabulary of the suite (docs/static_analysis.md).
+RULE_LOCK = "lock-discipline"
+RULE_LOCK_ORDER = "lock-order"
+RULE_JIT_PURITY = "jit-purity"
+RULE_RECOMPILE = "recompile-hazard"
+RULE_PYTREE = "pytree-completeness"
+RULE_WIRE = "wire-safety"
+ALL_RULES = (RULE_LOCK, RULE_LOCK_ORDER, RULE_JIT_PURITY, RULE_RECOMPILE,
+             RULE_PYTREE, RULE_WIRE)
+
+_WAIVE_RE = re.compile(
+    r"lint:\s*waive\(\s*([\w\-, ]+?)\s*\)\s*(?:[—–:-]+\s*(\S.*))?")
+_GUARDED_COMMENT_RE = re.compile(r"guarded-by:\s*([\w]+)")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str              # repo-relative display path
+    line: int
+    message: str
+    hint: str = ""
+    symbol: str = ""       # stable anchor (qualname + detail) for baselines
+    waived: bool = False
+    waive_reason: str = ""
+    baselined: bool = False
+
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the committed baseline, so
+        unrelated edits above a grandfathered finding don't churn it."""
+        return f"{self.rule}|{self.path}|{self.symbol or self.message}"
+
+    def format(self) -> str:
+        tag = ""
+        if self.waived:
+            tag = f"  [waived: {self.waive_reason}]"
+        elif self.baselined:
+            tag = "  [baselined]"
+        hint = f"\n    hint: {self.hint}" if self.hint and not tag else ""
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}{tag}{hint}"
+
+
+class Module:
+    """One parsed source file + its waiver table and convention literals."""
+
+    def __init__(self, abspath: str, relpath: str, source: str):
+        self.abspath = abspath
+        self.path = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=relpath)
+        _attach_parents(self.tree)
+        self.waivers = _parse_waivers(source)
+        self.guarded_comments = _parse_guarded_comments(source)
+        self.decls = _module_literals(self.tree)
+
+    @property
+    def basename(self) -> str:
+        return os.path.basename(self.path)
+
+    def decl(self, name: str, default=None):
+        return self.decls.get(name, default)
+
+    def waiver_for(self, rule: str, line: int) -> Optional[str]:
+        """Reason string if `rule` is waived at `line`, else None."""
+        w = self.waivers.get(line)
+        if w and (rule in w[0] or "*" in w[0]):
+            return w[1]
+        return None
+
+
+def _attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._lint_parent = node  # type: ignore[attr-defined]
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_lint_parent", None)
+
+
+def _iter_comments(source: str):
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type == tokenize.COMMENT:
+                yield tok.start[0], tok.start[1], tok.string
+    except tokenize.TokenError:
+        return
+
+
+def _parse_waivers(source: str) -> Dict[int, Tuple[Set[str], str]]:
+    """``# lint: waive(rule[, rule]) — reason`` → {line: (rules, reason)}.
+
+    A waiver with no reason text is ignored (the policy requires one). A
+    comment on its own line waives the next code line as well as itself.
+    """
+    lines = source.splitlines()
+    out: Dict[int, Tuple[Set[str], str]] = {}
+    for lno, col, text in _iter_comments(source):
+        m = _WAIVE_RE.search(text)
+        if not m or not m.group(2):
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        reason = m.group(2).strip()
+        out[lno] = (rules, reason)
+        own_line = lines[lno - 1] if lno - 1 < len(lines) else ""
+        if own_line.strip().startswith("#"):
+            # Standalone comment: also cover the next code line.
+            nxt = lno + 1
+            while nxt - 1 < len(lines) and not lines[nxt - 1].strip():
+                nxt += 1
+            out.setdefault(nxt, (rules, reason))
+    return out
+
+
+def _parse_guarded_comments(source: str) -> Dict[int, str]:
+    """``# guarded-by: _lock`` trailing comments → {line: lockname}."""
+    out = {}
+    for lno, col, text in _iter_comments(source):
+        m = _GUARDED_COMMENT_RE.search(text)
+        if m:
+            out[lno] = m.group(1)
+    return out
+
+
+def _module_literals(tree: ast.Module) -> dict:
+    """Safe-eval module-level ``NAME = <literal>`` assignments the
+    checkers use as declarations (GUARDED_BY, WIRE_DTYPES, ...)."""
+    out = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name) \
+                and node.value is not None:
+            name = node.target.id
+            node = ast.Assign(targets=[node.target], value=node.value)
+        else:
+            continue
+        try:
+            out[name] = ast.literal_eval(node.value)
+        except (ValueError, TypeError, SyntaxError):
+            continue
+    return out
+
+
+def load_modules(paths: Sequence[str], root: str) -> List[Module]:
+    """Parse every .py file under `paths` (files or directories)."""
+    files: List[str] = []
+    for p in paths:
+        p = p if os.path.isabs(p) else os.path.join(root, p)
+        if not os.path.exists(p):
+            raise SystemExit(f"repro-lint: no such path: {p}")
+        if os.path.isfile(p):
+            files.append(p)
+        else:
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                files.extend(os.path.join(dirpath, f)
+                             for f in filenames if f.endswith(".py"))
+    mods = []
+    for f in sorted(set(files)):
+        rel = os.path.relpath(f, root)
+        with open(f, encoding="utf-8") as fh:
+            src = fh.read()
+        try:
+            mods.append(Module(f, rel, src))
+        except SyntaxError as e:
+            raise SystemExit(f"repro-lint: cannot parse {rel}: {e}")
+    return mods
+
+
+# ---------------------------------------------------------------------------
+# Baseline file
+
+def load_baseline(path: str) -> Set[str]:
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or "findings" not in data:
+        raise SystemExit(f"repro-lint: malformed baseline {path}")
+    return set(data["findings"])
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> int:
+    fps = sorted({f.fingerprint() for f in findings if not f.waived})
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"version": 1, "findings": fps}, f, indent=1)
+        f.write("\n")
+    return len(fps)
+
+
+# ---------------------------------------------------------------------------
+# Small AST helpers shared by checkers
+
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted name for Name/Attribute chains ('' otherwise)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def numpy_aliases(mod: Module) -> Set[str]:
+    """Names bound to the host numpy module in this file (np, numpy, ...).
+
+    ``jax.numpy`` aliases are deliberately excluded."""
+    out = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    out.add(a.asname or "numpy")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "numpy":
+                continue  # from numpy import X — rare here; skip
+    return out
+
+
+def module_imports(mod: Module) -> Dict[str, str]:
+    """Local alias -> imported module dotted path, for cross-module call
+    resolution (``from repro.core import field as field_lib``)."""
+    out = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[(a.asname or a.name.split(".")[0])] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[(a.asname or a.name)] = f"{node.module}.{a.name}"
+    return out
+
+
+class _TaintQuery:
+    """Decides whether an expression can carry a traced (tracer) value,
+    given a set of tainted local names. Shape/dtype/len extraction
+    launders the taint — branching on those is static under jit."""
+
+    _NEUTRAL_ATTRS = {"shape", "ndim", "dtype", "size"}
+    _NEUTRAL_CALLS = {"len", "isinstance", "range", "type"}
+
+    def __init__(self, tainted: Set[str]):
+        self.tainted = tainted
+
+    def carries(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in self._NEUTRAL_ATTRS:
+                return False
+            return self.carries(node.value)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id in self._NEUTRAL_CALLS:
+                return False
+            if isinstance(fn, ast.Attribute) \
+                    and fn.attr in self._NEUTRAL_ATTRS:
+                return False
+            return any(self.carries(a) for a in node.args) or \
+                any(self.carries(k.value) for k in node.keywords) or \
+                self.carries(fn)
+        if isinstance(node, ast.Subscript):
+            return self.carries(node.value)
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            # identity checks (`x is None`) are pytree-structural: the
+            # treedef, not the tracer, decides them — static under jit
+            return False
+        if isinstance(node, (ast.Constant, ast.Lambda)):
+            return False
+        return any(self.carries(c) for c in ast.iter_child_nodes(node))
+
+
+def propagate_taint(fn: ast.AST, seeds: Set[str]) -> _TaintQuery:
+    """Forward-propagate taint through simple assignments in a function
+    body (single pass in source order — good enough for lint)."""
+    tainted = set(seeds)
+    q = _TaintQuery(tainted)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and q.carries(node.value):
+            for tgt in node.targets:
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name):
+                        tainted.add(n.id)
+        elif isinstance(node, ast.AugAssign) and q.carries(node.value):
+            if isinstance(node.target, ast.Name):
+                tainted.add(node.target.id)
+    return q

@@ -1,0 +1,107 @@
+"""jit-purity checker: no host syncs inside jit-reachable code.
+
+Flags, in every function reachable from a jit/pallas root (see
+``jitgraph``):
+
+* ``print(...)`` — host I/O forces a device sync per trace-miss and is
+  silently dropped on cache hits (use ``jax.debug.print``);
+* any use of host ``numpy`` (``np.*``) — materialises tracers;
+* ``time.*()`` calls — host clocks read trace time, not run time;
+* ``.item()`` — blocking device->host transfer;
+* ``float(x)`` / ``int(x)`` on a traced value (roots only, with simple
+  forward taint) — raises ``TracerConversionError`` at trace time;
+* metrics-registry calls (``.inc``/``.record``/``.observe`` or
+  ``.counter``/``.gauge``/``.histogram`` on registry-like receivers) —
+  the registry takes host locks; record metrics outside the jitted body.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Set
+
+from repro.analysis import base, jitgraph
+from repro.analysis.base import Finding, Module
+
+_METRIC_METHODS = {"inc", "record", "observe", "counter", "gauge",
+                   "histogram"}
+_METRIC_RECV_RE = re.compile(r"metric|registry|tracer|_m_|_g_")
+
+
+def _check_func(fi: jitgraph.FuncInfo, findings: List[Finding]) -> None:
+    mod = fi.mod
+    imports = base.module_imports(mod)
+    time_aliases = {a for a, m in imports.items() if m == "time"}
+    where = fi.qualname
+
+    taint = None
+    if fi.is_root:
+        taint = base.propagate_taint(fi.node, fi.traced_params())
+
+    def flag(node: ast.AST, msg: str, hint: str, detail: str) -> None:
+        findings.append(Finding(
+            rule=base.RULE_JIT_PURITY, path=mod.path, line=node.lineno,
+            message=f"{msg} in jit-reachable '{where}'",
+            hint=hint, symbol=f"{where}:{detail}"))
+
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            d = base.dotted(fn)
+            if isinstance(fn, ast.Name) and fn.id == "print":
+                flag(node, "host print()",
+                     "use jax.debug.print or log outside the jitted body",
+                     "print")
+            elif d and d.split(".")[0] in time_aliases:
+                flag(node, f"host clock call '{d}()'",
+                     "timestamps taken under trace record trace time, not "
+                     "run time; time outside the jitted body", d)
+            elif isinstance(fn, ast.Attribute) and fn.attr == "item":
+                flag(node, "blocking '.item()' transfer",
+                     "keep the value on device (jnp) or move the read "
+                     "outside the jitted body", "item")
+            elif isinstance(fn, ast.Attribute) and \
+                    fn.attr in _METRIC_METHODS:
+                recv = base.dotted(fn.value)
+                if recv.startswith("self.") or _METRIC_RECV_RE.search(recv):
+                    flag(node, f"metrics-registry call '{recv}.{fn.attr}()'",
+                         "the registry takes host locks; record metrics "
+                         "from the caller, outside jit", f"metric:{fn.attr}")
+            elif isinstance(fn, ast.Name) and fn.id in ("float", "int") \
+                    and taint is not None and node.args and \
+                    taint.carries(node.args[0]):
+                flag(node, f"'{fn.id}()' on a traced value",
+                     "this raises at trace time; keep it as a jnp scalar "
+                     "or make the argument static", f"{fn.id}-on-tracer")
+
+
+def _check_numpy(fi: jitgraph.FuncInfo, findings: List[Finding]) -> None:
+    """Separate pass: any `np.<...>` expression inside the body."""
+    np_aliases = base.numpy_aliases(fi.mod)
+    if not np_aliases:
+        return
+    seen_lines: Set[int] = set()
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id in np_aliases:
+            if node.lineno in seen_lines:
+                continue
+            seen_lines.add(node.lineno)
+            findings.append(Finding(
+                rule=base.RULE_JIT_PURITY, path=fi.mod.path,
+                line=node.lineno,
+                message=(f"host numpy use '{base.dotted(node)}' in "
+                         f"jit-reachable '{fi.qualname}'"),
+                hint="use jnp instead — np materialises tracers "
+                     "(ConcretizationTypeError) or silently constant-folds",
+                symbol=f"{fi.qualname}:np:{node.attr}"))
+
+
+def check(mods: List[Module]) -> List[Finding]:
+    graph = jitgraph.JitGraph(mods)
+    findings: List[Finding] = []
+    for fi in graph.reachable_funcs():
+        _check_func(fi, findings)
+        _check_numpy(fi, findings)
+    return findings

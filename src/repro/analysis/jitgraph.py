@@ -1,0 +1,304 @@
+"""Discovery of jit roots and the statically-resolvable call graph
+under them — shared by the jit-purity and recompile-hazard checkers.
+
+Roots are functions whose bodies run under a JAX trace:
+
+* functions decorated ``@jax.jit`` / ``@functools.partial(jax.jit, ...)``;
+* functions passed to ``jax.jit(...)`` / ``pl.pallas_call(...)`` call
+  sites, including through ``functools.partial(f, **static)``;
+* nested functions *returned by* a factory whose call result is passed
+  to ``jax.jit`` (the ``jax.jit(make_renderer(...))`` idiom);
+* names listed in a module-level ``LINT_JIT_ENTRYPOINTS`` tuple
+  (``"Class.method"`` or ``"function"``) — for methods dispatched
+  dynamically (e.g. FieldBackend implementations) that static call
+  resolution cannot see.
+
+Reachability expands through calls that resolve statically: plain names
+(nested siblings, module-level functions, ``from mod import f`` aliases),
+``alias.f`` where ``alias`` imports an analyzed module, and ``self.m``
+within a class. Dynamic dispatch is out of scope — declare those
+targets via ``LINT_JIT_ENTRYPOINTS``.
+
+Static-at-trace-time parameters (excluded from tracer taint): names in
+``static_argnames``/positions in ``static_argnums``, arguments bound by
+``functools.partial`` at the jit/pallas site, and keyword-only
+parameters (repo convention: statics are passed by keyword).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import base
+from repro.analysis.base import Module
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+class FuncInfo:
+    def __init__(self, mod: Module, node: ast.AST, qualname: str,
+                 cls: str = ""):
+        self.mod = mod
+        self.node = node
+        self.qualname = qualname
+        self.cls = cls
+        self.is_root = False
+        self.static_params: Set[str] = set()
+
+    def traced_params(self) -> Set[str]:
+        """Positional params that carry tracers when this is a root."""
+        a = self.node.args
+        names = [p.arg for p in getattr(a, "posonlyargs", [])] + \
+                [p.arg for p in a.args]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        # Keyword-only params are static by repo convention.
+        return {n for n in names
+                if n != "self" and n not in self.static_params}
+
+
+class JitGraph:
+    def __init__(self, mods: List[Module]):
+        self.mods = mods
+        self.by_dotted: Dict[str, Module] = {}
+        for m in mods:
+            d = _dotted_module(m.path)
+            if d:
+                self.by_dotted[d] = m
+        # (module_path, qualname) -> FuncInfo
+        self.funcs: Dict[Tuple[str, str], FuncInfo] = {}
+        self._index()
+        self._find_roots()
+        self.reachable: Set[Tuple[str, str]] = set()
+        self._expand()
+
+    # -- indexing ----------------------------------------------------------
+
+    def _index(self) -> None:
+        for mod in self.mods:
+            def walk(node: ast.AST, prefix: str, cls: str):
+                for child in ast.iter_child_nodes(node):
+                    if isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                        q = f"{prefix}{child.name}"
+                        self.funcs[(mod.path, q)] = FuncInfo(
+                            mod, child, q, cls)
+                        walk(child, q + ".", cls)
+                    elif isinstance(child, ast.ClassDef):
+                        walk(child, f"{prefix}{child.name}.", child.name)
+                    else:
+                        walk(child, prefix, cls)
+            walk(mod.tree, "", "")
+
+    def lookup(self, mod: Module, qualname: str) -> Optional[FuncInfo]:
+        return self.funcs.get((mod.path, qualname))
+
+    # -- root discovery ----------------------------------------------------
+
+    def _find_roots(self) -> None:
+        for mod in self.mods:
+            # 1. Decorated defs.
+            for (path, q), fi in list(self.funcs.items()):
+                if path != mod.path:
+                    continue
+                for dec in getattr(fi.node, "decorator_list", []):
+                    statics = _jit_decorator_statics(dec, fi.node)
+                    if statics is not None:
+                        fi.is_root = True
+                        fi.static_params |= statics
+            # 2. jit()/pallas_call() call sites.
+            imports = base.module_imports(mod)
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn_dotted = base.dotted(node.func)
+                is_jit = fn_dotted in _JIT_NAMES
+                is_pallas = fn_dotted == "pallas_call" or \
+                    fn_dotted.endswith(".pallas_call")
+                if not (is_jit or is_pallas) or not node.args:
+                    continue
+                statics = _static_names_from_call(node)
+                self._mark_arg_root(mod, imports, node.args[0], statics,
+                                    allow_factory=is_jit)
+            # 3. Declared entrypoints.
+            for entry in mod.decl("LINT_JIT_ENTRYPOINTS", ()) or ():
+                fi = self.lookup(mod, entry)
+                if fi is not None:
+                    fi.is_root = True
+
+    def _mark_arg_root(self, mod: Module, imports: Dict[str, str],
+                       arg: ast.AST, statics: Set[str],
+                       allow_factory: bool) -> None:
+        # functools.partial(f, a, b, k=v): leading positionals + kw static
+        if isinstance(arg, ast.Call) and \
+                base.dotted(arg.func) in _PARTIAL_NAMES and arg.args:
+            fi = self._resolve_expr(mod, imports, arg.args[0])
+            if fi is not None:
+                fi.is_root = True
+                fi.static_params |= {k.arg for k in arg.keywords if k.arg}
+                fi.static_params |= _leading_params(fi.node,
+                                                    len(arg.args) - 1)
+            return
+        # jax.jit(factory(...)): the factory's returned nested defs trace.
+        if isinstance(arg, ast.Call) and allow_factory:
+            factory = self._resolve_expr(mod, imports, arg.func)
+            if factory is not None:
+                for fi in self._returned_nested(factory):
+                    fi.is_root = True
+            return
+        fi = self._resolve_expr(mod, imports, arg)
+        if fi is not None:
+            fi.is_root = True
+            fi.static_params |= statics
+
+    def _returned_nested(self, factory: FuncInfo) -> List[FuncInfo]:
+        names: Set[str] = set()
+        for node in ast.walk(factory.node):
+            if isinstance(node, ast.Return) and node.value is not None:
+                vals = node.value.elts if isinstance(node.value, ast.Tuple) \
+                    else [node.value]
+                for v in vals:
+                    if isinstance(v, ast.Name):
+                        names.add(v.id)
+        out = []
+        for n in names:
+            fi = self.lookup(factory.mod, f"{factory.qualname}.{n}")
+            if fi is not None:
+                out.append(fi)
+        return out
+
+    # -- call resolution ---------------------------------------------------
+
+    def _resolve_expr(self, mod: Module, imports: Dict[str, str],
+                      expr: ast.AST,
+                      scope: Optional[FuncInfo] = None) -> Optional[FuncInfo]:
+        if isinstance(expr, ast.Name):
+            # Nested sibling within enclosing function scopes.
+            if scope is not None:
+                prefix = scope.qualname
+                while True:
+                    fi = self.lookup(mod, f"{prefix}.{expr.id}"
+                                     if prefix else expr.id)
+                    if fi is not None:
+                        return fi
+                    if "." not in prefix:
+                        break
+                    prefix = prefix.rsplit(".", 1)[0]
+            fi = self.lookup(mod, expr.id)
+            if fi is not None:
+                return fi
+            target = imports.get(expr.id)
+            if target and "." in target:
+                m, f = target.rsplit(".", 1)
+                if m in self.by_dotted:
+                    return self.lookup(self.by_dotted[m], f)
+            return None
+        if isinstance(expr, ast.Attribute):
+            recv = expr.value
+            if isinstance(recv, ast.Name):
+                if recv.id == "self" and scope is not None and scope.cls:
+                    return self.lookup(mod, f"{scope.cls}.{expr.attr}")
+                target = imports.get(recv.id)
+                if target in self.by_dotted:
+                    return self.lookup(self.by_dotted[target], expr.attr)
+        return None
+
+    # -- reachability ------------------------------------------------------
+
+    def _expand(self) -> None:
+        queue = [k for k, fi in self.funcs.items() if fi.is_root]
+        seen = set(queue)
+        while queue:
+            key = queue.pop()
+            self.reachable.add(key)
+            fi = self.funcs[key]
+            imports = base.module_imports(fi.mod)
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = self._resolve_expr(fi.mod, imports, node.func,
+                                            scope=fi)
+                if callee is None:
+                    continue
+                ck = (callee.mod.path, callee.qualname)
+                if ck not in seen:
+                    seen.add(ck)
+                    queue.append(ck)
+
+    def roots(self) -> List[FuncInfo]:
+        return [fi for fi in self.funcs.values() if fi.is_root]
+
+    def reachable_funcs(self) -> List[FuncInfo]:
+        return [self.funcs[k] for k in sorted(self.reachable)]
+
+
+def _dotted_module(relpath: str) -> str:
+    p = relpath.replace(os.sep, "/")
+    if p.startswith("src/"):
+        p = p[4:]
+    if not p.endswith(".py"):
+        return ""
+    p = p[:-3]
+    if p.endswith("/__init__"):
+        p = p[: -len("/__init__")]
+    return p.replace("/", ".")
+
+
+def _leading_params(fn: ast.AST, count: int) -> Set[str]:
+    a = fn.args
+    names = [p.arg for p in getattr(a, "posonlyargs", [])] + \
+            [p.arg for p in a.args]
+    return set(names[:count])
+
+
+def _jit_decorator_statics(dec: ast.AST, fn: ast.AST) -> Optional[Set[str]]:
+    """None if not a jit decorator; else the static param-name set."""
+    if base.dotted(dec) in _JIT_NAMES:
+        return set()
+    if isinstance(dec, ast.Call):
+        d = base.dotted(dec.func)
+        if d in _JIT_NAMES:
+            return _static_names_from_call(dec, fn)
+        if d in _PARTIAL_NAMES and dec.args and \
+                base.dotted(dec.args[0]) in _JIT_NAMES:
+            return _static_names_from_call(dec, fn)
+    return None
+
+
+def _static_names_from_call(call: ast.Call,
+                            fn: Optional[ast.AST] = None) -> Set[str]:
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            try:
+                v = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                continue
+            out |= {v} if isinstance(v, str) else set(v)
+        elif kw.arg == "static_argnums" and fn is not None:
+            try:
+                v = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                continue
+            nums = [v] if isinstance(v, int) else list(v)
+            a = fn.args
+            names = [p.arg for p in getattr(a, "posonlyargs", [])] + \
+                    [p.arg for p in a.args]
+            for i in nums:
+                if 0 <= i < len(names):
+                    out.add(names[i])
+    return out
+
+
+def static_positions(call: ast.Call) -> Set[int]:
+    """static_argnums positions declared on a jit(...) call."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            try:
+                v = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                return set()
+            return {v} if isinstance(v, int) else set(v)
+    return set()

@@ -1,0 +1,342 @@
+"""lock-discipline + lock-order checkers.
+
+A class opts in by appearing in its module's ``GUARDED_BY`` map::
+
+    GUARDED_BY = {
+        "RenderEngine": {
+            "lock": "_lock",                 # primary lock attribute
+            "aliases": ("_flush_cv",),       # acquiring these == the lock
+            "locks": ("_render_lock",),      # extra locks (ordering only)
+            "attrs": ("_queue", "_next_id"), # state guarded by the lock
+            "assume_held": ("_locked_help",),# methods whose contract is
+        },                                   # "caller holds the lock"
+    }
+
+or via the inline comment convention on the attribute's initial
+assignment: ``self._queue = []  # guarded-by: _lock``.
+
+Rule ``lock-discipline``: every ``self.<attr>`` load/store of a guarded
+attribute must occur lexically inside ``with self.<lock>`` (or an alias).
+``__init__`` is exempt (pre-publication), as are declared ``assume_held``
+methods. Nested functions reset the held set — a closure may run later
+without the lock.
+
+Rule ``lock-order``: the acquisition graph (lock held -> lock acquired,
+via direct ``with`` nesting and via calls into methods of other declared
+classes, resolved through ``LOCK_ATTR_CLASSES = {"Engine.store":
+"SceneStore"}``) must be acyclic. Self-edges are ignored — the declared
+locks are reentrant RLocks.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import base
+from repro.analysis.base import Finding, Module
+
+
+class _ClassDecl:
+    def __init__(self, cls: str, raw: dict):
+        self.cls = cls
+        self.lock: str = raw.get("lock", "_lock")
+        aliases = raw.get("aliases", ())
+        if isinstance(aliases, dict):
+            self.aliases = dict(aliases)
+        else:
+            self.aliases = {a: self.lock for a in aliases}
+        self.extra_locks: Tuple[str, ...] = tuple(raw.get("locks", ()))
+        self.attrs: Dict[str, str] = {a: self.lock
+                                      for a in raw.get("attrs", ())}
+        self.assume_held: Set[str] = set(raw.get("assume_held", ()))
+
+    def resolve_lock(self, attr: str) -> Optional[str]:
+        """Lock attr acquired by ``with self.<attr>`` — canonical name."""
+        if attr == self.lock or attr in self.extra_locks:
+            return attr
+        return self.aliases.get(attr)
+
+    def all_lock_names(self) -> Set[str]:
+        return {self.lock, *self.extra_locks, *self.aliases}
+
+
+def _class_decls(mod: Module) -> Dict[str, _ClassDecl]:
+    decls = {}
+    raw = mod.decl("GUARDED_BY", {})
+    if isinstance(raw, dict):
+        for cls, d in raw.items():
+            if isinstance(d, dict):
+                decls[cls] = _ClassDecl(cls, d)
+    # Inline `# guarded-by: <lock>` comments on self.<attr> assignments.
+    if mod.guarded_comments:
+        for cnode in ast.walk(mod.tree):
+            if not isinstance(cnode, ast.ClassDef):
+                continue
+            for node in ast.walk(cnode):
+                if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    continue
+                lockname = mod.guarded_comments.get(node.lineno)
+                if not lockname:
+                    continue
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for tgt in targets:
+                    if isinstance(tgt, ast.Attribute) and \
+                            isinstance(tgt.value, ast.Name) and \
+                            tgt.value.id == "self":
+                        d = decls.setdefault(
+                            cnode.name,
+                            _ClassDecl(cnode.name, {"lock": lockname,
+                                                    "attrs": ()}))
+                        d.attrs[tgt.attr] = lockname
+    return decls
+
+
+def _held_lock_visit(fn: ast.AST, decl: _ClassDecl, mod: Module,
+                     findings: List[Finding], cls: str, fname: str) -> None:
+    """Flag guarded-attr accesses outside the guarding lock."""
+
+    def visit(node: ast.AST, held: Set[str]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not fn:
+            # Closures may outlive the lock scope: reset.
+            for child in ast.iter_child_nodes(node):
+                visit(child, set())
+            return
+        if isinstance(node, ast.With):
+            new_held = set(held)
+            for item in node.items:
+                ce = item.context_expr
+                if isinstance(ce, ast.Attribute) and \
+                        isinstance(ce.value, ast.Name) and \
+                        ce.value.id == "self":
+                    resolved = decl.resolve_lock(ce.attr)
+                    if resolved is not None:
+                        new_held.add(resolved)
+            for item in node.items:
+                visit(item.context_expr, held)
+            for child in node.body:
+                visit(child, new_held)
+            return
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and node.value.id == "self":
+            need = decl.attrs.get(node.attr)
+            if need is not None and need not in held \
+                    and decl.aliases.get(need, need) not in held:
+                findings.append(Finding(
+                    rule=base.RULE_LOCK, path=mod.path, line=node.lineno,
+                    message=(f"'{cls}.{node.attr}' is guarded by "
+                             f"'{need}' but accessed outside "
+                             f"'with self.{need}' in {fname}()"),
+                    hint=(f"wrap the access in 'with self.{need}:' or add "
+                          f"'{fname}' to GUARDED_BY[{cls!r}]['assume_held'] "
+                          "with a caller-holds-the-lock contract"),
+                    symbol=f"{cls}.{fname}.{node.attr}"))
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    body = getattr(fn, "body", [])
+    for stmt in body:
+        visit(stmt, set())
+
+
+# ---------------------------------------------------------------------------
+# lock-order
+
+class _MethodInfo:
+    def __init__(self, mod: Module, cls: str, name: str, node: ast.AST,
+                 decl: Optional[_ClassDecl]):
+        self.mod = mod
+        self.cls = cls
+        self.name = name
+        self.node = node
+        self.decl = decl
+        self.direct: Set[str] = set()        # labels acquired anywhere
+        self.calls: Set[Tuple[str, str]] = set()  # (cls, meth) resolved
+        self.acquires: Set[str] = set()      # fixpoint closure
+
+
+def _label(cls: str, lock: str) -> str:
+    return f"{cls}.{lock}"
+
+
+def _collect_methods(mods: List[Module]) -> Dict[Tuple[str, str], _MethodInfo]:
+    out: Dict[Tuple[str, str], _MethodInfo] = {}
+    for mod in mods:
+        decls = _class_decls(mod)
+        attr_classes = mod.decl("LOCK_ATTR_CLASSES", {}) or {}
+        for cnode in mod.tree.body:
+            if not isinstance(cnode, ast.ClassDef):
+                continue
+            decl = decls.get(cnode.name)
+            for fnode in cnode.body:
+                if not isinstance(fnode, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                    continue
+                info = _MethodInfo(mod, cnode.name, fnode.name, fnode, decl)
+                for node in ast.walk(fnode):
+                    if isinstance(node, ast.With) and decl is not None:
+                        for item in node.items:
+                            ce = item.context_expr
+                            if isinstance(ce, ast.Attribute) and \
+                                    isinstance(ce.value, ast.Name) and \
+                                    ce.value.id == "self":
+                                r = decl.resolve_lock(ce.attr)
+                                if r is not None:
+                                    info.direct.add(_label(cnode.name, r))
+                    if isinstance(node, ast.Call):
+                        fn = node.func
+                        if isinstance(fn, ast.Attribute):
+                            recv = fn.value
+                            if isinstance(recv, ast.Name) and \
+                                    recv.id == "self":
+                                info.calls.add((cnode.name, fn.attr))
+                            elif isinstance(recv, ast.Attribute) and \
+                                    isinstance(recv.value, ast.Name) and \
+                                    recv.value.id == "self":
+                                key = f"{cnode.name}.{recv.attr}"
+                                tgt = attr_classes.get(key)
+                                if tgt:
+                                    info.calls.add((tgt, fn.attr))
+                out[(cnode.name, fnode.name)] = info
+    # Fixpoint over the resolved call graph.
+    changed = True
+    for info in out.values():
+        info.acquires = set(info.direct)
+    while changed:
+        changed = False
+        for info in out.values():
+            for callee in info.calls:
+                ci = out.get(callee)
+                if ci and not ci.acquires <= info.acquires:
+                    info.acquires |= ci.acquires
+                    changed = True
+    return out
+
+
+def _order_edges(methods: Dict[Tuple[str, str], _MethodInfo]
+                 ) -> Dict[Tuple[str, str], Tuple[str, int]]:
+    """(held_label, acquired_label) -> (path, line) provenance."""
+    edges: Dict[Tuple[str, str], Tuple[str, int]] = {}
+    attr_cache: Dict[str, dict] = {}
+
+    def record(held: Set[str], acquired: str, mod: Module, line: int):
+        for h in held:
+            if h != acquired:
+                edges.setdefault((h, acquired), (mod.path, line))
+
+    for info in methods.values():
+        decl = info.decl
+        mod = info.mod
+        attr_classes = attr_cache.setdefault(
+            mod.path, mod.decl("LOCK_ATTR_CLASSES", {}) or {})
+
+        def visit(node: ast.AST, held: Set[str]):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not info.node:
+                for child in ast.iter_child_nodes(node):
+                    visit(child, set())
+                return
+            if isinstance(node, ast.With):
+                new_held = set(held)
+                for item in node.items:
+                    ce = item.context_expr
+                    if decl is not None and isinstance(ce, ast.Attribute) \
+                            and isinstance(ce.value, ast.Name) \
+                            and ce.value.id == "self":
+                        r = decl.resolve_lock(ce.attr)
+                        if r is not None:
+                            lbl = _label(info.cls, r)
+                            record(held, lbl, mod, node.lineno)
+                            new_held.add(lbl)
+                for child in node.body:
+                    visit(child, new_held)
+                return
+            if isinstance(node, ast.Call) and held:
+                fn = node.func
+                callee = None
+                if isinstance(fn, ast.Attribute):
+                    recv = fn.value
+                    if isinstance(recv, ast.Name) and recv.id == "self":
+                        callee = (info.cls, fn.attr)
+                    elif isinstance(recv, ast.Attribute) and \
+                            isinstance(recv.value, ast.Name) and \
+                            recv.value.id == "self":
+                        tgt = attr_classes.get(f"{info.cls}.{recv.attr}")
+                        if tgt:
+                            callee = (tgt, fn.attr)
+                if callee and callee in methods:
+                    for lbl in methods[callee].acquires:
+                        record(held, lbl, mod, node.lineno)
+            for child in ast.iter_child_nodes(node):
+                visit(child, held)
+
+        for stmt in getattr(info.node, "body", []):
+            visit(stmt, set())
+    return edges
+
+
+def _find_cycles(edges: Dict[Tuple[str, str], Tuple[str, int]]
+                 ) -> List[List[str]]:
+    graph: Dict[str, Set[str]] = {}
+    for (a, b) in edges:
+        graph.setdefault(a, set()).add(b)
+        graph.setdefault(b, set())
+    cycles: List[List[str]] = []
+    seen_cycles: Set[frozenset] = set()
+
+    def dfs(start: str):
+        stack: List[Tuple[str, List[str]]] = [(start, [start])]
+        while stack:
+            node, path = stack.pop()
+            for nxt in graph.get(node, ()):
+                if nxt == start and len(path) > 1:
+                    key = frozenset(path)
+                    if key not in seen_cycles:
+                        seen_cycles.add(key)
+                        cycles.append(path + [start])
+                elif nxt not in path:
+                    stack.append((nxt, path + [nxt]))
+
+    for n in graph:
+        dfs(n)
+    return cycles
+
+
+def check(mods: List[Module]) -> List[Finding]:
+    findings: List[Finding] = []
+    # Discipline: per declared class.
+    for mod in mods:
+        decls = _class_decls(mod)
+        if not decls:
+            continue
+        for cnode in mod.tree.body:
+            if not isinstance(cnode, ast.ClassDef):
+                continue
+            decl = decls.get(cnode.name)
+            if decl is None or not decl.attrs:
+                continue
+            for fnode in cnode.body:
+                if not isinstance(fnode, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                    continue
+                if fnode.name == "__init__" or \
+                        fnode.name in decl.assume_held:
+                    continue
+                _held_lock_visit(fnode, decl, mod, findings,
+                                 cnode.name, fnode.name)
+    # Ordering: global graph across all declared classes.
+    methods = _collect_methods(mods)
+    edges = _order_edges(methods)
+    path_of = {m.path: m for m in mods}
+    for cycle in _find_cycles(edges):
+        first_edge = (cycle[0], cycle[1])
+        path, line = edges.get(first_edge, ("<unknown>", 0))
+        findings.append(Finding(
+            rule=base.RULE_LOCK_ORDER, path=path, line=line,
+            message=("lock-order cycle: " + " -> ".join(cycle) +
+                     " (acquisition order inversion can deadlock)"),
+            hint=("pick one global order for these locks and acquire them "
+                  "consistently; see docs/static_analysis.md#rules"),
+            symbol="cycle:" + "|".join(sorted(set(cycle)))))
+    return findings

@@ -1,0 +1,176 @@
+"""pytree-completeness checker.
+
+Containers that cross a jit boundary must be registered pytrees with
+hashable static (aux) data, or jit either fails outright or — worse —
+treats the whole object as a static constant and recompiles per call.
+
+Three checks:
+
+1. any class that defines ``tree_flatten`` must also define
+   ``tree_unflatten`` and be registered (``@...register_pytree_node_class``
+   or a ``register_pytree_node(Cls, ...)`` call);
+2. the aux (static) element returned by ``tree_flatten`` — or by the
+   flatten lambda passed to ``register_pytree_node`` — must not contain
+   list/dict/set displays or array constructors (unhashable: every jit
+   call would miss the cache or raise);
+3. any ``@dataclass`` with jax-array-annotated fields
+   (``jax.Array`` / ``jnp.ndarray``) must be registered — an
+   unregistered one passed into jit dies with "Cannot interpret value of
+   type ... as an abstract array". NamedTuples are exempt (native
+   pytrees).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Set
+
+from repro.analysis import base
+from repro.analysis.base import Finding, Module
+
+_ARRAY_ANN_RE = re.compile(r"\bjax\.Array\b|\bjnp\.ndarray\b|\bArray\b")
+_REGISTER_FNS = {"register_pytree_node", "register_pytree_with_keys",
+                 "register_dataclass"}
+
+
+def _registered_classes(mods: List[Module]) -> Set[str]:
+    out: Set[str] = set()
+    for mod in mods:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                for dec in node.decorator_list:
+                    d = base.dotted(dec)
+                    if d.endswith("register_pytree_node_class") or \
+                            d.endswith("register_static"):
+                        out.add(node.name)
+            elif isinstance(node, ast.Call):
+                d = base.dotted(node.func)
+                if d.split(".")[-1] in _REGISTER_FNS and node.args and \
+                        isinstance(node.args[0], ast.Name):
+                    out.add(node.args[0].id)
+    return out
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        d = base.dotted(dec if not isinstance(dec, ast.Call) else dec.func)
+        if d.split(".")[-1] == "dataclass":
+            return True
+    return False
+
+
+def _is_namedtuple(node: ast.ClassDef) -> bool:
+    return any(base.dotted(b).split(".")[-1] == "NamedTuple"
+               for b in node.bases)
+
+
+def _array_fields(node: ast.ClassDef) -> List[str]:
+    out = []
+    for stmt in node.body:
+        if isinstance(stmt, ast.AnnAssign) and \
+                isinstance(stmt.target, ast.Name):
+            ann = ast.unparse(stmt.annotation)
+            # Callable[..., Array] fields hold functions, not array data.
+            if _ARRAY_ANN_RE.search(ann) and "Callable" not in ann:
+                out.append(stmt.target.id)
+    return out
+
+
+def _unhashable_in(expr: ast.AST) -> Optional[ast.AST]:
+    for node in ast.walk(expr):
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.SetComp, ast.DictComp)):
+            return node
+        if isinstance(node, ast.Call):
+            d = base.dotted(node.func)
+            if d and d.split(".")[-1] in ("array", "asarray") and \
+                    d.split(".")[0] in ("np", "numpy", "jnp", "jax"):
+                return node
+    return None
+
+
+def _aux_exprs_of_flatten(fn: ast.AST) -> List[ast.AST]:
+    """Second tuple element of each `return (children, aux)`."""
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and \
+                isinstance(node.value, ast.Tuple) and \
+                len(node.value.elts) == 2:
+            out.append(node.value.elts[1])
+    return out
+
+
+def check(mods: List[Module]) -> List[Finding]:
+    findings: List[Finding] = []
+    registered = _registered_classes(mods)
+    for mod in mods:
+        for cnode in ast.walk(mod.tree):
+            if not isinstance(cnode, ast.ClassDef):
+                continue
+            methods = {n.name: n for n in cnode.body
+                       if isinstance(n, ast.FunctionDef)}
+            flatten = methods.get("tree_flatten")
+            if flatten is not None:
+                if "tree_unflatten" not in methods:
+                    findings.append(Finding(
+                        rule=base.RULE_PYTREE, path=mod.path,
+                        line=cnode.lineno,
+                        message=(f"'{cnode.name}' defines tree_flatten "
+                                 "without tree_unflatten"),
+                        hint="jit round-trips pytrees; both halves are "
+                             "required",
+                        symbol=f"{cnode.name}:no-unflatten"))
+                if cnode.name not in registered:
+                    findings.append(Finding(
+                        rule=base.RULE_PYTREE, path=mod.path,
+                        line=cnode.lineno,
+                        message=(f"'{cnode.name}' defines tree_flatten but "
+                                 "is not registered as a pytree"),
+                        hint="decorate with @jax.tree_util."
+                             "register_pytree_node_class",
+                        symbol=f"{cnode.name}:unregistered-flatten"))
+                for aux in _aux_exprs_of_flatten(flatten):
+                    bad = _unhashable_in(aux)
+                    if bad is not None:
+                        findings.append(Finding(
+                            rule=base.RULE_PYTREE, path=mod.path,
+                            line=bad.lineno,
+                            message=(f"'{cnode.name}.tree_flatten' aux "
+                                     "data contains an unhashable "
+                                     "expression"),
+                            hint="aux joins the jit cache key: use tuples "
+                                 "/ frozen dataclasses, never lists or "
+                                 "arrays",
+                            symbol=f"{cnode.name}:unhashable-aux"))
+            if _is_dataclass(cnode) and not _is_namedtuple(cnode):
+                arr = _array_fields(cnode)
+                if arr and cnode.name not in registered:
+                    findings.append(Finding(
+                        rule=base.RULE_PYTREE, path=mod.path,
+                        line=cnode.lineno,
+                        message=(f"dataclass '{cnode.name}' has jax array "
+                                 f"fields ({', '.join(arr)}) but is not a "
+                                 "registered pytree"),
+                        hint="register it (register_pytree_node[_class]) "
+                             "before it crosses a jit boundary",
+                        symbol=f"{cnode.name}:unregistered-dataclass"))
+        # Flatten lambdas passed directly to register_pytree_node.
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and \
+                    base.dotted(node.func).split(".")[-1] == \
+                    "register_pytree_node" and len(node.args) >= 2 and \
+                    isinstance(node.args[1], ast.Lambda):
+                body = node.args[1].body
+                if isinstance(body, ast.Tuple) and len(body.elts) == 2:
+                    bad = _unhashable_in(body.elts[1])
+                    if bad is not None:
+                        cls = node.args[0].id if \
+                            isinstance(node.args[0], ast.Name) else "?"
+                        findings.append(Finding(
+                            rule=base.RULE_PYTREE, path=mod.path,
+                            line=bad.lineno,
+                            message=(f"flatten lambda for '{cls}' returns "
+                                     "unhashable aux data"),
+                            hint="aux joins the jit cache key: use tuples",
+                            symbol=f"{cls}:unhashable-aux-lambda"))
+    return findings

@@ -1,0 +1,127 @@
+"""recompile-hazard checker.
+
+Two hazards that silently wreck jit cache hit rates (or error at trace):
+
+1. **Non-hashable static arguments.** A call site that passes a list /
+   dict / set display (or an ``np.array(...)``) in a position declared
+   ``static_argnums``/``static_argnames`` raises ``Unhashable static
+   arguments`` at call time — or, with a tuple-of-arrays, recompiles on
+   every call because the hash never matches.
+
+2. **Python branches on traced values.** ``if x > 0:`` where ``x`` is a
+   tracer raises ``TracerBoolConversionError``; the sneakier version is
+   branching on a value *derived* from a tracer. Branching on
+   ``.shape`` / ``.ndim`` / ``.dtype`` / ``len()`` is static and fine —
+   the taint query launders those. Checked on jit roots only, where the
+   parameter list is known to be the traced signature.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis import base, jitgraph
+from repro.analysis.base import Finding, Module
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.SetComp,
+               ast.DictComp, ast.GeneratorExp)
+_ARRAY_CTORS = {"array", "asarray", "zeros", "ones", "arange"}
+
+
+def _is_unhashable_expr(node: ast.AST) -> bool:
+    if isinstance(node, _UNHASHABLE):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        d = base.dotted(node.func)
+        head = d.split(".")[0] if d else ""
+        if node.func.attr in _ARRAY_CTORS and head in ("np", "numpy",
+                                                       "jnp", "jax"):
+            return True
+    return False
+
+
+def _collect_static_specs(mods: List[Module]
+                          ) -> Dict[str, Tuple[Set[str], Set[int]]]:
+    """bare function name -> (static kw names, static positions)."""
+    specs: Dict[str, Tuple[Set[str], Set[int]]] = {}
+    for mod in mods:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    names = jitgraph._jit_decorator_statics(dec, node)
+                    if names:
+                        call = dec if isinstance(dec, ast.Call) else None
+                        nums = jitgraph.static_positions(call) if call \
+                            else set()
+                        specs[node.name] = (names, nums)
+            elif isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    base.dotted(node.value.func) in jitgraph._JIT_NAMES:
+                call = node.value
+                names = jitgraph._static_names_from_call(call)
+                nums = jitgraph.static_positions(call)
+                if not (names or nums):
+                    continue
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        specs[tgt.id] = (names, nums)
+                    elif isinstance(tgt, ast.Attribute):
+                        specs[tgt.attr] = (names, nums)
+    return specs
+
+
+def _check_call_sites(mods: List[Module],
+                      specs: Dict[str, Tuple[Set[str], Set[int]]],
+                      findings: List[Finding]) -> None:
+    for mod in mods:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = base.dotted(node.func)
+            name = d.split(".")[-1] if d else ""
+            if name not in specs:
+                continue
+            static_names, static_nums = specs[name]
+            bad = []
+            for kw in node.keywords:
+                if kw.arg in static_names and \
+                        _is_unhashable_expr(kw.value):
+                    bad.append((kw.value, kw.arg))
+            for i, arg in enumerate(node.args):
+                if i in static_nums and _is_unhashable_expr(arg):
+                    bad.append((arg, f"arg {i}"))
+            for expr, which in bad:
+                findings.append(Finding(
+                    rule=base.RULE_RECOMPILE, path=mod.path,
+                    line=expr.lineno,
+                    message=(f"non-hashable value passed for static "
+                             f"argument '{which}' of jitted '{name}'"),
+                    hint="static args join the jit cache key and must be "
+                         "hashable — pass a tuple / frozen value instead",
+                    symbol=f"static:{name}:{which}"))
+
+
+def _check_tracer_branches(graph: jitgraph.JitGraph,
+                           findings: List[Finding]) -> None:
+    for fi in graph.roots():
+        taint = base.propagate_taint(fi.node, fi.traced_params())
+        for node in ast.walk(fi.node):
+            if isinstance(node, (ast.If, ast.While)) and \
+                    taint.carries(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(Finding(
+                    rule=base.RULE_RECOMPILE, path=fi.mod.path,
+                    line=node.lineno,
+                    message=(f"Python '{kind}' on a traced value in jit "
+                             f"root '{fi.qualname}'"),
+                    hint="use jax.lax.cond / jnp.where, or derive the "
+                         "predicate from static shapes (.shape, len())",
+                    symbol=f"branch:{fi.qualname}:{node.lineno - fi.node.lineno}"))
+
+
+def check(mods: List[Module]) -> List[Finding]:
+    findings: List[Finding] = []
+    specs = _collect_static_specs(mods)
+    _check_call_sites(mods, specs, findings)
+    _check_tracer_branches(jitgraph.JitGraph(mods), findings)
+    return findings

@@ -1,0 +1,77 @@
+"""Orchestrates the repro-lint checkers: load → check → waive → baseline.
+
+Public API (used by scripts/repro_lint.py and tests/test_lint.py):
+
+    report = run(paths, root=repo_root, baseline="lint_baseline.json")
+    report.gating      # unwaived, un-baselined findings (CI fails on any)
+    report.findings    # everything, including waived/baselined
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis import (base, jit_purity, locks, pytrees, recompile,
+                            wire)
+from repro.analysis.base import Finding, Module
+
+CHECKERS = {
+    "locks": locks.check,          # lock-discipline + lock-order
+    "jit": jit_purity.check,       # jit-purity
+    "recompile": recompile.check,  # recompile-hazard
+    "pytrees": pytrees.check,      # pytree-completeness
+    "wire": wire.check,            # wire-safety
+}
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]
+    modules: List[Module]
+
+    @property
+    def gating(self) -> List[Finding]:
+        return [f for f in self.findings if not f.waived and not f.baselined]
+
+    @property
+    def waived(self) -> List[Finding]:
+        return [f for f in self.findings if f.waived]
+
+    def format(self, show_waived: bool = False) -> str:
+        shown = self.findings if show_waived else self.gating
+        lines = [f.format() for f in shown]
+        n_w, n_b = len(self.waived), \
+            sum(1 for f in self.findings if f.baselined)
+        lines.append(f"repro-lint: {len(self.gating)} finding(s) "
+                     f"({n_w} waived, {n_b} baselined, "
+                     f"{len(self.modules)} files)")
+        return "\n".join(lines)
+
+
+def run(paths: Sequence[str], root: str,
+        baseline: Optional[str] = None,
+        rules: Optional[Sequence[str]] = None) -> Report:
+    mods = base.load_modules(paths, root)
+    by_path: Dict[str, Module] = {m.path: m for m in mods}
+    findings: List[Finding] = []
+    for chk in CHECKERS.values():
+        findings.extend(chk(mods))
+    if rules:
+        findings = [f for f in findings if f.rule in rules]
+    # Inline waivers.
+    for f in findings:
+        mod = by_path.get(f.path)
+        if mod is None:
+            continue
+        reason = mod.waiver_for(f.rule, f.line)
+        if reason is not None:
+            f.waived, f.waive_reason = True, reason
+    # Committed baseline (grandfathered findings).
+    if baseline and os.path.exists(baseline):
+        fps = base.load_baseline(baseline)
+        for f in findings:
+            if not f.waived and f.fingerprint() in fps:
+                f.baselined = True
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return Report(findings=findings, modules=mods)

@@ -1,0 +1,106 @@
+"""wire-safety checker for the fleet wire protocol modules.
+
+The fleet tier deliberately speaks length-prefixed JSON + raw array
+bytes — never pickle — because workers deserialize bytes that crossed a
+process (eventually host) boundary. This checker pins that property:
+
+* wire modules must not import ``pickle`` / ``marshal`` / ``dill`` /
+  ``shelve`` (arbitrary code execution on deserialize);
+* no ``eval`` / ``exec`` calls;
+* every ``np.frombuffer`` decode must live in a module that declares a
+  ``WIRE_DTYPES`` allowlist, in a function that consults it — decoding
+  an attacker-controlled dtype string (e.g. ``object``) is the same
+  class of bug as pickle.
+
+A module is a wire module if its basename is ``fleet.py`` or
+``router.py``, or if it sets ``LINT_WIRE_MODULE = True``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis import base
+from repro.analysis.base import Finding, Module
+
+_BANNED_IMPORTS = {"pickle", "cPickle", "marshal", "dill", "shelve"}
+_WIRE_BASENAMES = {"fleet.py", "router.py"}
+
+
+def _is_wire_module(mod: Module) -> bool:
+    return mod.basename in _WIRE_BASENAMES or \
+        bool(mod.decl("LINT_WIRE_MODULE"))
+
+
+def check(mods: List[Module]) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in mods:
+        if not _is_wire_module(mod):
+            continue
+        has_allowlist = "WIRE_DTYPES" in mod.decls or any(
+            isinstance(n, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "WIRE_DTYPES"
+                for t in n.targets)
+            for n in mod.tree.body)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                root = node.module if isinstance(node, ast.ImportFrom) \
+                    else None
+                names = [root] if root else []
+                if isinstance(node, ast.Import):
+                    names = [a.name for a in node.names]
+                for name in names:
+                    top = (name or "").split(".")[0]
+                    if top in _BANNED_IMPORTS:
+                        findings.append(Finding(
+                            rule=base.RULE_WIRE, path=mod.path,
+                            line=node.lineno,
+                            message=(f"wire module imports '{top}' — "
+                                     "arbitrary code execution on "
+                                     "deserialize"),
+                            hint="the wire format is JSON + raw arrays; "
+                                 "keep it that way",
+                            symbol=f"import:{top}"))
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in ("eval", "exec"):
+                findings.append(Finding(
+                    rule=base.RULE_WIRE, path=mod.path, line=node.lineno,
+                    message=(f"'{node.func.id}()' call in wire module"),
+                    hint="never evaluate wire-derived strings",
+                    symbol=f"call:{node.func.id}"))
+        # np.frombuffer decodes must consult the WIRE_DTYPES allowlist.
+        for fnode in ast.walk(mod.tree):
+            if not isinstance(fnode, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                continue
+            frombuffer_sites = [
+                n for n in ast.walk(fnode)
+                if isinstance(n, ast.Call) and
+                isinstance(n.func, ast.Attribute) and
+                n.func.attr == "frombuffer"]
+            if not frombuffer_sites:
+                continue
+            consults = any(isinstance(n, ast.Name) and
+                           n.id == "WIRE_DTYPES"
+                           for n in ast.walk(fnode))
+            for site in frombuffer_sites:
+                if not has_allowlist:
+                    findings.append(Finding(
+                        rule=base.RULE_WIRE, path=mod.path,
+                        line=site.lineno,
+                        message=("array decode without a WIRE_DTYPES "
+                                 "dtype allowlist in the module"),
+                        hint="declare WIRE_DTYPES = {\"float32\", ...} and "
+                             "validate the wire dtype before np.frombuffer",
+                        symbol=f"frombuffer:{fnode.name}:no-allowlist"))
+                elif not consults:
+                    findings.append(Finding(
+                        rule=base.RULE_WIRE, path=mod.path,
+                        line=site.lineno,
+                        message=(f"'{fnode.name}' decodes arrays without "
+                                 "consulting WIRE_DTYPES"),
+                        hint="check the dtype against WIRE_DTYPES before "
+                             "np.frombuffer",
+                        symbol=f"frombuffer:{fnode.name}:unchecked"))
+    return findings

@@ -43,6 +43,14 @@ import numpy as np
 from repro.configs.rtnerf import NeRFConfig
 from repro.core import sparse, tensorf
 
+# repro-lint jit-purity roots (docs/static_analysis.md): these methods run
+# inside jitted render/train steps via dynamic dispatch on the field
+# pytree, which static call resolution cannot see.
+LINT_JIT_ENTRYPOINTS = ("FieldBackend.sigma_app", "DenseField.sigma",
+                        "DenseField.app_features",
+                        "CompressedField.sigma_app", "CompressedField.sigma",
+                        "CompressedField.app_features")
+
 
 class FieldBackend:
     """Protocol base. Subclasses hold a `cfg` and implement the field API;

@@ -1,3 +1,5 @@
+from repro.obs import lockdebug  # noqa: F401
+from repro.obs.lockdebug import LockOrderError, make_lock  # noqa: F401
 from repro.obs.registry import (  # noqa: F401
     Counter, Gauge, Histogram, MetricsRegistry, get_registry)
 from repro.obs.tracing import (Span, Tracer, ViewTrace, STAGES,  # noqa: F401

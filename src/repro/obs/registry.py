@@ -44,7 +44,20 @@ from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.lockdebug import make_lock
+
 LabelKey = Tuple[Tuple[str, str], ...]
+
+# repro-lint lock-discipline declarations (docs/static_analysis.md).
+# Metric locks are leaves of the serving lock order: nothing is acquired
+# while one is held.
+GUARDED_BY = {
+    "Counter": {"lock": "_lock", "attrs": ("_value",)},
+    "Gauge": {"lock": "_lock", "attrs": ("_value",)},
+    "Histogram": {"lock": "_lock",
+                  "attrs": ("_window", "_count", "_sum", "_max")},
+    "MetricsRegistry": {"lock": "_lock", "attrs": ("_metrics",)},
+}
 
 
 def _label_key(labels: Dict[str, str]) -> LabelKey:
@@ -59,7 +72,7 @@ class Counter:
     def __init__(self, name: str, labels: LabelKey = ()):
         self.name = name
         self.labels = labels
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.metric")
         self._value = 0.0
 
     def inc(self, n: float = 1.0):
@@ -85,7 +98,7 @@ class Gauge:
     def __init__(self, name: str, labels: LabelKey = ()):
         self.name = name
         self.labels = labels
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.metric")
         self._value = 0.0
 
     def set(self, v: float):
@@ -120,7 +133,7 @@ class Histogram:
         self.name = name
         self.labels = labels
         self.maxlen = int(maxlen)
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.metric")
         self._window: collections.deque = collections.deque(
             maxlen=self.maxlen)
         self._count = 0
@@ -191,7 +204,7 @@ class MetricsRegistry:
     _KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.registry")
         self._metrics: Dict[Tuple[str, LabelKey], object] = {}
 
     def _get(self, cls, name: str, labels: Dict[str, str], **kw):

@@ -65,7 +65,7 @@ from repro.core import rendering, tensorf
 from repro.core.occupancy import CubeSet
 from repro.core.rendering import Camera
 from repro.models.sharding import make_rules
-from repro.obs import MetricsRegistry, Tracer
+from repro.obs import MetricsRegistry, Tracer, lockdebug
 from repro.obs.tracing import ViewTrace
 from repro.serving import temporal
 from repro.serving.batching import group_requests, plan_microbatches
@@ -148,6 +148,35 @@ class _Request:                        # arrays, value-eq is ill-defined
 
 
 FIELD_META = "field_meta.json"
+
+# repro-lint declarations (scripts/repro_lint.py, docs/static_analysis.md):
+# mutable RenderEngine state below is guarded by `_lock` (`_flush_cv` is a
+# Condition over the same lock); `_render_lock` serializes renders and
+# participates in lock ordering only. Methods in `assume_held` have a
+# caller-holds-the-lock contract (reentrant RLock callers).
+GUARDED_BY = {
+    "RenderEngine": {
+        "lock": "_lock",
+        "aliases": ("_flush_cv",),
+        "locks": ("_render_lock",),
+        "attrs": ("_queue", "_next_id", "_flusher", "_flush_error",
+                  "auto_flush_interval", "_pair_budget", "_pair_window",
+                  "_low_occ_streak", "_pair_occupancy_last",
+                  "_budget_resizes", "_render"),
+        "assume_held": ("_note_flush_pairs", "_build_render"),
+    },
+}
+# Attribute -> class map for static lock-order edges (calls made while a
+# lock is held resolve into these classes' own lock acquisitions).
+LOCK_ATTR_CLASSES = {
+    "RenderEngine.store": "SceneStore",
+    "RenderEngine.metrics": "MetricsRegistry",
+    "RenderEngine._g_queue": "Gauge",
+    "RenderEngine._g_budget": "Gauge",
+    "RenderEngine._m_render_s": "Counter",
+    "RenderEngine._m_flushes": "Counter",
+    "RenderEngine._m_latency": "Histogram",
+}
 
 
 def prepare_field(cfg: NeRFConfig, scene: str, *, ckpt_dir: Optional[str],
@@ -337,8 +366,8 @@ class RenderEngine:
         # _lock guards queue / stats / budget; renders run OUTSIDE it
         # (serialized by _render_lock) against per-scene store snapshots,
         # so producers, swap_field, and eviction never wait behind a render
-        self._lock = threading.RLock()
-        self._render_lock = threading.Lock()
+        self._lock = lockdebug.make_lock("engine", kind="rlock")
+        self._render_lock = lockdebug.make_lock("engine.render")
         self._flush_cv = threading.Condition(self._lock)
 
         self._queue: List[_Request] = []
@@ -419,11 +448,13 @@ class RenderEngine:
     # -- background flush thread -------------------------------------------
 
     def _auto_flush_on(self) -> bool:
-        t = self._flusher
+        with self._lock:
+            t = self._flusher
         return t is not None and t.is_alive()
 
     def _raise_flush_error(self):
-        err, self._flush_error = self._flush_error, None
+        with self._lock:
+            err, self._flush_error = self._flush_error, None
         if err is not None:
             raise err
 
@@ -457,11 +488,13 @@ class RenderEngine:
             try:
                 self.flush()
             except BaseException as e:   # surfaced via result()/close()
-                self._flush_error = e
+                with self._lock:
+                    self._flush_error = e
         try:
             self.flush()                 # drain so close() strands nothing
         except BaseException as e:
-            self._flush_error = e
+            with self._lock:
+                self._flush_error = e
 
     def close(self):
         """Stop the background flush thread (joining it — no daemon-thread

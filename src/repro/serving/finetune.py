@@ -44,7 +44,17 @@ from typing import Dict, List, Optional
 
 from repro.core import occupancy as occ_lib
 from repro.core import train as train_lib
+from repro.obs import lockdebug
 from repro.serving.store import SceneStore
+
+# repro-lint lock-discipline declarations (docs/static_analysis.md).
+# `history`, `swaps`, and `_error` are written on the trainer thread and
+# read from the caller's thread (join(), progress polling); `_lock` is a
+# leaf: nothing else is ever acquired while it is held.
+GUARDED_BY = {
+    "FineTuneLoop": {"lock": "_lock",
+                     "attrs": ("history", "swaps", "_error")},
+}
 
 
 class FineTuneLoop:
@@ -112,6 +122,7 @@ class FineTuneLoop:
                        else int(occ_every)),
             prune_tol=prune_tol, revive_frac=revive_frac, seed=seed,
             verbose=verbose)
+        self._lock = lockdebug.make_lock("finetune")
         self.history: List[Dict[str, float]] = []
         self.swaps: List[Dict[str, float]] = []
         self._thread: Optional[threading.Thread] = None
@@ -148,8 +159,9 @@ class FineTuneLoop:
             self._thread.join(timeout)
             if self._thread.is_alive():
                 raise TimeoutError("fine-tune loop still running")
-        if self._error is not None:
+        with self._lock:
             err, self._error = self._error, None
+        if err is not None:
             raise err
 
     def running(self) -> bool:
@@ -175,11 +187,13 @@ class FineTuneLoop:
                 rec["t_wall"] = time.perf_counter() - self._t0
                 self._m_steps.inc()
                 self._g_train_psnr.set(rec["psnr"])
-                self.history.append(rec)
+                with self._lock:
+                    self.history.append(rec)
                 if (i + 1) % self.publish_every == 0 or i == self.steps - 1:
                     self._publish(rec)
         except BaseException as e:                # re-raised by join()
-            self._error = e
+            with self._lock:
+                self._error = e
 
     def _publish(self, rec: Dict[str, float]):
         """Snapshot -> occupancy rebuild (this thread) -> store.publish.
@@ -198,9 +212,11 @@ class FineTuneLoop:
         # full cost of one publication (snapshot + occupancy rebuild +
         # swap) — the store's scene_swap_latency_s records the swap alone
         self._m_publish_s.record(time.perf_counter() - t_pub)
-        self.swaps.append({"step": rec["step"], "train_psnr": rec["psnr"],
-                           "swap_s": swap_s,
-                           "t_wall": time.perf_counter() - self._t0})
+        with self._lock:
+            self.swaps.append(
+                {"step": rec["step"], "train_psnr": rec["psnr"],
+                 "swap_s": swap_s,
+                 "t_wall": time.perf_counter() - self._t0})
         if self.verbose:
             print(f"  [finetune:{self.scene}] step {rec['step']:5d} "
                   f"published field (train-psnr {rec['psnr']:.2f}, "

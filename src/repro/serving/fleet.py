@@ -59,6 +59,19 @@ import numpy as np
 
 WIRE_VERSION = 1
 
+# wire-safety allowlist (docs/static_analysis.md): the only dtypes a frame
+# header may name. `unpack_msg` rejects anything else before frombuffer, so
+# a malformed or hostile header can never make numpy reinterpret raw bytes
+# as object/void/structured records.
+WIRE_DTYPES = ("bool", "uint8", "uint16", "uint32", "uint64",
+               "int8", "int16", "int32", "int64",
+               "float16", "float32", "float64")
+
+# repro-lint lock-discipline declarations (docs/static_analysis.md)
+GUARDED_BY = {
+    "_Worker": {"lock": "_prefetch_lock", "attrs": ("_prefetches",)},
+}
+
 # header-length prefix (u32) / per-array length prefix (u64)
 _HDR_LEN = struct.Struct(">I")
 _ARR_LEN = struct.Struct(">Q")
@@ -105,6 +118,10 @@ def unpack_msg(buf: bytes) -> Dict:
                         f"expected {WIRE_VERSION}")
     msg = {k: v for k, v in head.items() if k not in ("_v", "_arrays")}
     for spec in head["_arrays"]:
+        if spec.get("dtype") not in WIRE_DTYPES:
+            raise WireError(
+                f"array '{spec.get('key')}' has dtype "
+                f"{spec.get('dtype')!r}, not in the WIRE_DTYPES allowlist")
         (alen,) = _ARR_LEN.unpack_from(buf, off)
         off += _ARR_LEN.size
         raw = buf[off:off + alen]

@@ -46,9 +46,27 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import lockdebug
 from repro.obs.registry import MetricsRegistry
 
 from . import fleet
+
+# repro-lint lock-discipline declarations (docs/static_analysis.md).
+# `_lock` is an RLock over the routing state: ring membership, the
+# replica/pin tables, and the worker table mutate only under it. Metric
+# writes may nest inside it (router -> obs.registry is a declared
+# lock-order edge; never the reverse).
+GUARDED_BY = {
+    "FleetRouter": {
+        "lock": "_lock",
+        "attrs": ("_closed", "_replicas", "_pins", "ring", "_workers"),
+        "assume_held": ("_pick_worker", "_ensure_registered",
+                        "_set_routing_gauges", "_alive"),
+    },
+}
+LOCK_ATTR_CLASSES = {
+    "FleetRouter.registry": "MetricsRegistry",
+}
 
 
 class FleetError(RuntimeError):
@@ -234,7 +252,7 @@ class FleetRouter:
         self._pins: Dict[str, Dict] = {}   # scene -> {pinned, priority}
         self._req_ids = itertools.count(1)
         self._view_ids = itertools.count(0)
-        self._lock = threading.RLock()     # ring + worker-table mutations
+        self._lock = lockdebug.make_lock("router", kind="rlock")
         self._closed = False
 
         # unlabelled fleet families created eagerly so every metrics
@@ -260,7 +278,10 @@ class FleetRouter:
             self._workers[name] = st
             self.ring.add(name)
             st.reader.start()
-        self._set_routing_gauges()
+        # reader threads are live from here on: a worker dying mid-spawn
+        # already mutates the ring under the lock, so read it there too
+        with self._lock:
+            self._set_routing_gauges()
 
     # -- metrics helpers ---------------------------------------------------
 
@@ -456,7 +477,9 @@ class FleetRouter:
                prefer_worker: Optional[str] = None) -> FleetFuture:
         """Route one render. Returns a `FleetFuture` that always
         resolves — result, timed-out result, or `FleetError`."""
-        if self._closed:
+        with self._lock:
+            closed = self._closed
+        if closed:
             raise FleetError("router is closed")
         if deadline_s is None:
             deadline_s = self.default_deadline_s
@@ -508,9 +531,9 @@ class FleetRouter:
                     self._control(st, msg)
 
     def set_priority(self, scene: str, priority: int):
-        self.pin(scene,
-                 self._pins.get(scene, {}).get("pinned", False),
-                 priority=priority)
+        with self._lock:
+            pinned = self._pins.get(scene, {}).get("pinned", False)
+            self.pin(scene, pinned, priority=priority)
 
     def prefetch(self, scene: str):
         """Async revival of a predicted-next scene on its owner."""
@@ -531,13 +554,15 @@ class FleetRouter:
     def inject(self, worker: str, *, stall_s: float):
         """Fault injection: plant a pre-flush stall in a worker (used by
         the slow-worker fixtures in tests/conftest.py)."""
-        st = self._alive(worker)
+        with self._lock:
+            st = self._alive(worker)
         if st is None:
             raise FleetError(f"worker {worker!r} is not alive")
         self._control(st, {"op": "inject", "stall_s": float(stall_s)})
 
     def worker_pid(self, worker: str) -> int:
-        return self._workers[worker].proc.pid
+        with self._lock:
+            return self._workers[worker].proc.pid
 
     def alive_workers(self) -> List[str]:
         with self._lock:
@@ -551,7 +576,9 @@ class FleetRouter:
         """Fetch per-worker engine stats and refresh the per-worker
         gauges (`fleet_worker_fps` / `_queue_depth` / `_evictions`)."""
         out: Dict[str, Dict] = {}
-        for name, st in list(self._workers.items()):
+        with self._lock:
+            workers = list(self._workers.items())
+        for name, st in workers:
             if not st.alive:
                 continue
             try:
@@ -574,13 +601,15 @@ class FleetRouter:
         """Fleet roll-up: routing state + per-worker engine stats."""
         workers = self.poll_stats()
         snap = self.registry.snapshot()["counters"]
+        with self._lock:
+            routing_version = self.ring.version
 
         def total(prefix):
             return sum(v["value"] for k, v in snap.items()
                        if k == prefix or k.startswith(prefix + "{"))
 
         return {
-            "routing_version": self.ring.version,
+            "routing_version": routing_version,
             "workers_alive": len(self.alive_workers()),
             "requests_total": total("fleet_requests_total"),
             "results_total": total("fleet_results_total"),
@@ -619,7 +648,8 @@ class FleetRouter:
                 st.conn.close()
             except OSError:
                 pass
-        self._set_routing_gauges()
+        with self._lock:
+            self._set_routing_gauges()
 
     def __enter__(self):
         return self

@@ -56,9 +56,26 @@ from repro.core import distributed, occupancy as occ_lib
 from repro.core import field as field_lib
 from repro.core import pipeline as rt_pipe
 from repro.core.occupancy import CubeSet
-from repro.obs import Counter, Histogram, MetricsRegistry
+from repro.obs import Counter, Histogram, MetricsRegistry, lockdebug
 
 CUBES_FILE = "cubes.npz"
+
+# repro-lint declarations (scripts/repro_lint.py, docs/static_analysis.md).
+# `assume_held` methods are called with the store lock held (reentrant
+# RLock callers) — the lock is a precondition, not acquired inside.
+GUARDED_BY = {
+    "SceneStore": {
+        "lock": "_lock",
+        "attrs": ("_records", "_clock", "_spill_dir", "_rules"),
+        "assume_held": ("_get", "_touch", "_enforce_budget"),
+    },
+}
+LOCK_ATTR_CLASSES = {
+    "SceneStore.metrics": "MetricsRegistry",
+    "SceneStore._evictions_total": "Counter",
+    "SceneStore._revivals_total": "Counter",
+    "SceneStore._swap_latency_last": "Gauge",
+}
 
 
 def save_cubes(directory: str, cubes: CubeSet):
@@ -160,7 +177,7 @@ class SceneStore:
                                    if max_resident_bytes else None)
         self._spill_dir = spill_dir
         self._rules = rules
-        self._lock = threading.RLock()
+        self._lock = lockdebug.make_lock("store", kind="rlock")
         self._records: Dict[str, SceneRecord] = {}
         self._clock = 0
         # one registry per store, shared by the engine serving it and by
@@ -188,17 +205,21 @@ class SceneStore:
 
     @property
     def rules(self):
-        if self._rules is None:
-            from repro.launch.mesh import make_host_mesh
-            from repro.models.sharding import make_rules
-            self._rules = make_rules(make_host_mesh())
-        return self._rules
+        # lazy init is a write: guarded, so two first-callers (e.g. a
+        # register racing a publish) can't both build a mesh
+        with self._lock:
+            if self._rules is None:
+                from repro.launch.mesh import make_host_mesh
+                from repro.models.sharding import make_rules
+                self._rules = make_rules(make_host_mesh())
+            return self._rules
 
     @property
     def spill_dir(self) -> str:
-        if self._spill_dir is None:
-            self._spill_dir = tempfile.mkdtemp(prefix="scene_store_")
-        return self._spill_dir
+        with self._lock:
+            if self._spill_dir is None:
+                self._spill_dir = tempfile.mkdtemp(prefix="scene_store_")
+            return self._spill_dir
 
     def _touch(self, rec: SceneRecord):
         self._clock += 1
@@ -298,7 +319,8 @@ class SceneStore:
         return rec
 
     def __contains__(self, name: str) -> bool:
-        return name in self._records
+        with self._lock:
+            return name in self._records
 
     def scenes(self) -> List[str]:
         with self._lock:

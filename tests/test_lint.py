@@ -1,0 +1,456 @@
+"""repro-lint suite tests: one bad + one good fixture per rule (rule id
+and line asserted on the bad one), the waiver and baseline round-trips,
+and the repo-level gate (`scripts/repro_lint.py src/` exits 0).
+
+Tier-1: stdlib + the `repro.analysis` package only — no jax import, no
+device work.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import base, runner
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint(tmp_path, source, *, rules=None, baseline=None, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return runner.run([str(p)], root=str(tmp_path), rules=rules,
+                      baseline=baseline)
+
+
+def line_of(source, needle):
+    """1-based line of the first line containing `needle`."""
+    for i, ln in enumerate(textwrap.dedent(source).splitlines(), 1):
+        if needle in ln:
+            return i
+    raise AssertionError(f"fixture is missing {needle!r}")
+
+
+# -- lock-discipline -------------------------------------------------------
+
+_LOCK_BAD = """
+    import threading
+
+    GUARDED_BY = {"S": {"lock": "_lock", "attrs": ("_q",)}}
+
+
+    class S:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._q = []
+
+        def bad(self):
+            return len(self._q)  # unguarded
+"""
+
+_LOCK_GOOD = """
+    import threading
+
+    GUARDED_BY = {"S": {"lock": "_lock", "attrs": ("_q",)}}
+
+
+    class S:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._q = []
+
+        def good(self):
+            with self._lock:
+                return len(self._q)
+"""
+
+
+def test_lock_discipline_bad(tmp_path):
+    rep = lint(tmp_path, _LOCK_BAD, rules=["lock-discipline"])
+    assert len(rep.gating) == 1
+    f = rep.gating[0]
+    assert f.rule == "lock-discipline"
+    assert f.line == line_of(_LOCK_BAD, "# unguarded")
+    assert "_q" in f.message and "bad" in f.message
+
+
+def test_lock_discipline_good(tmp_path):
+    rep = lint(tmp_path, _LOCK_GOOD, rules=["lock-discipline"])
+    assert rep.gating == []
+
+
+def test_lock_discipline_guarded_by_comment(tmp_path):
+    # the inline `# guarded-by: _lock` declaration form, no GUARDED_BY map
+    src = """
+        import threading
+
+
+        class T:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0  # guarded-by: _lock
+
+            def bad(self):
+                self._n += 1  # unguarded
+    """
+    rep = lint(tmp_path, src, rules=["lock-discipline"])
+    assert [f.line for f in rep.gating] == [line_of(src, "# unguarded")]
+
+
+# -- lock-order ------------------------------------------------------------
+
+_ORDER_BAD = """
+    import threading
+
+    GUARDED_BY = {
+        "Eng": {"lock": "_lock", "attrs": ("_q",)},
+        "Sto": {"lock": "_lock", "attrs": ("_r",)},
+    }
+    LOCK_ATTR_CLASSES = {"Eng.store": "Sto", "Sto.eng": "Eng"}
+
+
+    class Eng:
+        def order_a(self):
+            with self._lock:
+                self.store.locked_r()
+
+        def locked_q(self):
+            with self._lock:
+                self._q = 1
+
+
+    class Sto:
+        def locked_r(self):
+            with self._lock:
+                self._r = 1
+
+        def inverted(self):
+            with self._lock:
+                self.eng.locked_q()
+"""
+
+
+def test_lock_order_cycle(tmp_path):
+    rep = lint(tmp_path, _ORDER_BAD, rules=["lock-order"])
+    assert len(rep.gating) == 1
+    f = rep.gating[0]
+    assert f.rule == "lock-order"
+    assert "Eng._lock" in f.message and "Sto._lock" in f.message
+
+
+def test_lock_order_acyclic(tmp_path):
+    # drop the inverting method -> the remaining order is a DAG
+    good = _ORDER_BAD[:_ORDER_BAD.index("def inverted")].rstrip() + "\n"
+    rep = lint(tmp_path, good, rules=["lock-order"])
+    assert rep.gating == []
+
+
+# -- jit-purity ------------------------------------------------------------
+
+_JIT_BAD = """
+    import jax
+
+
+    @jax.jit
+    def f(x):
+        print("tracing", x)  # impure
+        return x + 1
+"""
+
+
+def test_jit_purity_bad(tmp_path):
+    rep = lint(tmp_path, _JIT_BAD, rules=["jit-purity"])
+    assert len(rep.gating) == 1
+    f = rep.gating[0]
+    assert f.rule == "jit-purity"
+    assert f.line == line_of(_JIT_BAD, "# impure")
+    assert "print" in f.message
+
+
+def test_jit_purity_reaches_helpers(tmp_path):
+    src = """
+        import time
+
+        import jax
+
+
+        def helper(x):
+            t = time.perf_counter()  # impure, reachable from jit
+            return x * t
+
+
+        @jax.jit
+        def f(x):
+            return helper(x)
+    """
+    rep = lint(tmp_path, src, rules=["jit-purity"])
+    assert [f.line for f in rep.gating] == [line_of(src, "# impure")]
+
+
+def test_jit_purity_good(tmp_path):
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+
+        @jax.jit
+        def f(x):
+            return jnp.sum(x * 2)
+
+
+        def not_jitted(x):
+            print("host-side logging is fine here", x)
+            return x
+    """
+    rep = lint(tmp_path, src, rules=["jit-purity"])
+    assert rep.gating == []
+
+
+# -- recompile-hazard ------------------------------------------------------
+
+_RECOMPILE_BAD = """
+    import functools
+
+    import jax
+
+
+    @functools.partial(jax.jit, static_argnames=("shape",))
+    def g(x, shape):
+        return x.reshape(shape)
+
+
+    def caller(x):
+        return g(x, shape=[4, 4])  # unhashable static
+"""
+
+
+def test_recompile_unhashable_static(tmp_path):
+    rep = lint(tmp_path, _RECOMPILE_BAD, rules=["recompile-hazard"])
+    assert len(rep.gating) == 1
+    f = rep.gating[0]
+    assert f.rule == "recompile-hazard"
+    assert f.line == line_of(_RECOMPILE_BAD, "# unhashable static")
+
+
+def test_recompile_tracer_branch(tmp_path):
+    src = """
+        import jax
+
+
+        @jax.jit
+        def h(x):
+            if x > 0:  # tracer branch
+                return x
+            return -x
+    """
+    rep = lint(tmp_path, src, rules=["recompile-hazard"])
+    assert [f.line for f in rep.gating] == [line_of(src, "# tracer branch")]
+
+
+def test_recompile_good(tmp_path):
+    src = """
+        import functools
+
+        import jax
+
+
+        @functools.partial(jax.jit, static_argnames=("shape",))
+        def g(x, shape):
+            return x.reshape(shape)
+
+
+        @jax.jit
+        def h(x):
+            if x.shape[0] > 2:  # shape branch is static under jit
+                return x
+            return -x
+
+
+        @jax.jit
+        def k(x, aux=None):
+            if aux is None:  # pytree-structural: static under jit
+                return x
+            return x + aux
+
+
+        def caller(x):
+            return g(x, shape=(4, 4))
+    """
+    rep = lint(tmp_path, src, rules=["recompile-hazard"])
+    assert rep.gating == []
+
+
+# -- pytree-completeness ---------------------------------------------------
+
+_PYTREE_BAD = """
+    import dataclasses
+
+    import jax
+
+
+    @dataclasses.dataclass
+    class P:  # unregistered
+        x: jax.Array
+        scale: float
+"""
+
+
+def test_pytree_unregistered_dataclass(tmp_path):
+    rep = lint(tmp_path, _PYTREE_BAD, rules=["pytree-completeness"])
+    assert len(rep.gating) == 1
+    f = rep.gating[0]
+    assert f.rule == "pytree-completeness"
+    assert f.line == line_of(_PYTREE_BAD, "# unregistered")
+    assert "P" in f.message
+
+
+def test_pytree_registered_good(tmp_path):
+    src = """
+        import dataclasses
+
+        import jax
+
+
+        @jax.tree_util.register_pytree_node_class
+        @dataclasses.dataclass
+        class Q:
+            x: jax.Array
+            scale: float
+
+            def tree_flatten(self):
+                return (self.x,), (self.scale,)
+
+            @classmethod
+            def tree_unflatten(cls, aux, children):
+                return cls(children[0], aux[0])
+    """
+    rep = lint(tmp_path, src, rules=["pytree-completeness"])
+    assert rep.gating == []
+
+
+# -- wire-safety -----------------------------------------------------------
+
+_WIRE_BAD = """
+    LINT_WIRE_MODULE = True
+
+    import pickle  # banned
+
+    import numpy as np
+
+
+    def unpack(buf, dt):
+        return np.frombuffer(buf, dtype=dt)  # no allowlist
+"""
+
+
+def test_wire_safety_bad(tmp_path):
+    rep = lint(tmp_path, _WIRE_BAD, rules=["wire-safety"])
+    lines = {f.line for f in rep.gating}
+    assert all(f.rule == "wire-safety" for f in rep.gating)
+    assert line_of(_WIRE_BAD, "# banned") in lines
+    assert line_of(_WIRE_BAD, "# no allowlist") in lines
+
+
+def test_wire_safety_good(tmp_path):
+    src = """
+        LINT_WIRE_MODULE = True
+
+        import numpy as np
+
+        WIRE_DTYPES = ("float32", "int32")
+
+
+        def unpack(buf, dt):
+            if dt not in WIRE_DTYPES:
+                raise ValueError(dt)
+            return np.frombuffer(buf, dtype=np.dtype(dt))
+    """
+    rep = lint(tmp_path, src, rules=["wire-safety"])
+    assert rep.gating == []
+
+
+def test_wire_safety_ignores_non_wire_modules(tmp_path):
+    # pickle use outside fleet/router (e.g. checkpointing) is not wire
+    rep = lint(tmp_path, "import pickle\n", rules=["wire-safety"],
+               name="ckpt.py")
+    assert rep.gating == []
+
+
+# -- waivers ---------------------------------------------------------------
+
+def test_waiver_suppresses_with_reason(tmp_path):
+    src = _LOCK_BAD.replace(
+        "# unguarded",
+        "# lint: waive(lock-discipline) — read is racy-by-design telemetry")
+    rep = lint(tmp_path, src, rules=["lock-discipline"])
+    assert rep.gating == []
+    assert len(rep.waived) == 1
+    assert "racy-by-design" in rep.waived[0].waive_reason
+    assert "waived" in rep.format(show_waived=True)
+
+
+def test_waiver_without_reason_is_ignored(tmp_path):
+    src = _LOCK_BAD.replace("# unguarded", "# lint: waive(lock-discipline)")
+    rep = lint(tmp_path, src, rules=["lock-discipline"])
+    assert len(rep.gating) == 1
+
+
+def test_waiver_wrong_rule_does_not_suppress(tmp_path):
+    src = _LOCK_BAD.replace(
+        "# unguarded", "# lint: waive(jit-purity) — wrong rule id")
+    rep = lint(tmp_path, src, rules=["lock-discipline"])
+    assert len(rep.gating) == 1
+
+
+# -- baseline --------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    rep = lint(tmp_path, _LOCK_BAD, rules=["lock-discipline"])
+    assert len(rep.gating) == 1
+    bl = tmp_path / "baseline.json"
+    n = base.write_baseline(str(bl), rep.findings)
+    assert n == 1
+    rep2 = lint(tmp_path, _LOCK_BAD, rules=["lock-discipline"],
+                baseline=str(bl))
+    assert rep2.gating == []
+    assert any(f.baselined for f in rep2.findings)
+    # fingerprints are line-free: edits above the finding don't churn it
+    rep3 = lint(tmp_path, "X = 1\n" + textwrap.dedent(_LOCK_BAD),
+                rules=["lock-discipline"], baseline=str(bl), name="mod2.py")
+    # different file -> different fingerprint -> still gating
+    assert len(rep3.gating) == 1
+    shifted = "# a new comment line\n" + textwrap.dedent(_LOCK_BAD)
+    (tmp_path / "mod.py").write_text(shifted)
+    rep4 = runner.run([str(tmp_path / "mod.py")], root=str(tmp_path),
+                      rules=["lock-discipline"], baseline=str(bl))
+    assert rep4.gating == []          # same file/symbol, new line: baselined
+
+
+# -- repo gate -------------------------------------------------------------
+
+def test_repo_src_is_lint_clean():
+    """The CI contract: `python scripts/repro_lint.py src/` exits 0."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join("scripts", "repro_lint.py"), "src"],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "repro-lint: 0 finding(s)" in proc.stdout
+
+
+def test_cli_flags_fixture_and_exits_nonzero(tmp_path):
+    (tmp_path / "bad.py").write_text(textwrap.dedent(_JIT_BAD))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "repro_lint.py"),
+         "bad.py", "--no-baseline"],
+        cwd=tmp_path, capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "jit-purity" in proc.stdout
+
+
+def test_list_rules():
+    proc = subprocess.run(
+        [sys.executable, os.path.join("scripts", "repro_lint.py"),
+         "--list-rules"],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0
+    for rule in base.ALL_RULES:
+        assert rule in proc.stdout.split()

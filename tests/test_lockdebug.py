@@ -1,0 +1,134 @@
+"""Runtime lock-order assertion (`repro.obs.lockdebug`) — the dynamic
+complement to repro-lint's static `lock-order` rule.
+
+Off by default: `make_lock` must hand back plain stdlib locks unless
+REPRO_LOCK_DEBUG=1, so the serving hot path pays nothing in production.
+"""
+import threading
+
+import pytest
+
+from repro.obs import lockdebug
+from repro.obs.lockdebug import LockOrderError, make_lock
+
+
+@pytest.fixture
+def lock_debug(monkeypatch):
+    monkeypatch.setenv("REPRO_LOCK_DEBUG", "1")
+    lockdebug.reset()
+    yield
+    lockdebug.reset()
+
+
+def test_disabled_returns_plain_stdlib_locks(monkeypatch):
+    monkeypatch.delenv("REPRO_LOCK_DEBUG", raising=False)
+    lk = make_lock("a")
+    rlk = make_lock("b", kind="rlock")
+    assert isinstance(lk, type(threading.Lock()))
+    assert isinstance(rlk, type(threading.RLock()))
+    assert not lockdebug.enabled()
+
+
+def test_enabled_returns_tracked_locks(lock_debug):
+    lk = make_lock("a")
+    assert not isinstance(lk, type(threading.Lock()))
+    with lk:
+        pass
+
+
+def test_inversion_raises_before_blocking(lock_debug):
+    a, b = make_lock("A"), make_lock("B")
+    with a:
+        with b:
+            pass                       # records the order A -> B
+    assert ("A", "B") in lockdebug.edges()
+    with b:
+        with pytest.raises(LockOrderError, match="inversion"):
+            with a:                    # B held, acquiring A: inverted
+                pass
+    # the raise happened before acquire: A is free, nothing deadlocks
+    with a:
+        pass
+
+
+def test_inversion_detected_across_threads(lock_debug):
+    a, b = make_lock("A"), make_lock("B")
+
+    def establish():
+        with a:
+            with b:
+                pass
+
+    t = threading.Thread(target=establish)
+    t.start()
+    t.join()
+    with b:
+        with pytest.raises(LockOrderError):
+            a.acquire()
+
+
+def test_consistent_order_is_fine(lock_debug):
+    a, b = make_lock("A"), make_lock("B")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+
+
+def test_reentrant_rlock_allowed(lock_debug):
+    r = make_lock("R", kind="rlock")
+    with r:
+        with r:
+            pass
+
+
+def test_reentrant_plain_lock_rejected(lock_debug):
+    lk = make_lock("L")
+    with lk:
+        with pytest.raises(LockOrderError, match="reentrant"):
+            lk.acquire()
+
+
+def test_same_label_shares_ordering(lock_debug):
+    # per-metric lock *families* share a label — and its constraints
+    a1, a2, b = make_lock("A"), make_lock("A"), make_lock("B")
+    with a1:
+        with b:
+            pass
+    with b:
+        with pytest.raises(LockOrderError):
+            a2.acquire()
+
+
+def test_condition_wait_keeps_held_stack_honest(lock_debug):
+    lk = make_lock("cv", kind="rlock")
+    cv = threading.Condition(lk)
+    other = make_lock("other")
+    with cv:
+        cv.wait(timeout=0.01)          # release/reacquire cycle
+        with other:                    # records cv -> other, no false edges
+            pass
+    with other:                        # 'cv' must not still appear held
+        pass
+    assert ("cv", "other") in lockdebug.edges()
+    assert ("other", "cv") not in lockdebug.edges()
+
+
+def test_engine_lock_order_clean_under_debug(lock_debug):
+    """The declared serving order (render -> engine/store -> metrics) as
+    exercised by the real labels: no inversion recorded."""
+    render = make_lock("engine.render")
+    engine = make_lock("engine", kind="rlock")
+    store = make_lock("store", kind="rlock")
+    metric = make_lock("obs.metric")
+    with render:
+        with engine:
+            with metric:
+                pass
+        with store:
+            with metric:
+                pass
+    with engine:
+        with metric:
+            pass
+    assert ("engine", "obs.metric") in lockdebug.edges()
